@@ -1,0 +1,94 @@
+"""Shared scenario plumbing for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.sim import (BatchingConfig, ClusterSpec, DSDSimulation,
+                       FIFOBatching, JSQRouting, LengthAwareBatching,
+                       LinkSpec, PolicyStack, RandomRouting,
+                       RoundRobinRouting, WorkloadGenerator)
+from repro.core.window import (AWCWindowPolicy, DynamicWindowPolicy,
+                               OracleStaticPolicy, StaticWindowPolicy)
+from repro.core.awc.model import default_predictor
+
+DATASETS = ("gsm8k", "humaneval", "cnndm")
+
+
+def window_policy(kind: str, gamma: int = 4):
+    if kind == "static":
+        return StaticWindowPolicy(gamma)
+    if kind == "dynamic":
+        return DynamicWindowPolicy(gamma0=gamma)
+    if kind == "awc":
+        return AWCWindowPolicy(default_predictor())
+    if kind == "fused":
+        return OracleStaticPolicy(1, fused=True)
+    raise ValueError(kind)
+
+
+def routing_policy(kind: str, seed: int = 0):
+    return {"random": lambda: RandomRouting(seed=seed),
+            "rr": RoundRobinRouting,
+            "jsq": JSQRouting}[kind]()
+
+
+def batching_policy(kind: str):
+    return {"fifo": FIFOBatching, "lab": LengthAwareBatching}[kind]()
+
+
+def run_scenario(dataset: str = "gsm8k", *, targets: int = 2,
+                 drafters: int = 64, rtt_ms: float = 10.0,
+                 rate: float = 40.0, n_requests: int = 80,
+                 routing: str = "jsq", batching: str = "lab",
+                 window: str = "static", gamma: int = 4,
+                 max_batch: int = 16, seed: int = 0,
+                 target_hw: str = "A100", target_model: str = "llama2-70b",
+                 target_tp: int = 4, draft_hw: str = "A40",
+                 draft_model: str = "llama2-7b",
+                 heterogeneous: bool = False) -> dict:
+    from repro.sim.scheduler import PAPER_DRAFT_POOL, PAPER_TARGET_POOL
+    cluster = ClusterSpec(
+        num_targets=targets, target_hw=target_hw, target_model=target_model,
+        target_tp=target_tp, num_drafters=drafters, draft_hw=draft_hw,
+        draft_model=draft_model,
+        target_pool=PAPER_TARGET_POOL if heterogeneous else None,
+        draft_pool=PAPER_DRAFT_POOL if heterogeneous else None,
+        link=LinkSpec(rtt_ms=rtt_ms, jitter_ms=max(0.5, rtt_ms * 0.08)))
+    pol = PolicyStack(routing=routing_policy(routing, seed),
+                      batching=batching_policy(batching),
+                      batching_cfg=BatchingConfig(max_batch=max_batch),
+                      window=window_policy(window, gamma))
+    gen = WorkloadGenerator(dataset, rate, drafters, seed=seed)
+    sim = DSDSimulation(cluster, pol, gen.generate(n_requests), seed=seed)
+    t0 = time.time()
+    summary = sim.run().summary()
+    summary["_sim_wall_s"] = time.time() - t0
+    return summary
+
+
+def mean_over_seeds(fn, seeds=(0, 1, 2)) -> dict:
+    """Paper: 'each measurement is repeated across multiple random seeds and
+    the reported results represent the mean values'."""
+    outs = [fn(seed) for seed in seeds]
+
+    def avg(path):
+        vals = []
+        for o in outs:
+            v = o
+            for k in path:
+                v = v[k]
+            vals.append(v)
+        return sum(vals) / len(vals)
+
+    return {
+        "throughput_rps": avg(["throughput_rps"]),
+        "token_throughput_tps": avg(["token_throughput_tps"]),
+        "ttft_ms": avg(["ttft_ms", "mean"]),
+        "tpot_ms": avg(["tpot_ms", "mean"]),
+        "acceptance_rate": avg(["acceptance_rate"]),
+        "target_utilization": avg(["target_utilization"]),
+        "mean_gamma": avg(["mean_gamma"]),
+    }

@@ -1,0 +1,100 @@
+"""Fig. 4 analogue — hardware-modeling-engine calibration.
+
+The paper validates VIDUR's prefill/decode latency predictions against real
+GPU measurements (MAE 7.4% prefill / 5.2% decode). We cannot measure
+A40/A100/H100 here, so we reproduce the *methodology* on the hardware we do
+have: run real reduced JAX models on this host across a grid of
+(batch, prompt/context) shapes, fit the analytic predictor's per-(hw, op)
+calibration factors on half the grid, and report held-out MAE — the same
+predictor+calibration machinery the simulator uses for its GPU catalog.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.sim.hwmodel import HardwareModel, ModelDesc, OpShape, register_model
+
+
+def _measure(model, params, op, batch, length, ctx, reps=7) -> float:
+    """min-of-reps wall time — robust to scheduler noise on a shared host."""
+    key = jax.random.PRNGKey(0)
+    if op == "prefill":
+        toks = jax.random.randint(key, (batch, length), 0, model.cfg.vocab)
+        fn = jax.jit(lambda p, t: model.prefill(p, t, length + 8)[0])
+        fn(params, toks)[0].block_until_ready()          # compile + warm
+        fn(params, toks)[0].block_until_ready()
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn(params, toks)[0].block_until_ready()
+            times.append(time.perf_counter() - t0)
+        return min(times)
+    # decode
+    toks = jax.random.randint(key, (batch, ctx), 0, model.cfg.vocab)
+    _, cache = jax.jit(lambda p, t: model.prefill(p, t, ctx + 16))(params, toks)
+    tok = jnp.zeros((batch,), jnp.int32)
+    pos = jnp.full((batch,), ctx, jnp.int32)
+    fn = jax.jit(lambda p, t, c, ps: model.decode_step(p, t, c, ps)[0])
+    fn(params, tok, cache, pos).block_until_ready()
+    fn(params, tok, cache, pos).block_until_ready()
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(params, tok, cache, pos).block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+def run(quick: bool = True):
+    cfg = dataclasses.replace(
+        get_config("qwen2.5-3b").reduced(), n_layers=4, d_model=256,
+        n_heads=4, n_kv_heads=2, head_dim=64, d_ff=1024, vocab=2048)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    register_model(ModelDesc(
+        name="cal-model", n_layers=cfg.n_layers, d_model=cfg.d_model,
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, d_ff=cfg.d_ff,
+        vocab=cfg.vocab, dtype_bytes=4))
+
+    grid = [("prefill", 1, 64, 0), ("prefill", 2, 128, 0),
+            ("prefill", 4, 64, 0), ("prefill", 1, 256, 0),
+            ("decode", 1, 1, 64), ("decode", 2, 1, 128),
+            ("decode", 4, 1, 64), ("decode", 8, 1, 128)]
+    if not quick:
+        grid += [("prefill", 8, 128, 0), ("decode", 16, 1, 256),
+                 ("prefill", 2, 512, 0), ("decode", 2, 1, 512)]
+
+    samples = []
+    for op, b, ln, ctx in grid:
+        wall = _measure(model, params, op, b, ln, ctx)
+        shp = (OpShape([0] * b, [ln] * b) if op == "prefill"
+               else OpShape([ctx] * b, [1] * b))
+        samples.append((op, "CPU", shp, "cal-model", wall))
+
+    hm = HardwareModel()
+    train, test = samples[::2], samples[1::2]
+    hm.fit_calibration(train)
+    mae_pre = hm.mean_abs_pct_error(
+        [s for s in test if s[0] == "prefill"])
+    mae_dec = hm.mean_abs_pct_error(
+        [s for s in test if s[0] == "decode"])
+    rows = [("fig4_prefill_mae_pct", mae_pre,
+             "paper reports 7.4% (VIDUR vs GPUs)"),
+            ("fig4_decode_mae_pct", mae_dec,
+             "paper reports 5.2% (VIDUR vs GPUs)")]
+    for op, b, ln, ctx in grid[:4]:
+        pass
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name},{val:.2f},{note}")

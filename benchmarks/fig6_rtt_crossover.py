@@ -1,0 +1,41 @@
+"""Fig. 6 — distributed vs fused (cloud-only) execution as RTT grows.
+
+Paper: distributed wins at low RTT (edge drafting runs concurrently with
+cloud verification); fused is RTT-insensitive; crossover ≈ 50–60 ms.
+"""
+
+from __future__ import annotations
+
+from .common import mean_over_seeds, run_scenario
+
+RTTS = (5.0, 10.0, 20.0, 30.0, 40.0, 60.0, 80.0, 100.0)
+
+
+def run(quick: bool = True):
+    n = 60 if quick else 150
+    seeds = (0,) if quick else (0, 1, 2)
+    rtts = RTTS[::2] if quick else RTTS
+    rows = []
+    crossover = None
+    prev = None
+    for rtt in rtts:
+        d = mean_over_seeds(lambda s: run_scenario(
+            "gsm8k", rtt_ms=rtt, window="static", n_requests=n, seed=s), seeds)
+        f = mean_over_seeds(lambda s: run_scenario(
+            "gsm8k", rtt_ms=rtt, window="fused", n_requests=n, seed=s), seeds)
+        rows.append((f"fig6_rtt{int(rtt)}_dist_thpt", d["throughput_rps"],
+                     f"tpot={d['tpot_ms']:.1f}ms"))
+        rows.append((f"fig6_rtt{int(rtt)}_fused_thpt", f["throughput_rps"],
+                     f"tpot={f['tpot_ms']:.1f}ms"))
+        gap = d["throughput_rps"] - f["throughput_rps"]
+        if prev is not None and crossover is None and gap < 0 <= prev:
+            crossover = rtt
+        prev = gap
+    rows.append(("fig6_crossover_rtt_ms", float(crossover or -1),
+                 "paper observes 50-60ms"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run(quick=False):
+        print(f"{name},{val:.3f},{note}")

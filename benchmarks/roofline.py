@@ -1,0 +1,142 @@
+"""Roofline analysis (deliverable g).
+
+Reads the dry-run JSONL rows (launch/dryrun.py) and derives, per
+(arch × shape) on the single-pod mesh:
+
+    compute term    = HLO_FLOPs  / (chips × 197e12 FLOP/s)
+    memory term     = HLO_bytes  / (chips × 819e9 B/s)
+    collective term = coll_bytes / (chips × 50e9 B/s per ICI link)
+
+HLO numbers come from ``compiled.cost_analysis()`` — which counts
+while-loop bodies ONCE (verified experimentally; see EXPERIMENTS.md) — so
+each row is rescaled by its analytic loop-trip product recorded by the
+dry-run (``loop_trips`` / ``hlo_body_copies``). Collective bytes are parsed
+from the partitioned HLO (ring-algorithm per-link bytes) and rescaled the
+same way. MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference);
+the ratio MODEL_FLOPS / HLO_FLOPs flags remat/padding/dispatch waste.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any, Optional
+
+PEAK_FLOPS = 197e12       # TPU v5e bf16, per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+RESULT_GLOB = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun_*.jsonl")
+
+
+def load_rows(pattern: str = RESULT_GLOB) -> list[dict]:
+    rows: list[dict] = []
+    for path in sorted(glob.glob(pattern)):
+        with open(path) as f:
+            for line in f:
+                if line.strip():
+                    rows.append(json.loads(line))
+    # keep the LAST row per (arch, shape, mesh) — reruns supersede
+    dedup: dict[tuple, dict] = {}
+    for r in rows:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def analyze_row(r: dict) -> Optional[dict]:
+    if not r.get("ok"):
+        return None
+    scale = r.get("loop_trips", 1) / max(1, r.get("hlo_body_copies", 1))
+    flops_dev = r["flops_per_device"] * scale
+    bytes_dev = r["bytes_per_device"] * scale
+    coll_dev = r["collectives"]["moved_bytes"] * scale
+    n = r["devices"]
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    coll_s = coll_dev / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    hlo_total = flops_dev * n
+    ratio = r["model_flops"] / hlo_total if hlo_total else float("nan")
+    mfu_bound = (r["model_flops"] / (n * PEAK_FLOPS)) / bound_s \
+        if bound_s > 0 else float("nan")
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "devices": n,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "model_flops": r["model_flops"],
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": ratio,
+        "roofline_mfu_bound": mfu_bound,
+        "peak_gib": r["memory"]["peak_estimate_bytes"] / 2 ** 30,
+    }
+
+
+def recommendation(a: dict) -> str:
+    d = a["dominant"]
+    if d == "collective":
+        return ("reduce cross-device traffic: coarser FSDP all-gathers, "
+                "overlap collectives with compute, or trade TP for DP")
+    if d == "memory":
+        if a["shape"].startswith("decode") or a["shape"] == "long_500k":
+            return ("decode is weight/KV-bandwidth-bound: larger serving "
+                    "batch, KV in bf16/int8, flash-decode kernel tiling")
+        return "fuse elementwise chains; avoid re-materialized activations"
+    if a["useful_ratio"] < 0.5:
+        return ("compute-bound but <50% useful flops: cut padded-head/"
+                "rect-attention waste (causal flash kernel, exact-divisor "
+                "head sharding)")
+    return "compute-bound near useful peak: tune MXU tiling / dtype"
+
+
+def run(quick: bool = True):
+    rows = load_rows()
+    singles = sorted((analyze_row(r) for r in rows
+                      if r["mesh"] == "single"),
+                     key=lambda a: (a is None, a and (a["arch"], a["shape"])))
+    out = []
+    for a in singles:
+        if a is None:
+            continue
+        out.append((f"roofline_{a['arch']}_{a['shape']}_{a['dominant']}_s",
+                    max(a["compute_s"], a["memory_s"], a["collective_s"]),
+                    f"c={a['compute_s']:.2e} m={a['memory_s']:.2e} "
+                    f"x={a['collective_s']:.2e} useful={a['useful_ratio']:.2f}"))
+    ok = sum(1 for r in rows if r.get("ok"))
+    out.append(("dryrun_rows_ok", float(ok), f"of {len(rows)}"))
+    return out
+
+
+def markdown_table(mesh: str = "single") -> str:
+    rows = load_rows()
+    lines = ["| arch | shape | dominant | compute (s) | memory (s) | "
+             "collective (s) | useful | peak GiB/dev | next move |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        a = analyze_row(r)
+        if a is None:
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | "
+                         f"{r.get('error', '')[:60]} |")
+            continue
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | **{a['dominant']}** | "
+            f"{a['compute_s']:.3e} | {a['memory_s']:.3e} | "
+            f"{a['collective_s']:.3e} | {a['useful_ratio']:.2f} | "
+            f"{a['peak_gib']:.2f} | {recommendation(a)} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--markdown" in sys.argv:
+        print(markdown_table())
+    else:
+        for name, val, note in run():
+            print(f"{name},{val:.4e},{note}")

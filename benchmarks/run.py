@@ -1,0 +1,58 @@
+"""Benchmark runner — one module per paper table/figure (deliverable d).
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig5,table2]
+
+Prints ``name,value,derived`` CSV rows. Quick mode (default) uses scaled
+clusters/seed counts so the whole suite finishes in minutes on CPU; --full
+runs the paper-scale 20-target/600-2000-drafter configurations.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (eq12_analytic, fig4_calibration, fig5_policy_stacks,
+               fig6_rtt_crossover, fig7_8_routing, fig9_10_batching,
+               roofline, table2_awc)
+
+MODULES = {
+    "eq12": eq12_analytic,
+    "fig4": fig4_calibration,
+    "fig5": fig5_policy_stacks,
+    "fig6": fig6_rtt_crossover,
+    "table2": table2_awc,
+    "fig7_8": fig7_8_routing,
+    "fig9_10": fig9_10_batching,
+    "roofline": roofline,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    names = args.only.split(",") if args.only else list(MODULES)
+    print("name,value,derived")
+    rc = 0
+    for name in names:
+        mod = MODULES[name]
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=not args.full)
+        except Exception as e:  # pragma: no cover
+            print(f"{name}_ERROR,nan,{type(e).__name__}: {e}")
+            rc = 1
+            continue
+        for rname, val, note in rows:
+            note = str(note).replace(",", ";")
+            print(f"{rname},{val},{note}")
+        print(f"{name}_wall_s,{time.time()-t0:.1f},", flush=True)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,12 @@
+"""repro — DSD: Distributed Speculative Decoding for Edge-Cloud LLM serving.
+
+Reproduction + beyond-paper TPU framework. Public API surface:
+
+- ``repro.core``     — speculative decoding algorithm, AWC window control
+- ``repro.sim``      — DSD-Sim discrete-event simulator
+- ``repro.models``   — model zoo (dense / MoE / SSM / hybrid / enc-dec / VLM)
+- ``repro.configs``  — assigned architecture configs
+- ``repro.launch``   — mesh / dryrun / serve / train entry points
+"""
+
+__version__ = "0.1.0"

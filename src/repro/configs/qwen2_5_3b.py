@@ -1,0 +1,9 @@
+"""qwen2.5-3b — dense, GQA + QKV bias [hf:Qwen/Qwen2.5-0.5B].
+36L, d_model 2048, 16 heads (GQA kv=2), d_ff 11008, vocab 151936."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b", arch_type="dense",
+    n_layers=36, d_model=2048, n_heads=16, n_kv_heads=2,
+    d_ff=11008, vocab=151936, head_dim=128, qkv_bias=True,
+    rope_theta=1000000.0)

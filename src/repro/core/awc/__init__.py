@@ -1,0 +1,6 @@
+"""Adaptive Window Control (paper §4): WC-DNN + stabilized execution."""
+
+from . import model
+from .stabilize import StabilizerConfig, WindowStabilizer
+from .model import (WCDNNParams, bootstrap_gamma, default_predictor, forward,
+                    init, load, numpy_predictor, save, set_normalization)

@@ -1,0 +1,175 @@
+"""WC-DNN — the AWC window-control network (paper §4.1, §4.3, Fig. 3).
+
+A residual MLP: 5-dim feature vector → input projection → two residual
+blocks with SiLU activations → scalar head predicting the speculation window
+size γ as a continuous value. Features are z-normalized with statistics
+stored inside the parameter pytree so the deployed predictor is
+self-contained.
+
+Two inference paths:
+- JAX (:func:`forward`) for training,
+- numpy (:func:`numpy_predictor`) for the simulator's per-iteration inner
+  loop, where jit dispatch overhead would dominate.
+
+:func:`bootstrap_predictor` is the analytic controller used before any
+training data exists: it maximizes the paper's Eq. (2) speedup corrected for
+the network round-trip — the same objective the learned labels encode.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+FEATURE_DIM = 5  # [q_depth, alpha_recent, rtt_ms, tpot_ms, gamma_prev]
+
+
+class WCDNNParams(NamedTuple):
+    feat_mean: jax.Array   # (5,)
+    feat_std: jax.Array    # (5,)
+    w_in: jax.Array        # (5, H)
+    b_in: jax.Array        # (H,)
+    blocks: tuple          # ((w1,b1,w2,b2), ...) residual blocks
+    w_out: jax.Array       # (H, 1)
+    b_out: jax.Array       # (1,)
+
+
+def init(key: jax.Array, hidden: int = 64, n_blocks: int = 2) -> WCDNNParams:
+    ks = jax.random.split(key, 2 + 2 * n_blocks)
+
+    def dense(k, fan_in, fan_out):
+        scale = math.sqrt(2.0 / fan_in)
+        return jax.random.normal(k, (fan_in, fan_out), jnp.float32) * scale
+
+    blocks = []
+    for i in range(n_blocks):
+        w1 = dense(ks[2 + 2 * i], hidden, hidden)
+        w2 = dense(ks[3 + 2 * i], hidden, hidden)
+        blocks.append((w1, jnp.zeros((hidden,)), w2, jnp.zeros((hidden,))))
+    return WCDNNParams(
+        feat_mean=jnp.zeros((FEATURE_DIM,)),
+        feat_std=jnp.ones((FEATURE_DIM,)),
+        w_in=dense(ks[0], FEATURE_DIM, hidden),
+        b_in=jnp.zeros((hidden,)),
+        blocks=tuple(blocks),
+        w_out=dense(ks[1], hidden, 1) * 0.1,
+        b_out=jnp.full((1,), 4.0),   # bias toward the paper's default γ=4
+    )
+
+
+def set_normalization(params: WCDNNParams, x: jax.Array) -> WCDNNParams:
+    mean = jnp.mean(x, axis=0)
+    std = jnp.maximum(jnp.std(x, axis=0), 1e-3)
+    return params._replace(feat_mean=mean, feat_std=std)
+
+
+def forward(params: WCDNNParams, x: jax.Array) -> jax.Array:
+    """x: (..., 5) → (...,) continuous γ prediction."""
+    h = (x - params.feat_mean) / params.feat_std
+    h = jax.nn.silu(h @ params.w_in + params.b_in)
+    for (w1, b1, w2, b2) in params.blocks:
+        r = jax.nn.silu(h @ w1 + b1)
+        r = jax.nn.silu(r @ w2 + b2)
+        h = h + r
+    out = h @ params.w_out + params.b_out
+    return out[..., 0]
+
+
+# --------------------------------------------------------------------------
+# Deployment paths
+# --------------------------------------------------------------------------
+
+def numpy_predictor(params: WCDNNParams) -> Callable[[list[float]], float]:
+    """Export to numpy for sub-microsecond per-call inference in DSD-Sim."""
+    mean = np.asarray(params.feat_mean)
+    std = np.asarray(params.feat_std)
+    w_in, b_in = np.asarray(params.w_in), np.asarray(params.b_in)
+    blocks = [(np.asarray(w1), np.asarray(b1), np.asarray(w2), np.asarray(b2))
+              for (w1, b1, w2, b2) in params.blocks]
+    w_out, b_out = np.asarray(params.w_out), np.asarray(params.b_out)
+
+    def silu(v):
+        # numerically stable x·sigmoid(x)
+        pos = v >= 0
+        ev = np.exp(np.where(pos, -v, v))
+        sig = np.where(pos, 1.0 / (1.0 + ev), ev / (1.0 + ev))
+        return v * sig
+
+    def predict(feats: list[float]) -> float:
+        h = (np.asarray(feats, np.float32) - mean) / std
+        h = silu(h @ w_in + b_in)
+        for (w1, b1, w2, b2) in blocks:
+            h = h + silu(silu(h @ w1 + b1) @ w2 + b2)
+        return float((h @ w_out + b_out)[0])
+
+    return predict
+
+
+def save(params: WCDNNParams, path: str) -> None:
+    flat = {
+        "feat_mean": params.feat_mean, "feat_std": params.feat_std,
+        "w_in": params.w_in, "b_in": params.b_in,
+        "w_out": params.w_out, "b_out": params.b_out,
+        "n_blocks": np.asarray(len(params.blocks)),
+    }
+    for i, (w1, b1, w2, b2) in enumerate(params.blocks):
+        flat[f"blk{i}_w1"], flat[f"blk{i}_b1"] = w1, b1
+        flat[f"blk{i}_w2"], flat[f"blk{i}_b2"] = w2, b2
+    np.savez(path, **{k: np.asarray(v) for k, v in flat.items()})
+
+
+def load(path: str) -> WCDNNParams:
+    z = np.load(path)
+    n = int(z["n_blocks"])
+    blocks = tuple(
+        (jnp.asarray(z[f"blk{i}_w1"]), jnp.asarray(z[f"blk{i}_b1"]),
+         jnp.asarray(z[f"blk{i}_w2"]), jnp.asarray(z[f"blk{i}_b2"]))
+        for i in range(n))
+    return WCDNNParams(
+        feat_mean=jnp.asarray(z["feat_mean"]), feat_std=jnp.asarray(z["feat_std"]),
+        w_in=jnp.asarray(z["w_in"]), b_in=jnp.asarray(z["b_in"]),
+        blocks=blocks, w_out=jnp.asarray(z["w_out"]), b_out=jnp.asarray(z["b_out"]))
+
+
+# --------------------------------------------------------------------------
+# Analytic bootstrap controller (pre-training fallback + label prior)
+# --------------------------------------------------------------------------
+
+def bootstrap_gamma(feats: list[float], cost_ratio: float = 0.12,
+                    gmax: int = 12) -> float:
+    """γ* maximizing tokens/second from Eq. (1) with network- and
+    queue-aware iteration cost:
+
+        rate(γ) = E[τ](α, γ) / (γ·c + 1 + (RTT + queue·TPOT) / t_verify)
+
+    where t_verify ≈ TPOT is the per-iteration verification service time.
+    High queue depth or RTT pushes γ up (amortize round trips); low α pushes
+    γ down (rollback waste). Mirrors the objective the sweep labels encode.
+    """
+    q_depth, alpha, rtt_ms, tpot_ms, _ = feats
+    alpha = min(0.98, max(0.02, alpha))
+    t_verify = max(1.0, tpot_ms)
+    overhead = (rtt_ms + max(0.0, q_depth) * tpot_ms) / t_verify
+    best_g, best_rate = 1, -1.0
+    for g in range(1, gmax + 1):
+        e_tau = (1.0 - alpha ** (g + 1)) / (1.0 - alpha)
+        rate = e_tau / (g * cost_ratio + 1.0 + overhead)
+        if rate > best_rate:
+            best_g, best_rate = g, rate
+    return float(best_g)
+
+
+DEFAULT_CKPT = os.path.join(os.path.dirname(__file__), "data", "wcdnn_default.npz")
+
+
+def default_predictor() -> Callable[[list[float]], float]:
+    """Trained checkpoint if present, analytic bootstrap otherwise."""
+    if os.path.exists(DEFAULT_CKPT):
+        return numpy_predictor(load(DEFAULT_CKPT))
+    return bootstrap_gamma

@@ -1,0 +1,309 @@
+"""Distributed speculative-decoding engine on *real* JAX models.
+
+This is the execution layer the simulator abstracts: an edge draft model and
+a cloud target model exchanging speculation windows (Fig. 1b). On real
+hardware the two jitted programs run on separate pods and exchange only the
+tiny token/verdict payloads; in this container both run on the host and the
+network hop is accounted virtually (``rtt_ms``), while *acceptance outcomes
+are real* — this engine is what captures the ground-truth
+``acceptance_seq`` traces DSD-Sim replays (DESIGN.md §7.3).
+
+Cache-rollback semantics per family:
+
+- attention families (dense/moe/vlm/encdec): stale window entries are
+  masked via ``pos_map`` (models/kvcache.py) — single fused
+  :func:`repro.core.specdec.spec_decode_step`.
+- ssm/hybrid: the recurrent state cannot be masked retroactively; the
+  engine keeps the window-start state as the checkpoint, verifies on a
+  throwaway copy, then *advances* the committed prefix with per-sequence
+  active-masking (``_tree_where``) — the SSM analogue of cache rollback.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.model import Model, build_model
+from .specdec import (SpecDecodeState, draft_propose, spec_decode_step,
+                      verify_window, verify_window_greedy, _temperature_probs,
+                      sample_from_probs)
+from .window import FeatureSnapshot, StaticWindowPolicy, WindowPolicy
+
+
+def _tree_where(active: jax.Array, new: Any, old: Any, batch_axis: int = 1):
+    """Per-sequence select over cache pytrees; non-array leaves pass through.
+
+    ``active``: (B,) bool. Cache leaves carry batch on ``batch_axis``
+    (layer-stacked caches are (L, B, ...))."""
+    def sel(n, o):
+        if not isinstance(n, jax.Array) or n.ndim == 0:
+            return o
+        shape = [1] * n.ndim
+        ax = batch_axis if n.ndim > batch_axis else 0
+        shape[ax] = active.shape[0]
+        return jnp.where(active.reshape(shape), n, o)
+    return jax.tree.map(sel, new, old)
+
+
+@dataclass
+class GenerationStats:
+    iterations: int = 0
+    proposed: int = 0
+    accepted: int = 0
+    tokens: int = 0
+    wall_s: float = 0.0
+    virtual_ms: float = 0.0          # simulated edge-cloud time (incl. RTT)
+    acceptance_seqs: list = field(default_factory=list)  # per-seq 0/1 bits
+    gamma_seq: list = field(default_factory=list)
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(1, self.proposed)
+
+    @property
+    def tokens_per_iteration(self) -> float:
+        return self.tokens / max(1, self.iterations)
+
+
+class SpecDecodeEngine:
+    """Edge draft + cloud target, window policy in the loop."""
+
+    def __init__(self, draft_cfg: ModelConfig, target_cfg: ModelConfig,
+                 draft_params=None, target_params=None,
+                 key: Optional[jax.Array] = None,
+                 temperature: float = 1.0, rtt_ms: float = 0.0,
+                 use_verify_kernel: bool = False):
+        assert draft_cfg.vocab == target_cfg.vocab, \
+            "draft/target must share a tokenizer/vocab"
+        self.draft_cfg, self.target_cfg = draft_cfg, target_cfg
+        self.draft = build_model(draft_cfg)
+        self.target = build_model(target_cfg)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        kd, kt = jax.random.split(key)
+        self.draft_params = (draft_params if draft_params is not None
+                             else self.draft.init_params(kd))
+        self.target_params = (target_params if target_params is not None
+                              else self.target.init_params(kt))
+        self.temperature = temperature
+        self.rtt_ms = rtt_ms
+        self.use_verify_kernel = use_verify_kernel
+        self._target_attention = target_cfg.arch_type in (
+            "dense", "moe", "vlm", "encdec")
+        self._draft_attention = draft_cfg.arch_type in (
+            "dense", "moe", "vlm", "encdec")
+        self._jit_cache: dict = {}
+
+    # ------------------------------------------------------------- jit paths
+
+    def _fused_step(self, gamma: int):
+        """Attention-target path: one jitted program per γ."""
+        keyt = ("fused", gamma)
+        if keyt in self._jit_cache:
+            return self._jit_cache[keyt]
+
+        draft_decode = lambda p, t, c, pos: self.draft.decode_step(p, t, c, pos)
+        target_verify = lambda p, w, c, pos: self.target.verify_step(p, w, c, pos)
+
+        @jax.jit
+        def step(draft_params, target_params, state, key):
+            return spec_decode_step(draft_decode, target_verify,
+                                    draft_params, target_params,
+                                    state, gamma, key, self.temperature)
+
+        self._jit_cache[keyt] = step
+        return step
+
+    def _split_step(self, gamma: int):
+        """SSM/hybrid-target path: verify on a throwaway cache, then advance
+        the committed prefix with active-masked decode steps."""
+        keyt = ("split", gamma)
+        if keyt in self._jit_cache:
+            return self._jit_cache[keyt]
+
+        draft_decode = lambda p, t, c, pos: self.draft.decode_step(p, t, c, pos)
+
+        @jax.jit
+        def step(draft_params, target_params, state, key):
+            kd, kv = jax.random.split(key)
+            prop = draft_propose(draft_decode, draft_params,
+                                 state.draft_cache, state.last_token,
+                                 state.pos, gamma, kd, self.temperature)
+            window = jnp.concatenate(
+                [state.last_token[:, None], prop.tokens], axis=1)
+            p_logits, _discard = self.target.verify_step(
+                target_params, window, state.target_cache, state.pos)
+            if self.temperature <= 0.0:
+                res = verify_window_greedy(prop.tokens, p_logits)
+            else:
+                p_probs = _temperature_probs(p_logits, self.temperature)
+                res = verify_window(kv, prop.tokens, prop.q_probs, p_probs)
+
+            arange = jnp.arange(gamma + 1)[None, :]
+            acc_part = jnp.concatenate(
+                [prop.tokens, jnp.zeros_like(prop.tokens[:, :1])], axis=1)
+            committed = jnp.where(arange == res.n_accepted[:, None],
+                                  res.next_token[:, None], acc_part)
+
+            # advance target over [last_token, committed[:num_new-1]] — i.e.
+            # the tokens whose state transitions are now final. committed[t]
+            # enters the state only when the *next* window processes it, so
+            # we advance exactly num_new tokens starting from last_token.
+            adv_tokens = jnp.concatenate(
+                [state.last_token[:, None], committed[:, :gamma]], axis=1)
+            tcache = state.target_cache
+            for t in range(gamma + 1):
+                active = t < res.num_new
+                _, cnew = self.target.decode_step(
+                    target_params, adv_tokens[:, t], tcache, state.pos + t)
+                tcache = _tree_where(active, cnew, tcache)
+
+            dcache = prop.cache
+            if not self._draft_attention:
+                # same treatment for a recurrent draft: re-advance from the
+                # window-start checkpoint over the committed prefix
+                dcache = state.draft_cache
+                for t in range(gamma + 1):
+                    active = t < res.num_new
+                    _, cnew = self.draft.decode_step(
+                        draft_params, adv_tokens[:, t], dcache, state.pos + t)
+                    dcache = _tree_where(active, cnew, dcache)
+
+            new_tokens = jnp.where(arange < res.num_new[:, None], committed, -1)
+            state = SpecDecodeState(
+                draft_cache=dcache, target_cache=tcache,
+                last_token=res.next_token, pos=state.pos + res.num_new)
+            from .specdec import SpecDecodeOut
+            return SpecDecodeOut(state=state, new_tokens=new_tokens,
+                                 num_new=res.num_new,
+                                 n_accepted=res.n_accepted)
+
+        self._jit_cache[keyt] = step
+        return step
+
+    def _step_fn(self, gamma: int):
+        if self._target_attention and self._draft_attention:
+            return self._fused_step(gamma)
+        return self._split_step(gamma)
+
+    # --------------------------------------------------------------- prefill
+
+    def _prefill(self, prompts: jax.Array, slots: int, key: jax.Array,
+                 frontend=None, prompt_lens: Optional[jax.Array] = None
+                 ) -> SpecDecodeState:
+        """Right-padded batched prefill. With ``prompt_lens``, the anchor
+        logit is gathered at each sequence's true last prompt token; padded
+        cache slots are later overwritten before any query can attend them
+        (slot j is rewritten by the window covering position j), and SSM
+        state is identity-masked past the true length."""
+        B, S = prompts.shape
+        dlg, dcache = self.draft.prefill(self.draft_params, prompts, slots,
+                                         frontend=frontend,
+                                         prompt_lens=prompt_lens)
+        tlg, tcache = self.target.prefill(self.target_params, prompts, slots,
+                                          frontend=frontend,
+                                          prompt_lens=prompt_lens)
+        if prompt_lens is None:
+            anchor = tlg[:, -1, :]
+            pos = jnp.full((B,), S, jnp.int32)
+        else:
+            idx = (prompt_lens - 1)[:, None, None]
+            anchor = jnp.take_along_axis(tlg, idx, axis=1)[:, 0, :]
+            pos = prompt_lens.astype(jnp.int32)
+        if self.temperature <= 0.0:
+            first = jnp.argmax(anchor, axis=-1).astype(jnp.int32)
+        else:
+            probs = _temperature_probs(anchor, self.temperature)
+            first = sample_from_probs(key, probs).astype(jnp.int32)
+        return SpecDecodeState(draft_cache=dcache, target_cache=tcache,
+                               last_token=first, pos=pos)
+
+    # -------------------------------------------------------------- generate
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 window_policy: Optional[WindowPolicy] = None,
+                 key: Optional[jax.Array] = None, frontend=None,
+                 prompt_lens: Optional[np.ndarray] = None
+                 ) -> tuple[np.ndarray, GenerationStats]:
+        """Batched generation. Returns (tokens (B, ≥max_new), stats)."""
+        policy = window_policy or StaticWindowPolicy(4)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        prompts = jnp.asarray(prompts, jnp.int32)
+        B, S = prompts.shape
+        slots = S + max_new_tokens + 16
+        key, kp = jax.random.split(key)
+        t0 = time.perf_counter()
+        pl = None if prompt_lens is None else jnp.asarray(prompt_lens, jnp.int32)
+        state = self._prefill(prompts, slots, kp, frontend=frontend,
+                              prompt_lens=pl)
+
+        stats = GenerationStats()
+        stats.acceptance_seqs = [[] for _ in range(B)]
+        out = [[int(state.last_token[b])] for b in range(B)]
+        produced = np.ones(B, np.int64)
+        alpha_recent: list[float] = []
+        tpot_recent: list[float] = []
+        gamma_prev = 4.0
+
+        while produced.min() < max_new_tokens:
+            feats = FeatureSnapshot(
+                q_depth=0.0,
+                alpha_recent=(sum(alpha_recent[-16:]) /
+                              max(1, len(alpha_recent[-16:]))
+                              if alpha_recent else 0.7),
+                rtt_recent_ms=self.rtt_ms,
+                tpot_recent_ms=(sum(tpot_recent[-16:]) /
+                                max(1, len(tpot_recent[-16:]))
+                                if tpot_recent else 50.0),
+                gamma_prev=gamma_prev)
+            dec = policy.decide("engine", feats)
+            gamma = max(1, int(dec.gamma))
+            stats.gamma_seq.append(gamma)
+            it0 = time.perf_counter()
+            key, ks = jax.random.split(key)
+            res = self._step_fn(gamma)(self.draft_params, self.target_params,
+                                       state, ks)
+            state = res.state
+            new = np.asarray(res.new_tokens)
+            num_new = np.asarray(res.num_new)
+            n_acc = np.asarray(res.n_accepted)
+            for b in range(B):
+                bits = [1] * int(n_acc[b])
+                if n_acc[b] < gamma:
+                    bits.append(0)
+                stats.acceptance_seqs[b].extend(bits)
+                take = int(num_new[b])
+                out[b].extend(int(t) for t in new[b, :take])
+            produced += num_new
+            stats.iterations += 1
+            stats.proposed += int(gamma * B)
+            stats.accepted += int(n_acc.sum())
+            stats.tokens += int(num_new.sum())
+            it_wall = time.perf_counter() - it0
+            tpot_recent.append(it_wall * 1e3 / max(1.0, float(num_new.mean())))
+            alpha_recent.append(float(n_acc.mean()) / gamma)
+            stats.virtual_ms += self.rtt_ms + it_wall * 1e3
+            gamma_prev = float(gamma)
+
+        stats.wall_s = time.perf_counter() - t0
+        tokens = np.full((B, max_new_tokens), -1, np.int64)
+        for b in range(B):
+            seq = out[b][:max_new_tokens]
+            tokens[b, :len(seq)] = seq
+        return tokens, stats
+
+    # ------------------------------------------------------------ trace capture
+
+    def capture_traces(self, prompts: np.ndarray, max_new_tokens: int,
+                       gamma: int = 8, key=None) -> list[list[int]]:
+        """Ground-truth acceptance sequences for DSD-Sim (paper §3.2)."""
+        _, stats = self.generate(prompts, max_new_tokens,
+                                 StaticWindowPolicy(gamma), key=key)
+        return stats.acceptance_seqs

@@ -1,0 +1,241 @@
+"""Speculative decoding algorithm (paper §2.1) — pure JAX, model-agnostic.
+
+Implements the Leviathan/Chen accept–resample rule, fully vectorized over a
+batch with no data-dependent Python control flow (everything is ``jnp`` /
+``lax`` so it jits, shards and lowers for TPU):
+
+- draft model proposes γ tokens with per-position distributions q_i,
+- target evaluates all positions in parallel giving p_i (i = 1..γ+1),
+- token i is accepted iff u_i < min(1, p_i(t_i)/q_i(t_i)); on the first
+  rejection the target's residual distribution norm(max(p_i − q_i, 0)) is
+  sampled instead; if all γ accept, a bonus token is drawn from p_{γ+1}.
+
+Per-token acceptance probability α gives (paper Eqs. (1)–(2)):
+
+    E[τ] = (1 − α^{γ+1}) / (1 − α)
+    S    = (1 − α^{γ+1}) / ((1 − α)(cγ + 1))
+
+which :func:`expected_accepted` / :func:`expected_speedup` expose for the
+analytic benchmark and the AWC bootstrap controller.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# --------------------------------------------------------------------------
+# Analytic formulas (Eqs. 1 and 2)
+# --------------------------------------------------------------------------
+
+def expected_accepted(alpha, gamma):
+    """E[tokens per iteration] = (1 - alpha^(gamma+1)) / (1 - alpha)."""
+    alpha = jnp.asarray(alpha, dtype=jnp.float32)
+    g = jnp.asarray(gamma, dtype=jnp.float32)
+    near_one = jnp.abs(1.0 - alpha) < 1e-6
+    safe = jnp.where(near_one, 0.5, alpha)
+    val = (1.0 - safe ** (g + 1.0)) / (1.0 - safe)
+    return jnp.where(near_one, g + 1.0, val)
+
+
+def expected_speedup(alpha, gamma, cost_ratio):
+    """S = (1 - alpha^(gamma+1)) / ((1 - alpha) (c*gamma + 1))."""
+    return expected_accepted(alpha, gamma) / (
+        jnp.asarray(cost_ratio, jnp.float32) * jnp.asarray(gamma, jnp.float32) + 1.0)
+
+
+def optimal_gamma(alpha: float, cost_ratio: float, gmax: int = 12) -> int:
+    """argmax_γ of Eq. (2) over the integer range [1, gmax]."""
+    gammas = jnp.arange(1, gmax + 1, dtype=jnp.float32)
+    s = expected_speedup(alpha, gammas, cost_ratio)
+    return int(jnp.argmax(s)) + 1
+
+
+# --------------------------------------------------------------------------
+# Sampling helpers
+# --------------------------------------------------------------------------
+
+def _temperature_probs(logits: jax.Array, temperature: float) -> jax.Array:
+    """Softmax at temperature; temperature == 0 degenerates to one-hot argmax."""
+    if temperature <= 0.0:
+        return jax.nn.one_hot(jnp.argmax(logits, axis=-1), logits.shape[-1],
+                              dtype=logits.dtype)
+    return jax.nn.softmax(logits / temperature, axis=-1)
+
+
+def sample_from_probs(key: jax.Array, probs: jax.Array) -> jax.Array:
+    """Categorical sample via Gumbel-max on log-probs (batched)."""
+    logp = jnp.log(jnp.maximum(probs, 1e-20))
+    return jax.random.categorical(key, logp, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Verification: accept / resample (the paper's step 2-4 of Fig 1c)
+# --------------------------------------------------------------------------
+
+class VerifyResult(NamedTuple):
+    n_accepted: jax.Array      # (B,) int32 — accepted draft tokens in [0, γ]
+    next_token: jax.Array      # (B,) int32 — corrected or bonus token
+    accept_mask: jax.Array     # (B, γ) bool — per-position acceptance
+    num_new: jax.Array         # (B,) int32 — n_accepted + 1 tokens produced
+
+
+def verify_window(key: jax.Array,
+                  draft_tokens: jax.Array,   # (B, γ) int32
+                  q_probs: jax.Array,        # (B, γ, V) draft distributions
+                  p_probs: jax.Array,        # (B, γ+1, V) target distributions
+                  ) -> VerifyResult:
+    """Vectorized accept/resample over the speculation window.
+
+    The reference (oracle) semantics for the Pallas kernel in
+    ``repro.kernels.verify`` — see ``kernels/verify/ref.py`` which wraps this.
+    """
+    B, gamma = draft_tokens.shape
+    ku, kr = jax.random.split(key)
+    u = jax.random.uniform(ku, (B, gamma))
+
+    p_at = jnp.take_along_axis(p_probs[:, :gamma, :], draft_tokens[..., None],
+                               axis=-1)[..., 0]                      # (B, γ)
+    q_at = jnp.take_along_axis(q_probs, draft_tokens[..., None],
+                               axis=-1)[..., 0]                      # (B, γ)
+    ratio = p_at / jnp.maximum(q_at, 1e-20)
+    accept = u < jnp.minimum(1.0, ratio)                             # (B, γ)
+    prefix = jnp.cumprod(accept.astype(jnp.int32), axis=-1)
+    n_acc = prefix.sum(axis=-1)                                      # (B,)
+
+    # Distribution for the extra token: residual at the reject position,
+    # or p_{γ+1} when everything accepted.
+    idx = jnp.minimum(n_acc, gamma - 1)                              # reject pos
+    p_rej = jnp.take_along_axis(p_probs, idx[:, None, None], axis=1)[:, 0]
+    q_rej = jnp.take_along_axis(q_probs, idx[:, None, None], axis=1)[:, 0]
+    residual = jnp.maximum(p_rej - q_rej, 0.0)
+    res_mass = residual.sum(axis=-1, keepdims=True)
+    # Degenerate residual (p == q exactly) falls back to p itself.
+    residual = jnp.where(res_mass > 1e-12, residual / jnp.maximum(res_mass, 1e-20),
+                         p_rej)
+    bonus = p_probs[:, gamma, :]
+    all_accepted = (n_acc == gamma)[:, None]
+    dist = jnp.where(all_accepted, bonus, residual)
+    next_token = sample_from_probs(kr, dist).astype(jnp.int32)
+    return VerifyResult(n_accepted=n_acc.astype(jnp.int32),
+                        next_token=next_token,
+                        accept_mask=accept,
+                        num_new=(n_acc + 1).astype(jnp.int32))
+
+
+def verify_window_greedy(draft_tokens: jax.Array,
+                         p_logits: jax.Array) -> VerifyResult:
+    """Deterministic variant: accept while the draft token equals the
+    target argmax; the correction/bonus token is the target argmax at the
+    first mismatch (or the extra position)."""
+    B, gamma = draft_tokens.shape
+    tgt = jnp.argmax(p_logits, axis=-1).astype(jnp.int32)   # (B, γ+1)
+    accept = tgt[:, :gamma] == draft_tokens
+    prefix = jnp.cumprod(accept.astype(jnp.int32), axis=-1)
+    n_acc = prefix.sum(axis=-1)
+    next_token = jnp.take_along_axis(tgt, n_acc[:, None], axis=1)[:, 0]
+    return VerifyResult(n_accepted=n_acc.astype(jnp.int32),
+                        next_token=next_token.astype(jnp.int32),
+                        accept_mask=accept,
+                        num_new=(n_acc + 1).astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Draft proposal loop
+# --------------------------------------------------------------------------
+
+class DraftProposal(NamedTuple):
+    tokens: jax.Array     # (B, γ) int32
+    q_probs: jax.Array    # (B, γ, V)
+    cache: object         # draft model cache after the window
+
+
+def draft_propose(decode_fn: Callable, params, cache, last_token: jax.Array,
+                  start_pos: jax.Array, gamma: int, key: jax.Array,
+                  temperature: float = 1.0) -> DraftProposal:
+    """Autoregressively propose γ tokens with the draft model.
+
+    ``decode_fn(params, token, cache, pos) -> (logits, cache)`` is the
+    single-token decode step of any model in the zoo. γ is static (python
+    int) so this unrolls into a ``lax.scan`` of fixed length — required for
+    jit/lowering.
+    """
+    keys = jax.random.split(key, gamma)
+
+    def step(carry, k):
+        tok, cache, pos = carry
+        logits, cache = decode_fn(params, tok, cache, pos)
+        probs = _temperature_probs(logits, temperature)
+        nxt = sample_from_probs(k, probs).astype(jnp.int32)
+        return (nxt, cache, pos + 1), (nxt, probs)
+
+    (_, cache, _), (toks, qs) = lax.scan(
+        step, (last_token, cache, start_pos), keys)
+    # scan stacks on axis 0: (γ, B) / (γ, B, V) → batch-major
+    return DraftProposal(tokens=jnp.moveaxis(toks, 0, 1),
+                         q_probs=jnp.moveaxis(qs, 0, 1),
+                         cache=cache)
+
+
+# --------------------------------------------------------------------------
+# One full speculation iteration (draft γ → verify → commit)
+# --------------------------------------------------------------------------
+
+class SpecDecodeState(NamedTuple):
+    draft_cache: object
+    target_cache: object
+    last_token: jax.Array     # (B,) most recent committed token
+    pos: jax.Array            # (B,) absolute position OF last_token
+
+class SpecDecodeOut(NamedTuple):
+    state: SpecDecodeState
+    new_tokens: jax.Array     # (B, γ+1) committed tokens, padded with -1
+    num_new: jax.Array        # (B,)
+    n_accepted: jax.Array     # (B,)
+
+
+def spec_decode_step(draft_decode_fn: Callable, target_verify_fn: Callable,
+                     draft_params, target_params,
+                     state: SpecDecodeState, gamma: int, key: jax.Array,
+                     temperature: float = 1.0) -> SpecDecodeOut:
+    """One distributed-SD iteration, jittable end to end.
+
+    ``target_verify_fn(params, tokens, cache, pos) -> (logits, cache)``
+    runs the target over the γ+1 window ``[last_token, draft_tokens]`` and
+    returns logits for every window position. Cache-rollback semantics:
+    callers commit only ``num_new`` tokens; stale cache entries beyond the
+    committed position are overwritten by later iterations (attention) or
+    restored from the pre-window checkpoint (SSM — see models/ssm.py).
+    """
+    kd, kv = jax.random.split(key)
+    prop = draft_propose(draft_decode_fn, draft_params, state.draft_cache,
+                         state.last_token, state.pos, gamma, kd, temperature)
+    window = jnp.concatenate([state.last_token[:, None], prop.tokens], axis=1)
+    # window occupies absolute positions pos .. pos+γ (last_token sits at pos;
+    # its KV is not yet in the target cache — sampled, never forwarded).
+    p_logits, target_cache = target_verify_fn(
+        target_params, window, state.target_cache, state.pos)
+    if temperature <= 0.0:
+        res = verify_window_greedy(prop.tokens, p_logits)
+    else:
+        p_probs = _temperature_probs(p_logits, temperature)
+        res = verify_window(kv, prop.tokens, prop.q_probs, p_probs)
+
+    # committed tokens: accepted prefix then the corrected/bonus token
+    arange = jnp.arange(gamma + 1)[None, :]
+    acc_part = jnp.concatenate(
+        [prop.tokens, jnp.zeros_like(prop.tokens[:, :1])], axis=1)
+    corrected = jnp.where(arange == res.n_accepted[:, None],
+                          res.next_token[:, None], acc_part)
+    new_tokens = jnp.where(arange < res.num_new[:, None], corrected, -1)
+    last = res.next_token
+    state = SpecDecodeState(draft_cache=prop.cache, target_cache=target_cache,
+                            last_token=last,
+                            pos=state.pos + res.num_new)
+    return SpecDecodeOut(state=state, new_tokens=new_tokens,
+                         num_new=res.num_new, n_accepted=res.n_accepted)

@@ -1,0 +1,123 @@
+"""Speculation-window policies (paper §3.4 "Window Size Policy", §4).
+
+Every policy consumes a read-only :class:`FeatureSnapshot` of recent system
+metrics and returns a :class:`WindowDecision` — the speculation window size γ
+and the execution mode (``distributed`` draft→verify vs ``fused``
+cloud-only). Policies keep any adaptation state *per draft–target pair*.
+
+- :class:`StaticWindowPolicy`   — fixed γ (paper baseline, γ=4).
+- :class:`DynamicWindowPolicy`  — threshold heuristic: γ+1 when the recent
+  acceptance rate exceeds 0.75, γ−1 when it falls below 0.25 (paper §5.2).
+- :class:`AWCWindowPolicy`      — the paper's learned controller: WC-DNN
+  prediction + clamp/EMA/hysteresis stabilization (§4.4). γ≤1 ⇒ fused mode.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Protocol
+
+from .awc.stabilize import StabilizerConfig, WindowStabilizer
+
+
+@dataclass(frozen=True)
+class FeatureSnapshot:
+    """The 5-dimensional AWC feature vector (paper §4.1)."""
+    q_depth: float        # recent target-queue depth utilization in [0, ~]
+    alpha_recent: float   # recent token acceptance rate in [0,1]
+    rtt_recent_ms: float  # recent link round-trip time
+    tpot_recent_ms: float # recent time-per-output-token of the target
+    gamma_prev: float     # previous window size
+
+    def as_list(self) -> list[float]:
+        return [self.q_depth, self.alpha_recent, self.rtt_recent_ms,
+                self.tpot_recent_ms, self.gamma_prev]
+
+
+@dataclass(frozen=True)
+class WindowDecision:
+    gamma: int
+    mode: str  # "distributed" | "fused"
+
+
+class WindowPolicy(Protocol):
+    def decide(self, pair_key: str, feats: FeatureSnapshot) -> WindowDecision: ...
+    def name(self) -> str: ...
+
+
+class StaticWindowPolicy:
+    def __init__(self, gamma: int = 4):
+        self.gamma = int(gamma)
+
+    def decide(self, pair_key: str, feats: FeatureSnapshot) -> WindowDecision:
+        return WindowDecision(self.gamma, "distributed")
+
+    def name(self) -> str:
+        return f"static-{self.gamma}"
+
+
+class DynamicWindowPolicy:
+    """Threshold heuristic from the paper's 'Dynamic/Simple' baseline."""
+
+    def __init__(self, hi: float = 0.75, lo: float = 0.25,
+                 gamma0: int = 4, gmin: int = 1, gmax: int = 12):
+        self.hi, self.lo = hi, lo
+        self.gamma0, self.gmin, self.gmax = gamma0, gmin, gmax
+        self._state: dict[str, int] = {}
+
+    def decide(self, pair_key: str, feats: FeatureSnapshot) -> WindowDecision:
+        g = self._state.get(pair_key, self.gamma0)
+        if feats.alpha_recent > self.hi:
+            g = min(self.gmax, g + 1)
+        elif feats.alpha_recent < self.lo:
+            g = max(self.gmin, g - 1)
+        self._state[pair_key] = g
+        return WindowDecision(g, "distributed")
+
+    def name(self) -> str:
+        return "dynamic"
+
+
+class AWCWindowPolicy:
+    """Adaptive Window Control: WC-DNN prediction + per-pair stabilization.
+
+    ``predictor`` maps a 5-float feature list → raw continuous γ. In the
+    simulator this is the trained WC-DNN exported to numpy
+    (:func:`repro.core.awc.model.numpy_predictor`); in unit tests it can be
+    any callable.
+    """
+
+    def __init__(self, predictor: Callable[[list[float]], float],
+                 stab_cfg: StabilizerConfig | None = None):
+        self.predictor = predictor
+        self.stab_cfg = stab_cfg or StabilizerConfig()
+        self._stab: dict[str, WindowStabilizer] = {}
+
+    def decide(self, pair_key: str, feats: FeatureSnapshot) -> WindowDecision:
+        stab = self._stab.get(pair_key)
+        if stab is None:
+            stab = self._stab[pair_key] = WindowStabilizer(self.stab_cfg)
+        raw = float(self.predictor(feats.as_list()))
+        gamma, mode = stab.step(raw)
+        return WindowDecision(gamma, mode)
+
+    def name(self) -> str:
+        return "awc"
+
+
+class OracleStaticPolicy:
+    """Upper-bound helper used for AWC dataset labeling sweeps: behaves like
+    StaticWindowPolicy but records nothing; separate class only so sweep code
+    can distinguish label-generation runs."""
+
+    def __init__(self, gamma: int, fused: bool = False):
+        self.gamma = int(gamma)
+        self.fused = fused
+
+    def decide(self, pair_key: str, feats: FeatureSnapshot) -> WindowDecision:
+        if self.fused:
+            return WindowDecision(1, "fused")
+        return WindowDecision(self.gamma, "distributed")
+
+    def name(self) -> str:
+        return f"oracle-{'fused' if self.fused else self.gamma}"

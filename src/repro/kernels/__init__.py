@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU):
+
+- verify       — fused speculative-window verification (vocab-tiled)
+- decode_attn  — GQA flash-decode over KV caches (+sliding window/ring)
+- ssd          — Mamba2/SSD chunked scan
+"""

@@ -1,0 +1,34 @@
+"""Jitted wrapper: (B,T,H,hd) query layout ↔ kernel's grouped layout, cache
+padding to the sequence tile, static window/shape handling."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attn import S_TILE, decode_attn_call
+
+
+@functools.partial(jax.jit, static_argnames=("window", "s_tile"))
+def decode_attention(q: jax.Array,        # (B, T, H, hd)
+                     k: jax.Array,        # (B, S, Hkv, hd)
+                     v: jax.Array,
+                     pos_map: jax.Array,  # (B, S)
+                     q_pos: jax.Array,    # (B, T)
+                     window: int = 0,
+                     s_tile: int = S_TILE) -> jax.Array:
+    B, T, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    tile = min(s_tile, S) if S % min(s_tile, S) == 0 else s_tile
+    pad = (-S) % tile
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_map = jnp.pad(pos_map, ((0, 0), (0, pad)), constant_values=-1)
+    qg = q.reshape(B, T, Hkv, G, hd)
+    out = decode_attn_call(qg, k, v, pos_map, q_pos, window=window,
+                           s_tile=tile)
+    return out.reshape(B, T, H, hd)

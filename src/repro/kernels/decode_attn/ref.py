@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the GQA flash-decode kernel: pos_map-masked attention
+of a small query window over a (possibly ring-buffer) KV cache, with
+optional sliding window. Mirrors models/attention.py's decode math for one
+layer, minus the projections (the kernel operates post-projection)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_reference(q: jax.Array,        # (B, T, H, hd)
+                               k: jax.Array,        # (B, S, Hkv, hd)
+                               v: jax.Array,        # (B, S, Hkv, hd)
+                               pos_map: jax.Array,  # (B, S) int32, -1=empty
+                               q_pos: jax.Array,    # (B, T) absolute pos
+                               window: int = 0) -> jax.Array:
+    B, T, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, T, Hkv, G, hd)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qg, k) / math.sqrt(hd)
+    slot = pos_map[:, None, None, None, :]
+    qp = q_pos[:, None, None, :, None]
+    valid = (slot >= 0) & (slot <= qp)
+    if window > 0:
+        valid = valid & (slot > qp - window)
+    scores = jnp.where(valid, scores.astype(jnp.float32), -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)   # rows with no valid slot
+    out = jnp.einsum("bkgts,bskh->btkgh", w.astype(q.dtype), v)
+    return out.reshape(B, T, H, hd)

@@ -1,0 +1,2 @@
+from .ops import ssd_chunked_kernel
+from .ref import ssd_chunked_reference, ssd_recurrent_reference

@@ -1,0 +1,26 @@
+"""Jitted wrapper matching models.ssm.ssd_chunked's signature (drop-in via
+``use_kernel=True`` in ssm_block_train): pads S to the chunk, strips pads."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ssd import CHUNK, ssd_call
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_chunked_kernel(x, Bm, Cm, dt, A, h_in, chunk: int = CHUNK):
+    """Same contract as models.ssm.ssd_chunked: padded dt rows must be zero
+    (identity steps) — ssm_block_train guarantees this."""
+    B, S, nh, hd = x.shape
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y, h = ssd_call(x, Bm, Cm, dt, A, h_in, chunk=chunk)
+    return y[:, :S], h

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the SSD kernel.
+
+Two references:
+- :func:`ssd_recurrent_reference` — the literal token-by-token recurrence
+  (the ground truth both the chunked jnp path and the Pallas kernel must
+  match),
+- :func:`ssd_chunked_reference`   — re-export of the chunked jnp
+  implementation from models/ssm.py (itself validated against the
+  recurrence here).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...models.ssm import ssd_chunked as ssd_chunked_reference  # noqa: F401
+
+
+def ssd_recurrent_reference(x, Bm, Cm, dt, A, h_in):
+    """x: (B,S,nh,hd); Bm,Cm: (B,S,N); dt: (B,S,nh); A: (nh,);
+    h_in: (B,nh,hd,N). Returns (y (B,S,nh,hd), h_out)."""
+
+    def step(h, inp):
+        xt, bt, ct, dtt = inp     # (B,nh,hd), (B,N), (B,N), (B,nh)
+        a = jnp.exp(A[None, :] * dtt)                      # (B,nh)
+        upd = jnp.einsum("bh,bn,bhd->bhdn", dtt, bt.astype(jnp.float32),
+                         xt.astype(jnp.float32))
+        h = a[..., None, None] * h + upd
+        y = jnp.einsum("bn,bhdn->bhd", ct.astype(jnp.float32), h)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(Bm, 1, 0),
+          jnp.moveaxis(Cm, 1, 0), jnp.moveaxis(dt, 1, 0))
+    h_out, ys = jax.lax.scan(step, h_in, xs)
+    return jnp.moveaxis(ys, 0, 1), h_out

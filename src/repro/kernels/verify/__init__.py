@@ -1,0 +1,2 @@
+from .ops import verify_window_fused
+from .ref import VerifyOut, verify_reference

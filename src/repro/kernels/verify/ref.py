@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the fused speculative-verification kernel.
+
+Deterministic given explicit uniforms (u for per-position acceptance, r for
+the correction/bonus sample) so kernel↔oracle comparison is exact. The
+random-API wrapper in ``repro.core.specdec.verify_window`` implements the
+same math; this module is the kernel's contract.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class VerifyOut(NamedTuple):
+    n_accepted: jax.Array   # (B,) int32
+    next_token: jax.Array   # (B,) int32
+    accept_mask: jax.Array  # (B, γ) bool
+
+
+def verify_reference(draft_tokens: jax.Array,   # (B, γ) int32
+                     q_probs: jax.Array,        # (B, γ, V)
+                     p_probs: jax.Array,        # (B, γ+1, V)
+                     u: jax.Array,              # (B, γ) uniforms
+                     r: jax.Array,              # (B,) uniform for resample
+                     eps: float = 1e-12) -> VerifyOut:
+    B, gamma = draft_tokens.shape
+    V = p_probs.shape[-1]
+
+    p_at = jnp.take_along_axis(p_probs[:, :gamma, :], draft_tokens[..., None],
+                               axis=-1)[..., 0]
+    q_at = jnp.take_along_axis(q_probs, draft_tokens[..., None],
+                               axis=-1)[..., 0]
+    accept = u < jnp.minimum(1.0, p_at / jnp.maximum(q_at, 1e-20))
+    prefix = jnp.cumprod(accept.astype(jnp.int32), axis=-1)
+    n_acc = prefix.sum(axis=-1)
+
+    all_acc = n_acc == gamma
+    jrow = jnp.where(all_acc, gamma, n_acc)                      # p row
+    qrow = jnp.minimum(jrow, gamma - 1)                          # q row
+    p_j = jnp.take_along_axis(p_probs, jrow[:, None, None], axis=1)[:, 0]
+    q_j = jnp.take_along_axis(q_probs, qrow[:, None, None], axis=1)[:, 0]
+    residual = jnp.maximum(p_j - q_j, 0.0)
+    mass = residual.sum(-1)
+    use_p = all_acc | (mass <= eps)
+    dist = jnp.where(use_p[:, None], p_j, residual)
+    total = dist.sum(-1)
+
+    # inverse-CDF with threshold r·total: first index where cdf > threshold
+    cdf = jnp.cumsum(dist, axis=-1)
+    thresh = (r * total)[:, None]
+    hit = cdf > thresh
+    token = jnp.argmax(hit, axis=-1)
+    # degenerate all-zero dist → clamp to last index
+    token = jnp.where(hit.any(-1), token, V - 1).astype(jnp.int32)
+    return VerifyOut(n_accepted=n_acc.astype(jnp.int32),
+                     next_token=token, accept_mask=accept)

@@ -1,0 +1,4 @@
+"""Launchers: production mesh, multi-pod dry-run, train and serve drivers."""
+
+from .mesh import make_host_mesh, make_production_mesh
+from .shapes import SHAPES, InputShape, input_specs

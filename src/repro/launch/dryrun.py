@@ -1,0 +1,346 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) combination: build the step
+function (train_step / prefill / serve_step per the shape's kind), attach
+the production shardings, ``.lower()`` over ShapeDtypeStruct stand-ins (no
+allocation), ``.compile()``, and record ``memory_analysis()`` (proves it
+fits 16 GB/chip), ``cost_analysis()`` (FLOPs/bytes for §Roofline), and the
+collective schedule parsed from the compiled HLO (collective bytes are not
+in cost_analysis).
+
+The XLA_FLAGS line above MUST run before any other import — jax locks the
+device count at first init. Do not move it; do not set it globally.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch all --shape all --mesh single,multi --out results/dryrun.json
+"""
+
+import argparse
+import json
+import math
+import re
+import sys
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHS, ASSIGNED, get_config
+from ..models.model import build_model
+from ..sharding.specs import ShardingRules
+from ..sharding.runtime import activation_sharding
+from ..training.optimizer import AdamWConfig
+from ..training.train_step import init_train_state, make_train_step
+from .mesh import make_production_mesh
+from .shapes import SHAPES, InputShape, input_specs
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# --------------------------------------------------------------------------
+# HLO collective parsing
+# --------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}\s]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"(pred|[a-z]+\d+)\[([\d,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict[str, Any]:
+    """Sum per-device collective buffer bytes and ring-moved bytes per op
+    kind from the (SPMD-partitioned, per-device-shaped) compiled HLO."""
+    per_kind: dict[str, dict[str, float]] = {}
+    moved_total = 0.0
+    buffer_total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_txt, kind, start = m.group(1), m.group(2), m.group(3)
+        buf = _shape_bytes(shape_txt)
+        if buf == 0:
+            continue
+        gm = _GROUP_RE.search(line)
+        if gm:
+            n = int(gm.group(2))
+        else:
+            gl = _GROUP_LIST_RE.search(line)
+            n = len(gl.group(1).split(",")) if gl else 16
+        n = max(2, n)
+        # ring-algorithm bytes crossing each device's link
+        if kind == "all-gather":
+            moved = buf * (n - 1) / n
+        elif kind == "all-reduce":
+            moved = 2.0 * buf * (n - 1) / n
+        elif kind == "reduce-scatter":
+            moved = buf * (n - 1)            # buf = per-device output shard
+        elif kind == "all-to-all":
+            moved = buf * (n - 1) / n
+        else:                                 # collective-permute
+            moved = buf
+        d = per_kind.setdefault(kind, {"count": 0, "buffer_bytes": 0.0,
+                                       "moved_bytes": 0.0})
+        d["count"] += 1
+        d["buffer_bytes"] += buf
+        d["moved_bytes"] += moved
+        buffer_total += buf
+        moved_total += moved
+    return {"per_kind": per_kind, "buffer_bytes": buffer_total,
+            "moved_bytes": moved_total}
+
+
+# --------------------------------------------------------------------------
+# Step builders
+# --------------------------------------------------------------------------
+
+def _opt_cfg(cfg) -> AdamWConfig:
+    # bf16 optimizer moments for the ≥200B-param archs (DESIGN.md §5):
+    # f32 m+v for a 400B model is 3.2 TB — bf16 halves it below the
+    # 16 GB/chip line at 256-512 chips.
+    big = cfg.param_count() > 2e11
+    return AdamWConfig(lr=1e-4, state_dtype=jnp.bfloat16 if big else None)
+
+
+def build_lowering(arch: str, shape_name: str, mesh, fsdp_over_pod=True):
+    """Returns (lowered, meta) for one (arch, shape, mesh)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    rules = ShardingRules(mesh, cfg, fsdp_over_pod=fsdp_over_pod)
+    spec = input_specs(cfg, shape, model)
+    B = shape.global_batch
+
+    params_shape = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0)))
+    p_shard = rules.params_sharding(params_shape)
+    repl = NamedSharding(mesh, P())
+    # sequence-parallel activation residuals (batch→dp, seq→model)
+    act = NamedSharding(mesh, P(rules.batch_spec(B), "model", None))
+    # head-parallel q/k/v (§Perf cycle 1: keeps the seq↔head transition on
+    # the projections, not the O(S²) attention weights)
+    qkv = NamedSharding(mesh, P(rules.batch_spec(B), None, "model", None))
+    # vocab-parallel lm head (§Perf cycle 6)
+    logits_s = NamedSharding(mesh, P(rules.batch_spec(B), None, "model"))
+    head_in = None   # §Perf cycle 7: with vocab-parallel logits the head
+    # contraction tolerates seq-sharded h; forcing (dp,None,None) made XLA
+    # materialize full-batch f32 (B,S,D) reshard buffers
+
+    if spec["kind"] == "train":
+        opt_cfg = _opt_cfg(cfg)
+        # gradient accumulation: bound live per-device tokens to ~16k
+        dp = rules._axis_size(rules.batch_spec(B) or ())
+        per_dev_tokens = B // max(1, dp) * spec["tokens"].shape[1]
+        micro = max(1, per_dev_tokens // 16384)
+        while B % micro or (B // micro) % max(1, dp):
+            micro -= 1
+        step = make_train_step(model, opt_cfg, micro_steps=micro)
+        state_shape = jax.eval_shape(
+            lambda: init_train_state(model, jax.random.PRNGKey(0), opt_cfg))
+        state_shard = rules.train_state_sharding(state_shape, p_shard)
+        batch_struct = {"tokens": spec["tokens"], "labels": spec["labels"]}
+        batch_shard = {"tokens": rules.tokens_sharding(B),
+                       "labels": rules.tokens_sharding(B)}
+        if "frontend" in spec:
+            batch_struct["frontend"] = spec["frontend"]
+            batch_shard["frontend"] = rules.frontend_sharding(B)
+        key_struct = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+        # §Perf cycle 2: unconstrained outputs let XLA replicate the
+        # lm_head/embed gradients (observed 11.7 GiB f32 buffers);
+        # constrain the updated state to the input layout.
+        fn = jax.jit(step, in_shardings=(state_shard, batch_shard, repl),
+                     out_shardings=(state_shard, None),
+                     donate_argnums=(0,))
+        with mesh, activation_sharding(act, qkv=qkv, logits=logits_s,
+                                       head_in=head_in):
+            lowered = fn.lower(state_shape, batch_struct, key_struct)
+        tokens = B * spec["tokens"].shape[1]
+        model_flops = 6.0 * cfg.active_param_count() * tokens
+        # XLA cost_analysis counts while-loop bodies ONCE (see
+        # benchmarks/roofline.py): record the analytic body-trip product so
+        # HLO numbers can be scaled back to per-step totals.
+        return lowered, {"tokens": tokens, "model_flops": model_flops,
+                         "loop_trips": micro * cfg.n_layers,
+                         "micro_steps": micro}
+
+    if spec["kind"] == "prefill":
+        slots = spec["slots"]
+        has_fe = "frontend" in spec
+
+        # serving prefill returns only the anchor logits (last position) —
+        # XLA then DCEs the (B, S, V) lm-head matmul down to one position
+        cache_struct = jax.eval_shape(
+            lambda: model.init_cache(
+                B, slots,
+                enc_frames=(cfg.n_frontend_tokens
+                            if cfg.arch_type == "encdec" else 0)))
+        c_shard = rules.cache_sharding(cache_struct, B)
+        if has_fe:
+            def fn_(params, tokens, frontend):
+                logits, cache = model.prefill(params, tokens, slots,
+                                              frontend=frontend, chunk=1024,
+                                              cache_shardings=c_shard)
+                return logits[:, -1, :], cache
+            args = (params_shape, spec["tokens"], spec["frontend"])
+            shards = (p_shard, rules.tokens_sharding(B),
+                      rules.frontend_sharding(B))
+        else:
+            def fn_(params, tokens):
+                logits, cache = model.prefill(params, tokens, slots,
+                                              chunk=1024,
+                                              cache_shardings=c_shard)
+                return logits[:, -1, :], cache
+            args = (params_shape, spec["tokens"])
+            shards = (p_shard, rules.tokens_sharding(B))
+        fn = jax.jit(fn_, in_shardings=shards)
+        with mesh, activation_sharding(act, qkv=qkv):
+            lowered = fn.lower(*args)
+        tokens = B * shape.seq_len
+        model_flops = 2.0 * cfg.active_param_count() * tokens
+        chunks = max(1, shape.seq_len // 1024)
+        return lowered, {"tokens": tokens, "model_flops": model_flops,
+                         "loop_trips": chunks * cfg.n_layers,
+                         "hlo_body_copies": 2}
+
+    # decode
+    window = spec["window"]
+    cache_struct = spec["cache"]
+    cache_shard = rules.cache_sharding(cache_struct, B)
+
+    def fn_(params, token, cache, pos):
+        # production serving waves are position-aligned → uniform_pos lowers
+        # the cache write to dynamic_update_slice (GSPMD-friendly)
+        return model.decode_step(params, token, cache, pos, window=window,
+                                 uniform_pos=True)
+
+    fn = jax.jit(fn_, in_shardings=(p_shard, rules.vector_sharding(B),
+                                    cache_shard, rules.vector_sharding(B)),
+                 out_shardings=(None, cache_shard),
+                 donate_argnums=(2,))
+    with mesh:
+        lowered = fn.lower(params_shape, spec["token"], cache_struct,
+                           spec["pos"])
+    tokens = B
+    model_flops = 2.0 * cfg.active_param_count() * tokens
+    return lowered, {"tokens": tokens, "model_flops": model_flops,
+                     "loop_trips": cfg.n_layers}
+
+
+# --------------------------------------------------------------------------
+# Runner
+# --------------------------------------------------------------------------
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            keep_hlo: bool = False) -> dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = math.prod(mesh.shape.values())
+    row: dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_kind, "devices": n_dev, "ok": False}
+    t0 = time.time()
+    try:
+        lowered, meta = build_lowering(arch, shape_name, mesh)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+        row.update(
+            ok=True,
+            lower_s=round(t1 - t0, 2),
+            compile_s=round(t2 - t1, 2),
+            tokens=meta["tokens"],
+            model_flops=meta["model_flops"],
+            loop_trips=meta.get("loop_trips", 1),
+            micro_steps=meta.get("micro_steps", 1),
+            hlo_body_copies=meta.get("hlo_body_copies", 1),
+            flops_per_device=float(ca.get("flops", 0.0)),
+            bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+            collectives=coll,
+            memory={
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+                "peak_estimate_bytes": int(ma.argument_size_in_bytes
+                                           + ma.output_size_in_bytes
+                                           + ma.temp_size_in_bytes
+                                           - ma.alias_size_in_bytes),
+            },
+        )
+        if keep_hlo:
+            row["hlo_len"] = len(hlo)
+    except Exception as e:  # a failure here is a bug in the system
+        row["error"] = f"{type(e).__name__}: {e}"[:2000]
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="comma list or 'all' (assigned archs)")
+    ap.add_argument("--shape", default="all",
+                    help=f"comma list or 'all' ({','.join(SHAPES)})")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = ASSIGNED if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                row = run_one(arch, shape, mesh_kind)
+                if not args.quiet:
+                    if row["ok"]:
+                        m = row["memory"]
+                        print(f"[OK]   {arch:28s} {shape:12s} {mesh_kind:6s} "
+                              f"lower={row['lower_s']:6.1f}s "
+                              f"compile={row['compile_s']:6.1f}s "
+                              f"peak/dev={m['peak_estimate_bytes']/2**30:6.2f}GiB "
+                              f"flops/dev={row['flops_per_device']:.3e} "
+                              f"coll={row['collectives']['moved_bytes']:.3e}B",
+                              flush=True)
+                    else:
+                        failures += 1
+                        print(f"[FAIL] {arch:28s} {shape:12s} {mesh_kind:6s} "
+                              f"{row['error'][:160]}", flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(row) + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

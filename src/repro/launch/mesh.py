@@ -1,0 +1,25 @@
+"""Production mesh construction (deliverable e).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax import;
+tests and benches must keep seeing 1 device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips as (data=16, model=16).
+    Multi-pod: 2 pods × 256 chips as (pod=2, data=16, model=16)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int | None = None):
+    """Debug mesh over whatever devices exist on this host (usually 1)."""
+    n = len(jax.devices())
+    m = model_axis or 1
+    return jax.make_mesh((n // m, m), ("data", "model"))

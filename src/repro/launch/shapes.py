@@ -1,0 +1,105 @@
+"""Assigned input shapes + ShapeDtypeStruct input_specs() builders.
+
+The four production shapes:
+
+    train_4k     seq_len=4096    global_batch=256   (training: train_step)
+    prefill_32k  seq_len=32768   global_batch=32    (inference prefill)
+    decode_32k   seq_len=32768   global_batch=128   (serve_step: 1 new token,
+                                                     KV/state cache of 32k)
+    long_500k    seq_len=524288  global_batch=1     (serve_step: sub-quadratic
+                                                     — SSM/hybrid state, or
+                                                     ring-buffer sliding
+                                                     window for dense archs)
+
+Everything here is ``jax.ShapeDtypeStruct`` — weak-type-correct, shardable,
+no device allocation (the dry-run contract).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.model import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # "train" | "prefill" | "decode"
+    sliding: bool = False        # decode via ring-buffer sliding window
+
+
+SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode", sliding=True),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def cache_specs(model: Model, batch: int, slots: int, ring: bool,
+                enc_frames: int = 0) -> Any:
+    """ShapeDtypeStruct pytree matching model.init_cache (no allocation)."""
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, slots, ring=ring,
+                                 enc_frames=enc_frames))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, model: Model
+                ) -> dict[str, Any]:
+    """Returns the ShapeDtypeStruct stand-ins for every input of the step
+    function selected by ``shape.kind`` (tokens/labels for train; tokens for
+    prefill; token/cache/pos for decode), plus metadata the dry-run needs."""
+    B, S = shape.global_batch, shape.seq_len
+    out: dict[str, Any] = {"kind": shape.kind}
+
+    if shape.kind == "train":
+        text = S
+        if cfg.arch_type == "vlm":
+            # patches + text together fill the backbone's 4096 positions
+            text = S - cfg.n_frontend_tokens
+            out["frontend"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                                   jnp.float32)
+        if cfg.arch_type == "encdec":
+            out["frontend"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                                   jnp.float32)
+        out["tokens"] = _sds((B, text), jnp.int32)
+        out["labels"] = _sds((B, text), jnp.int32)
+        return out
+
+    if shape.kind == "prefill":
+        out["tokens"] = _sds((B, S), jnp.int32)
+        if cfg.arch_type == "encdec":
+            out["frontend"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                                   jnp.float32)
+        out["slots"] = S + 128
+        return out
+
+    # decode: ONE new token against a seq_len cache
+    ring = False
+    window = 0
+    slots = S
+    if shape.sliding and cfg.arch_type not in ("ssm",):
+        # sub-quadratic serving for attention archs: ring-buffer sliding
+        # window (SSM/hybrid mamba state is O(1) natively)
+        ring = True
+        window = cfg.serve_sliding_window
+        slots = cfg.serve_sliding_window
+    enc_frames = cfg.n_frontend_tokens if cfg.arch_type == "encdec" else 0
+    out["token"] = _sds((B,), jnp.int32)
+    out["pos"] = _sds((B,), jnp.int32)
+    out["cache"] = cache_specs(model, B, slots, ring, enc_frames)
+    out["window"] = window
+    out["ring"] = ring
+    return out

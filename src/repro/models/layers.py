@@ -1,0 +1,71 @@
+"""Shared neural-net layers: RMSNorm, rotary embeddings, SwiGLU, init."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key: jax.Array, shape: tuple[int, ...], dtype,
+               fan_in: Optional[int] = None) -> jax.Array:
+    fan_in = fan_in or shape[0]
+    scale = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings (applied per absolute position; GQA-friendly)
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, head_dim); positions: broadcastable to (..., T)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                    # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., T, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset=0,
+                window: int = 0) -> jax.Array:
+    """(q_len, kv_len) boolean mask; True = attend. ``q_offset`` is the
+    absolute position of query 0 relative to kv index 0. ``window`` > 0
+    restricts to a sliding window of that many positions."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = k_pos <= q_pos
+    if window > 0:
+        mask = mask & (k_pos > q_pos - window)
+    return mask

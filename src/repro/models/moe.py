@@ -1,0 +1,103 @@
+"""Mixture-of-Experts FFN — GShard-style capacity-based einsum dispatch.
+
+TPU-native formulation: tokens are grouped per batch row, each expert has
+capacity ``c = ceil(S/E · cf · k)``, and dispatch/combine are dense one-hot
+einsums that GSPMD shards cleanly (groups → ``data`` axis, experts →
+``model`` axis ⇒ the dispatch einsum lowers to an all-to-all on ``model``).
+Supports top-1 (llama4-maverick) and top-2 (arctic) routing plus arctic's
+parallel dense-residual MLP. Overflowing tokens are dropped (contribute zero
+from the MoE branch) per the standard capacity formulation; the router
+aux-loss pushes load balance so drops stay rare.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import dense_init, swiglu
+
+
+def init_moe_params(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32, fan_in=d),
+        "w_gate": dense_init(ks[1], (e, d, f), dtype, fan_in=d),
+        "w_up": dense_init(ks[2], (e, d, f), dtype, fan_in=d),
+        "w_down": dense_init(ks[3], (e, f, d), dtype, fan_in=f),
+    }
+    if cfg.moe_dense_residual:
+        p["res_gate"] = dense_init(ks[4], (d, f), dtype, fan_in=d)
+        p["res_up"] = dense_init(ks[5], (d, f), dtype, fan_in=d)
+        p["res_down"] = dense_init(ks[6], (f, d), dtype, fan_in=f)
+    return p
+
+
+def capacity(seq: int, n_experts: int, k: int, cf: float) -> int:
+    return max(1, int(math.ceil(seq / n_experts * cf * k)))
+
+
+def moe_block(x: jax.Array, p: dict, cfg: ModelConfig
+              ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (y, aux_loss). Dense-dispatch MoE with capacity.
+
+    GShard grouping: sequences longer than ``cfg.moe_group`` are split into
+    groups of that many tokens, each with its own capacity — otherwise the
+    (tokens, E, c) dispatch tensor grows quadratically with S (a 32k
+    sequence would need a ~TB dispatch tensor; grouped it is O(S·E·c/g)).
+    The (B·groups) leading dim keeps the batch ('data') sharding.
+    """
+    B0, S0, D = x.shape
+    g = getattr(cfg, "moe_group", 4096) or 4096
+    grouped = S0 > g and S0 % g == 0
+    if grouped:
+        x = x.reshape(B0 * (S0 // g), g, D)
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_tok
+    c = capacity(S, E, k, cfg.capacity_factor)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    gates = jax.nn.softmax(logits, axis=-1)                     # (B,S,E)
+
+    # top-k selection, sequential capacity accounting across ranks
+    topk_gate, topk_idx = jax.lax.top_k(gates, k)               # (B,S,k)
+    # normalize selected gates to sum to 1 (standard top-2 renorm)
+    topk_gate = topk_gate / jnp.maximum(
+        topk_gate.sum(-1, keepdims=True), 1e-9)
+
+    counts = jnp.zeros((B, E), jnp.int32)
+    dispatch = jnp.zeros((B, S, E, c), x.dtype)
+    combine = jnp.zeros((B, S, E, c), jnp.float32)
+    for r in range(k):
+        onehot = jax.nn.one_hot(topk_idx[..., r], E, dtype=jnp.int32)  # (B,S,E)
+        pos = jnp.cumsum(onehot, axis=1) - onehot + counts[:, None, :]
+        keep = (pos < c) & (onehot > 0)
+        slot = jax.nn.one_hot(jnp.clip(pos, 0, c - 1), c, dtype=x.dtype)
+        disp_r = keep[..., None].astype(x.dtype) * onehot[..., None].astype(x.dtype) * slot
+        dispatch = dispatch + disp_r
+        combine = combine + disp_r.astype(jnp.float32) * topk_gate[..., r][..., None, None]
+        counts = counts + jnp.sum(onehot, axis=1)
+
+    # expert compute: (B,S,E,c) x (B,S,D) -> (E,B,c,D)
+    xe = jnp.einsum("bsec,bsd->ebcd", dispatch, x)
+    g = jnp.einsum("ebcd,edf->ebcf", xe, p["w_gate"])
+    u = jnp.einsum("ebcd,edf->ebcf", xe, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    yo = jnp.einsum("ebcf,efd->ebcd", h, p["w_down"])
+    y = jnp.einsum("ebcd,bsec->bsd", yo, combine.astype(x.dtype))
+
+    if cfg.moe_dense_residual:
+        y = y + swiglu(x, p["res_gate"], p["res_up"], p["res_down"])
+
+    # GShard aux load-balance loss: E * Σ_e f_e · P_e
+    me = jnp.mean(gates, axis=(0, 1))                            # (E,)
+    fe = jnp.mean(
+        jax.nn.one_hot(topk_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(me * fe)
+    if grouped:
+        y = y.reshape(B0, S0, D)
+    return y, aux

@@ -1,0 +1,252 @@
+"""Mamba2 / SSD (state-space duality) blocks  [arXiv:2405.21060].
+
+Scalar-A-per-head SSD recurrence:
+
+    h_t = exp(A·dt_t) · h_{t-1} + dt_t · B_t ⊗ x_t        (state: hd × N)
+    y_t = C_t · h_t + D ⊙ x_t
+
+Three compute paths, all numerically the same recurrence:
+
+- :func:`ssd_chunked`   — training/prefill: chunked "quadratic-within,
+  recurrent-across" algorithm (sub-quadratic in S, MXU-friendly intra-chunk
+  matmuls; this is the paper's SSD duality and the shape the Pallas kernel
+  ``kernels/ssd`` implements per chunk),
+- :func:`ssd_decode_step` — O(1)-state single-token serving step (what makes
+  `long_500k` native for SSM/hybrid archs),
+- a pure ``lax.scan`` token-recurrence lives in ``kernels/ssd/ref.py`` as the
+  oracle both are tested against.
+
+Speculative-decoding note (DESIGN.md §Arch-applicability): verification
+recomputes the window through :func:`ssd_chunked` from the window-start
+state *without* committing it; the engine advances the state only over
+accepted tokens — the SSM analogue of attention-cache rollback.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import dense_init, rms_norm
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.ssm_d_inner + 2 * cfg.ssm_state
+
+
+def init_ssm_params(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    din = cfg.ssm_d_inner
+    nh = cfg.ssm_heads
+    st = cfg.ssm_state
+    cd = conv_dim(cfg)
+    ks = jax.random.split(key, 4)
+    # in_proj emits [z(din), xBC(din+2N), dt(nh)]
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * din + 2 * st + nh), dtype, fan_in=d),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, cd), dtype, fan_in=cfg.ssm_conv),
+        "conv_b": jnp.zeros((cd,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, nh).astype(jnp.float32))),
+        "norm": jnp.zeros((din,), dtype),
+        "out_proj": dense_init(ks[2], (din, d), dtype, fan_in=din),
+    }
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: ModelConfig):
+    din, st, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :din]
+    xBC = zxbcdt[..., din:din + din + 2 * st]
+    dt = zxbcdt[..., -nh:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None):
+    """Depthwise causal conv over time. xBC: (B,S,C); w: (K,C).
+    ``tail``: (B,K-1,C) carry-in state. Returns (out, new_tail)."""
+    K = w.shape[0]
+    B, S, C = xBC.shape
+    if tail is None:
+        tail = jnp.zeros((B, K - 1, C), xBC.dtype)
+    ext = jnp.concatenate([tail, xBC], axis=1)          # (B, S+K-1, C)
+    out = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(K):
+        out = out + ext[:, i:i + S, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = jax.nn.silu(out + b.astype(jnp.float32)).astype(xBC.dtype)
+    new_tail = ext[:, S:, :] if K > 1 else tail
+    return out, new_tail
+
+
+class SSDState(NamedTuple):
+    h: jax.Array          # (B, nh, hd, N) float32
+    conv_tail: jax.Array  # (B, K-1, conv_dim)
+
+
+def ssd_chunk(x, Bm, Cm, dt, A, h_in):
+    """One SSD chunk (the Pallas-kernel unit).
+
+    x:  (B, L, nh, hd)   — inputs (post conv/split)
+    Bm: (B, L, N), Cm: (B, L, N)   — shared across heads (n_groups = 1)
+    dt: (B, L, nh) (already softplus'ed), A: (nh,) negative reals
+    h_in: (B, nh, hd, N) float32
+    Returns (y (B,L,nh,hd), h_out).
+    """
+    Bsz, L, nh, hd = x.shape
+    la = A[None, None, :] * dt                      # (B,L,nh) log-decay ≤ 0
+    Lc = jnp.cumsum(la, axis=1)                     # (B,L,nh)
+
+    # inter-chunk: contribution of the carried-in state
+    y_state = jnp.einsum("bln,bhdn->blhd", Cm.astype(jnp.float32), h_in) \
+        * jnp.exp(Lc)[..., None]
+
+    # intra-chunk quadratic form: w(t,s) = exp(Lc_t - Lc_s) for s ≤ t
+    seg = Lc[:, :, None, :] - Lc[:, None, :, :]     # (B,t,s,nh)
+    mask = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])[None, ..., None]
+    w = jnp.where(mask, jnp.exp(seg), 0.0)          # (B,t,s,nh)
+    cb = jnp.einsum("btn,bsn->bts", Cm.astype(jnp.float32),
+                    Bm.astype(jnp.float32))         # (B,t,s)
+    scores = cb[..., None] * w * dt[:, None, :, :]  # (B,t,s,nh)
+    y_intra = jnp.einsum("btsh,bshd->bthd", scores, x.astype(jnp.float32))
+
+    # state update across the chunk
+    decay_out = jnp.exp(Lc[:, -1:, :] - Lc)         # (B,L,nh) exp(Σ_{r>s} la_r)
+    contrib = jnp.einsum("blh,bln,blhd->bhdn",
+                         decay_out * dt, Bm.astype(jnp.float32),
+                         x.astype(jnp.float32))
+    h_out = jnp.exp(Lc[:, -1, :])[..., None, None] * h_in + contrib
+    return (y_state + y_intra), h_out
+
+
+def ssd_chunked(x, Bm, Cm, dt, A, h_in, chunk: int):
+    """Scan :func:`ssd_chunk` across S/chunk chunks. S must be a multiple of
+    ``chunk`` (model.py pads). Shapes as in ssd_chunk with L = S."""
+    Bsz, S, nh, hd = x.shape
+    n_chunks = S // chunk
+
+    def to_chunks(a):
+        return a.reshape(Bsz, n_chunks, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    xs = (to_chunks(x), to_chunks(Bm), to_chunks(Cm), to_chunks(dt))
+
+    def step(h, inp):
+        xc, bc, cc, dtc = inp
+        y, h = ssd_chunk(xc, bc, cc, dtc, A, h)
+        return h, y
+
+    h_out, ys = jax.lax.scan(step, h_in, xs)
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, nh, hd)
+    return y, h_out
+
+
+def ssd_decode_step(x, Bm, Cm, dt, A, h_in):
+    """Single-token recurrence. x: (B,nh,hd); Bm,Cm: (B,N); dt: (B,nh)."""
+    a = jnp.exp(A[None, :] * dt)                          # (B,nh)
+    upd = jnp.einsum("bh,bn,bhd->bhdn", dt, Bm.astype(jnp.float32),
+                     x.astype(jnp.float32))
+    h = a[..., None, None] * h_in + upd
+    y = jnp.einsum("bn,bhdn->bhd", Cm.astype(jnp.float32), h)
+    return y, h
+
+
+# --------------------------------------------------------------------------
+# Full block (proj → conv → SSD → gated norm → out proj)
+# --------------------------------------------------------------------------
+
+def ssm_block_train(x: jax.Array, p: dict, cfg: ModelConfig,
+                    state: Optional[SSDState] = None,
+                    use_kernel: bool = False,
+                    seq_lens: Optional[jax.Array] = None
+                    ) -> tuple[jax.Array, SSDState]:
+    """x: (B, S, D) → (y (B,S,D), final state). Sub-quadratic in S.
+
+    ``seq_lens`` (B,) — right-padded batches: positions ≥ len are *identity*
+    for the recurrence (dt masked to 0 ⇒ decay 1, contribution 0) and the
+    conv tail is gathered at each sequence's true end, so the final state is
+    exactly the state after the valid prefix.
+    """
+    B, S, D = x.shape
+    nh, hd, st = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xBC_raw, dt = _split_proj(zxbcdt, cfg)
+    tail = state.conv_tail if state is not None else \
+        jnp.zeros((B, cfg.ssm_conv - 1, xBC_raw.shape[-1]), x.dtype)
+    xBC, new_tail = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"], tail)
+    if seq_lens is not None:
+        # per-seq conv tail: raw inputs at positions len-K+1 .. len-1
+        ext = jnp.concatenate([tail, xBC_raw], axis=1)      # (B, K-1+S, C)
+        K1 = cfg.ssm_conv - 1
+        new_tail = jax.vmap(
+            lambda e, l: jax.lax.dynamic_slice_in_dim(e, l, K1, axis=0)
+        )(ext, seq_lens)
+    xs = xBC[..., :cfg.ssm_d_inner].reshape(B, S, nh, hd)
+    Bm = xBC[..., cfg.ssm_d_inner:cfg.ssm_d_inner + st]
+    Cm = xBC[..., cfg.ssm_d_inner + st:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if seq_lens is not None:
+        valid = (jnp.arange(S)[None, :] < seq_lens[:, None])[..., None]
+        dt = jnp.where(valid, dt, 0.0)
+    A = -jnp.exp(p["A_log"])
+    h_in = state.h if state is not None else \
+        jnp.zeros((B, nh, hd, st), jnp.float32)
+
+    # pad S to a chunk multiple
+    chunk = min(cfg.ssm_chunk, S) or S
+    pad = (-S) % chunk
+    if pad:
+        padspec = [(0, 0), (0, pad)]
+        xs = jnp.pad(xs, padspec + [(0, 0), (0, 0)])
+        Bm = jnp.pad(Bm, padspec + [(0, 0)])
+        Cm = jnp.pad(Cm, padspec + [(0, 0)])
+        dt = jnp.pad(dt, padspec + [(0, 0)])
+    if use_kernel:
+        from ..kernels.ssd.ops import ssd_chunked_kernel
+        y, h = ssd_chunked_kernel(xs, Bm, Cm, dt, A, h_in, chunk)
+    else:
+        y, h = ssd_chunked(xs, Bm, Cm, dt, A, h_in, chunk)
+    if pad:
+        # dt is padded with zeros AFTER softplus ⇒ padded steps have decay
+        # exp(A·0)=1 and contribution dt·B⊗x = 0: identity on the state, so
+        # h is exact; only the (discarded) padded y rows are garbage.
+        y = y[:, :S]
+    y = y + (p["D"][None, None, :, None] * xs[:, :S].astype(jnp.float32))
+    y = y.reshape(B, S, cfg.ssm_d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, SSDState(h=h, conv_tail=new_tail)
+
+
+def ssm_block_decode(x: jax.Array, p: dict, cfg: ModelConfig,
+                     state: SSDState) -> tuple[jax.Array, SSDState]:
+    """Single-token step. x: (B, 1, D)."""
+    B = x.shape[0]
+    nh, hd, st = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    # conv via explicit tail concat (width K): newest input last
+    ext = jnp.concatenate([state.conv_tail, xBC], axis=1)     # (B, K, C)
+    K = p["conv_w"].shape[0]
+    out = jnp.einsum("bkc,kc->bc", ext[:, -K:].astype(jnp.float32),
+                     p["conv_w"].astype(jnp.float32))
+    xBC1 = jax.nn.silu(out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    new_tail = ext[:, 1:, :] if K > 1 else state.conv_tail
+
+    xs = xBC1[..., :cfg.ssm_d_inner].reshape(B, nh, hd)
+    Bm = xBC1[..., cfg.ssm_d_inner:cfg.ssm_d_inner + st]
+    Cm = xBC1[..., cfg.ssm_d_inner + st:]
+    dts = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h = ssd_decode_step(xs, Bm, Cm, dts, A, state.h)
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, 1, cfg.ssm_d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, SSDState(h=h, conv_tail=new_tail)

@@ -1,0 +1,4 @@
+"""Serving substrate: batched request serving over the SD engine."""
+
+from .server import (ServeRequest, ServeResult, ServerConfig,
+                     SpecDecodeServer)

@@ -1,0 +1,83 @@
+"""Activation-sharding runtime hook.
+
+``lax.scan`` over layers stores the carry (B, S, D) per layer as the
+backward residual; unconstrained, XLA may keep it replicated over the
+``model`` axis — 80-layer × multi-GB residuals blow the 16 GB/chip budget.
+The launcher installs a sequence-parallel constraint (batch→data,
+seq→model) that model code applies at every layer boundary via
+:func:`constrain`; outside the launcher (tests, single-device runs) the hook
+is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+_ACTIVATION_SHARDING: Optional[jax.sharding.NamedSharding] = None
+_QKV_SHARDING: Optional[jax.sharding.NamedSharding] = None
+_LOGITS_SHARDING: Optional[jax.sharding.NamedSharding] = None
+_HEAD_IN_SHARDING: Optional[jax.sharding.NamedSharding] = None
+
+
+def set_activation_sharding(sharding) -> None:
+    global _ACTIVATION_SHARDING
+    _ACTIVATION_SHARDING = sharding
+
+
+@contextlib.contextmanager
+def activation_sharding(sharding, qkv=None, logits=None, head_in=None):
+    """Install residual (B,S,D), q/k/v (B,T,H,hd), and lm-head constraints."""
+    global _ACTIVATION_SHARDING, _QKV_SHARDING, _LOGITS_SHARDING, \
+        _HEAD_IN_SHARDING
+    prev = (_ACTIVATION_SHARDING, _QKV_SHARDING, _LOGITS_SHARDING,
+            _HEAD_IN_SHARDING)
+    _ACTIVATION_SHARDING = sharding
+    _QKV_SHARDING = qkv
+    _LOGITS_SHARDING = logits
+    _HEAD_IN_SHARDING = head_in
+    try:
+        yield
+    finally:
+        (_ACTIVATION_SHARDING, _QKV_SHARDING, _LOGITS_SHARDING,
+         _HEAD_IN_SHARDING) = prev
+
+
+def _apply(h: jax.Array, s) -> jax.Array:
+    if s is None or len(s.spec) != h.ndim:
+        return h
+    # fit the spec to the concrete shape: axes that don't divide a dim are
+    # relocated (e.g. 8 kv heads can't shard over model=16 — padding them
+    # doubles the score tensors; shard head_dim instead)
+    from .specs import fit_spec
+    fitted = fit_spec(s.mesh, s.spec, tuple(h.shape))
+    return jax.lax.with_sharding_constraint(
+        h, jax.sharding.NamedSharding(s.mesh, fitted))
+
+
+def constrain(h: jax.Array) -> jax.Array:
+    """Residual-stream constraint (sequence-parallel scan carry)."""
+    return _apply(h, _ACTIVATION_SHARDING)
+
+
+def constrain_qkv(x: jax.Array) -> jax.Array:
+    """Head-parallel constraint on attention q/k/v projections. Forces the
+    seq-parallel↔head-parallel transition onto the small (B,S,H,hd)
+    projections — without it XLA reshards the O(S²) attention-weight tensors
+    in the backward pass (observed: 24 GiB f32 all-gathers, command-r
+    train_4k; EXPERIMENTS.md §Perf cycle 1)."""
+    return _apply(x, _QKV_SHARDING)
+
+
+def constrain_head_in(h: jax.Array) -> jax.Array:
+    """De-seq-shard the hidden states entering the lm head (vocab-parallel
+    CE needs the contraction dims unsharded on 'model')."""
+    return _apply(h, _HEAD_IN_SHARDING)
+
+
+def constrain_logits(x: jax.Array) -> jax.Array:
+    """Vocab-parallel logits: keeps the lm_head gradient sharded (D, V/16)
+    instead of a replicated post-psum (D, V) f32 (§Perf cycle 6)."""
+    return _apply(x, _LOGITS_SHARDING)

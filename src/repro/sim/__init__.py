@@ -1,0 +1,26 @@
+"""DSD-Sim — request-level discrete-event simulator for distributed
+speculative decoding (paper §3)."""
+
+from .events import Environment, Store
+from .network import Link, LinkSpec
+from .hwmodel import DEVICES, MODELS, HardwareModel, ModelDesc, OpShape, register_model
+from .trace import (PROFILES, AcceptanceCursor, DatasetProfile, TraceRecord,
+                    WorkloadGenerator, load_trace, save_trace)
+from .policies import (BATCHING, ROUTING, BatchingConfig, FIFOBatching,
+                       JSQRouting, LengthAwareBatching, RandomRouting,
+                       RoundRobinRouting)
+from .scheduler import ClusterSpec, DSDSimulation, Job, PolicyStack
+from .analyzer import Analyzer, RequestMetrics
+from .config import (SimSpec, auto_topology, build_simulation, load, loads,
+                     simulate_from_yaml)
+
+__all__ = [
+    "Environment", "Store", "Link", "LinkSpec", "DEVICES", "MODELS",
+    "HardwareModel", "ModelDesc", "OpShape", "register_model", "PROFILES",
+    "AcceptanceCursor", "DatasetProfile", "TraceRecord", "WorkloadGenerator",
+    "load_trace", "save_trace", "BATCHING", "ROUTING", "BatchingConfig",
+    "FIFOBatching", "JSQRouting", "LengthAwareBatching", "RandomRouting",
+    "RoundRobinRouting", "ClusterSpec", "DSDSimulation", "Job", "PolicyStack",
+    "Analyzer", "RequestMetrics", "SimSpec", "auto_topology",
+    "build_simulation", "load", "loads", "simulate_from_yaml",
+]

@@ -1,0 +1,89 @@
+"""Network links for DSD-Sim.
+
+Links are delay elements attached to send/receive events (paper §3.1):
+each message experiences RTT/2 one-way latency plus sampled jitter plus a
+serialization term (payload_bytes / bandwidth). Jitter is drawn from a
+truncated normal so the link never goes acausal.
+
+The draft→target payload of a speculation window is tiny (γ token ids +
+metadata ≈ tens of bytes), so serialization only matters when users configure
+KV-shipping modes; we still model it for completeness.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from .events import Environment
+
+
+@dataclass
+class LinkSpec:
+    rtt_ms: float = 10.0
+    jitter_ms: float = 1.0
+    bandwidth_gbps: float = 1.0  # edge uplink
+    name: str = "edge-cloud"
+
+
+class Link:
+    """One-way message delivery with RTT/2 + jitter + serialization delay."""
+
+    def __init__(self, env: Environment, spec: LinkSpec, rng: random.Random):
+        self.env = env
+        self.spec = spec
+        self.rng = rng
+        self.bytes_sent = 0
+        self.messages_sent = 0
+        # Running latency stats feed the AWC feature vector (RTT_recent).
+        self._recent_delays: list[float] = []
+
+    def one_way_ms(self, payload_bytes: int = 64) -> float:
+        half_rtt = self.spec.rtt_ms / 2.0
+        jitter = self.rng.gauss(0.0, self.spec.jitter_ms / 2.0)
+        jitter = max(-half_rtt * 0.9, min(jitter, self.spec.jitter_ms * 4))
+        ser_ms = payload_bytes * 8 / (self.spec.bandwidth_gbps * 1e9) * 1e3
+        return max(0.0, half_rtt + jitter + ser_ms)
+
+    def send(self, payload_bytes: int, deliver: Callable[[], Any]) -> None:
+        """Schedule ``deliver`` after the one-way delay."""
+        delay = self.one_way_ms(payload_bytes)
+        self.bytes_sent += payload_bytes
+        self.messages_sent += 1
+        self._recent_delays.append(delay)
+        if len(self._recent_delays) > 256:
+            del self._recent_delays[:128]
+        self.env._schedule(self.env.now + delay, deliver)
+
+    def transfer(self, payload_bytes: int = 64):
+        """Event-style API: ``yield link.transfer(n)`` inside a process."""
+        delay = self.one_way_ms(payload_bytes)
+        self.bytes_sent += payload_bytes
+        self.messages_sent += 1
+        self._recent_delays.append(delay)
+        if len(self._recent_delays) > 256:
+            del self._recent_delays[:128]
+        return self.env.timeout(delay)
+
+    @property
+    def recent_rtt_ms(self) -> float:
+        if not self._recent_delays:
+            return self.spec.rtt_ms
+        tail = self._recent_delays[-32:]
+        return 2.0 * sum(tail) / len(tail)
+
+
+def window_payload_bytes(gamma: int) -> int:
+    """Draft→target payload: token ids (4B) + per-token draft prob (4B) + header."""
+    return 48 + 8 * gamma
+
+
+def verdict_payload_bytes(gamma: int) -> int:
+    """Target→draft payload: accept count + corrected/bonus token + logprobs."""
+    return 48 + 8
+
+
+def expected_one_way_ms(spec: LinkSpec, payload_bytes: int = 64) -> float:
+    return spec.rtt_ms / 2.0 + payload_bytes * 8 / (spec.bandwidth_gbps * 1e9) * 1e3

@@ -1,0 +1,49 @@
+"""Checkpointing: flatten a pytree of arrays to an .npz with path-encoded
+keys; restore onto an existing structure (shape/dtype checked)."""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+_SEP = "|"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves_with_paths:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(tree: Any, path: str) -> None:
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:        # file object: numpy won't append .npz
+        np.savez(f, **_flatten(tree))
+    os.replace(tmp, path)
+
+
+def restore(template: Any, path: str) -> Any:
+    """Restore into the structure of ``template`` (a pytree of arrays)."""
+    z = np.load(path)
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    new_leaves = []
+    for pth, leaf in leaves_with_paths:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in pth)
+        if key not in z:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = z[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -1,0 +1,132 @@
+"""AWC tests: WC-DNN architecture/training, stabilization semantics
+(clamp / EMA / hysteresis), policy integration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.awc import model as wcdnn
+from repro.core.awc.stabilize import StabilizerConfig, WindowStabilizer
+from repro.core.awc.train import TrainConfig, train
+from repro.core.window import (AWCWindowPolicy, DynamicWindowPolicy,
+                               FeatureSnapshot, StaticWindowPolicy)
+
+
+def _feats(alpha=0.7, rtt=10.0, q=0.2, tpot=40.0, gp=4.0):
+    return FeatureSnapshot(q_depth=q, alpha_recent=alpha, rtt_recent_ms=rtt,
+                           tpot_recent_ms=tpot, gamma_prev=gp)
+
+
+# ------------------------------------------------------------------ WC-DNN
+
+def test_wcdnn_forward_shapes():
+    p = wcdnn.init(jax.random.PRNGKey(0))
+    x = jnp.ones((7, 5))
+    out = wcdnn.forward(p, x)
+    assert out.shape == (7,)
+    assert wcdnn.forward(p, jnp.ones(5)).shape == ()
+
+
+def test_wcdnn_numpy_predictor_matches_jax():
+    p = wcdnn.init(jax.random.PRNGKey(1))
+    pred = wcdnn.numpy_predictor(p)
+    x = np.random.default_rng(0).normal(size=(10, 5)).astype(np.float32)
+    jx = np.asarray(wcdnn.forward(p, jnp.asarray(x)))
+    nx = np.array([pred(list(row)) for row in x])
+    np.testing.assert_allclose(jx, nx, atol=1e-5)
+
+
+def test_wcdnn_learns_synthetic_mapping():
+    """Supervised regression (L1+AdamW) fits a nonlinear γ(features) map."""
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(2000, 5)).astype(np.float32)
+    y = (4 + 3 * np.tanh(X[:, 1]) - 2 * np.tanh(X[:, 2]) +
+         np.clip(X[:, 0], -1, 1)).astype(np.float32)
+    params, info = train(X, y, TrainConfig(epochs=40, lr=3e-3, seed=0))
+    assert info["val_mae"] < 0.35, info
+
+
+def test_wcdnn_save_load_roundtrip(tmp_path):
+    p = wcdnn.init(jax.random.PRNGKey(2))
+    path = str(tmp_path / "wc.npz")
+    wcdnn.save(p, path)
+    q = wcdnn.load(path)
+    x = jnp.ones((3, 5))
+    np.testing.assert_allclose(np.asarray(wcdnn.forward(p, x)),
+                               np.asarray(wcdnn.forward(q, x)))
+
+
+# --------------------------------------------------------------- stabilizer
+
+def test_clamping():
+    st = WindowStabilizer(StabilizerConfig(clamp_lo=1, clamp_hi=12))
+    g, _ = st.step(99.0)
+    assert g <= 12
+    st.reset()
+    g, _ = st.step(-5.0)
+    assert g >= 1
+
+
+def test_ema_smooths_oscillation():
+    st = WindowStabilizer(StabilizerConfig(ema_alpha=0.4))
+    outs = [st.step(v)[0] for v in [2, 10, 2, 10, 2, 10, 2, 10]]
+    # raw oscillation amplitude 8; EMA output must stay well inside
+    assert max(outs) - min(outs) < 8
+
+
+def test_hysteresis_requires_k_consecutive_low_steps():
+    cfg = StabilizerConfig(hysteresis_k=2, ema_alpha=1.0)  # no smoothing
+    st = WindowStabilizer(cfg)
+    assert st.step(5.0)[1] == "distributed"
+    assert st.step(1.0)[1] == "distributed"    # 1st low step: still sticky
+    assert st.step(1.0)[1] == "fused"          # 2nd consecutive: switch
+    # leaving fused also needs k consecutive high predictions
+    assert st.step(8.0)[1] == "fused"
+    assert st.step(8.0)[1] == "distributed"
+
+
+def test_fused_mode_forces_gamma_one():
+    st = WindowStabilizer(StabilizerConfig(hysteresis_k=1, ema_alpha=1.0))
+    g, mode = st.step(0.5)
+    assert mode == "fused" and g == 1
+
+
+# ------------------------------------------------------------------ policies
+
+def test_static_policy_constant():
+    p = StaticWindowPolicy(6)
+    for a in (0.1, 0.9):
+        d = p.decide("x", _feats(alpha=a))
+        assert d.gamma == 6 and d.mode == "distributed"
+
+
+def test_dynamic_policy_thresholds():
+    p = DynamicWindowPolicy(hi=0.75, lo=0.25, gamma0=4)
+    assert p.decide("k", _feats(alpha=0.9)).gamma == 5    # grows
+    assert p.decide("k", _feats(alpha=0.9)).gamma == 6
+    assert p.decide("k", _feats(alpha=0.1)).gamma == 5    # shrinks
+    assert p.decide("other", _feats(alpha=0.5)).gamma == 4  # per-pair state
+
+
+def test_awc_policy_per_pair_state():
+    calls = []
+
+    def pred(f):
+        calls.append(f)
+        return 1.0 if f[1] < 0.3 else 8.0
+
+    p = AWCWindowPolicy(pred)
+    # low-acceptance pair trends to fused
+    for _ in range(4):
+        d_low = p.decide("low", _feats(alpha=0.1))
+    d_high = p.decide("high", _feats(alpha=0.9))
+    assert d_low.mode == "fused" and d_low.gamma == 1
+    assert d_high.mode == "distributed" and d_high.gamma >= 4
+
+
+def test_bootstrap_gamma_sane():
+    # high acceptance + high RTT → large window; low acceptance → small
+    hi = wcdnn.bootstrap_gamma([0.1, 0.9, 60.0, 40.0, 4.0])
+    lo = wcdnn.bootstrap_gamma([0.1, 0.2, 5.0, 40.0, 4.0])
+    assert hi >= 6
+    assert lo <= 3

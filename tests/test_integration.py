@@ -1,0 +1,108 @@
+"""Cross-layer integration tests: MoE grouping, AWC-in-the-engine,
+chunked prefill equivalence, trace capture → simulator replay."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.configs.base import ModelConfig
+from repro.core.engine import SpecDecodeEngine
+from repro.core.window import AWCWindowPolicy, StaticWindowPolicy
+from repro.core.awc.model import bootstrap_gamma, default_predictor
+from repro.models import build_model
+from repro.sim import (ClusterSpec, DSDSimulation, LinkSpec, PolicyStack,
+                       TraceRecord)
+from repro.sim.policies import BatchingConfig, LengthAwareBatching, JSQRouting
+
+
+def test_moe_grouping_matches_ungrouped():
+    """GShard grouping for long sequences must equal the ungrouped block
+    when capacity is non-binding."""
+    cfg = dataclasses.replace(ARCHS["llama4-maverick-400b-a17b"].reduced(),
+                              capacity_factor=8.0, moe_group=16)
+    from repro.models.moe import init_moe_params, moe_block
+    p = init_moe_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    y_grouped, _ = moe_block(x, p, cfg)   # 64 > moe_group=16 → grouped
+    cfg2 = dataclasses.replace(cfg, moe_group=4096)
+    y_plain, _ = moe_block(x, p, cfg2)    # ungrouped
+    np.testing.assert_allclose(np.asarray(y_grouped), np.asarray(y_plain),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_chunked_prefill_cache_matches_full():
+    cfg = ARCHS["qwen3-14b"].reduced()
+    m = build_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    lg_full, cache_full = m.prefill(params, toks, slots=48)
+    lg_chunk, cache_chunk = m.prefill(params, toks, slots=48, chunk=8)
+    # chunked path returns last-chunk logits only
+    np.testing.assert_allclose(np.asarray(lg_full[:, -8:]),
+                               np.asarray(lg_chunk), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(cache_full.k),
+                               np.asarray(cache_chunk.k), atol=1e-5)
+    # decode continues identically from either cache
+    pos = jnp.full((2,), 32, jnp.int32)
+    tok = jnp.argmax(lg_chunk[:, -1], -1).astype(jnp.int32)
+    a, _ = m.decode_step(params, tok, cache_full, pos)
+    b, _ = m.decode_step(params, tok, cache_chunk, pos)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_awc_policy_runs_in_engine():
+    dcfg = ModelConfig(name="d", arch_type="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                       dtype="float32", remat=False)
+    tcfg = dataclasses.replace(dcfg, name="t", n_layers=3, n_kv_heads=4)
+    eng = SpecDecodeEngine(dcfg, tcfg, temperature=0.0,
+                           key=jax.random.PRNGKey(2))
+    prompts = np.random.default_rng(0).integers(0, 128, (2, 10)).astype(np.int32)
+    for predictor in (default_predictor(), bootstrap_gamma):
+        toks, stats = eng.generate(prompts, 16, AWCWindowPolicy(predictor))
+        assert stats.tokens >= 2 * 15
+        assert all(1 <= g <= 12 for g in stats.gamma_seq)
+    # AWC output must STILL be exactly the target's greedy continuation
+    ref, _ = eng.generate(prompts, 16, StaticWindowPolicy(4))
+    awc, _ = eng.generate(prompts, 16, AWCWindowPolicy(bootstrap_gamma))
+    np.testing.assert_array_equal(ref[:, :16], awc[:, :16])
+
+
+def test_captured_traces_replay_through_sim():
+    dcfg = ModelConfig(name="d", arch_type="dense", n_layers=1, d_model=32,
+                       n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                       dtype="float32", remat=False)
+    tcfg = dataclasses.replace(dcfg, name="t", n_layers=2)
+    eng = SpecDecodeEngine(dcfg, tcfg, temperature=1.0,
+                           key=jax.random.PRNGKey(0))
+    prompts = np.random.default_rng(0).integers(0, 64, (4, 8)).astype(np.int32)
+    seqs = eng.capture_traces(prompts, 12, gamma=4)
+    records = [TraceRecord(request_id=i, prompt_length=8, output_length=12,
+                           acceptance_seq=bits, arrival_time_ms=i * 40.0,
+                           drafter_id=i, dataset="captured")
+               for i, bits in enumerate(seqs)]
+    sim = DSDSimulation(
+        ClusterSpec(num_targets=1, num_drafters=4, link=LinkSpec(rtt_ms=5.0)),
+        PolicyStack(routing=JSQRouting(), batching=LengthAwareBatching(),
+                    batching_cfg=BatchingConfig(max_batch=4),
+                    window=StaticWindowPolicy(4)),
+        records)
+    s = sim.run().summary()
+    assert s["completed"] == 4
+    assert 0.0 <= s["acceptance_rate"] <= 1.0
+
+
+def test_heterogeneous_cluster_pools():
+    from repro.sim.scheduler import PAPER_DRAFT_POOL, PAPER_TARGET_POOL
+    cl = ClusterSpec(num_targets=3, num_drafters=6,
+                     target_pool=PAPER_TARGET_POOL,
+                     draft_pool=PAPER_DRAFT_POOL)
+    assert cl.target_at(0)[0] == "A100"
+    assert cl.target_at(1)[1] == "qwen-72b"
+    assert cl.target_at(3) == cl.target_at(0)     # round-robin
+    assert cl.draft_at(1) == ("V100", "qwen-7b")
+    homo = ClusterSpec()
+    assert homo.target_at(7) == ("A100", "llama2-70b", 4)

@@ -1,0 +1,116 @@
+"""Hypothesis property-based tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.awc.stabilize import StabilizerConfig, WindowStabilizer
+from repro.core.specdec import expected_accepted, expected_speedup
+from repro.kernels.verify import verify_reference
+from repro.sim.trace import AcceptanceCursor, markov_acceptance_seq
+from repro.sim import loads as yaml_loads
+from repro.sim.hwmodel import HardwareModel, OpShape
+import random
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(2, 6), st.integers(16, 64),
+       st.integers(0, 2 ** 31 - 1))
+def test_verify_invariants(B, G, V, seed):
+    """0 ≤ n_accepted ≤ γ; next_token ∈ [0, V); num_new = n_accepted + 1;
+    accepted prefix is contiguous."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    p = jax.nn.softmax(jax.random.normal(ks[0], (B, G + 1, V)) * 3, -1)
+    q = jax.nn.softmax(jax.random.normal(ks[1], (B, G, V)) * 3, -1)
+    toks = jax.random.categorical(ks[2], jnp.log(q), axis=-1).astype(jnp.int32)
+    u = jax.random.uniform(ks[3], (B, G))
+    r = jax.random.uniform(ks[4], (B,))
+    out = verify_reference(toks, q, p, u, r)
+    n = np.asarray(out.n_accepted)
+    t = np.asarray(out.next_token)
+    m = np.asarray(out.accept_mask)
+    assert ((0 <= n) & (n <= G)).all()
+    assert ((0 <= t) & (t < V)).all()
+    # contiguous prefix: mask[:, :n] all True, mask[:, n] False (if n < G)
+    for b in range(B):
+        assert m[b, : n[b]].all()
+        if n[b] < G:
+            assert not m[b, n[b]]
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.01, 0.99), st.integers(1, 16))
+def test_eq1_bounds(alpha, gamma):
+    """1 ≤ E[τ] ≤ γ+1 and monotone in α."""
+    e = float(expected_accepted(alpha, gamma))
+    assert 1.0 - 1e-5 <= e <= gamma + 1 + 1e-5
+    e2 = float(expected_accepted(min(0.999, alpha + 0.2), gamma))
+    assert e2 >= e - 1e-5
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-50, 50), min_size=1, max_size=40),
+       st.integers(1, 4))
+def test_stabilizer_output_always_in_range(raws, k):
+    stab = WindowStabilizer(StabilizerConfig(hysteresis_k=k))
+    for r in raws:
+        g, mode = stab.step(r)
+        assert 1 <= g <= 12
+        assert mode in ("distributed", "fused")
+        if mode == "fused":
+            assert g == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.05, 0.95), st.floats(0.0, 0.9),
+       st.integers(10, 400))
+def test_markov_acceptance_stationary_rate(seed, alpha, rho, n):
+    rng = random.Random(seed)
+    seq = markov_acceptance_seq(rng, n, alpha, rho)
+    assert len(seq) == n
+    assert set(seq) <= {0, 1}
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 1), min_size=1, max_size=64),
+       st.integers(1, 12))
+def test_acceptance_cursor_consume(seq, gamma):
+    cur = AcceptanceCursor(seq)
+    n, all_acc = cur.consume(gamma)
+    assert 0 <= n <= gamma
+    assert all_acc == (n == gamma)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 32), st.integers(0, 4096),
+       st.sampled_from(["A40", "A100", "H100", "TPUv5e"]),
+       st.sampled_from(["llama2-7b", "llama2-70b"]))
+def test_hwmodel_latency_positive_and_monotone_in_batch(
+        batch, tokens, ctx, hw, model):
+    hm = HardwareModel()
+    shp1 = OpShape(context_lens=[ctx] * batch, new_tokens=[tokens] * batch)
+    shp2 = OpShape(context_lens=[ctx] * (batch + 1),
+                   new_tokens=[tokens] * (batch + 1))
+    t1 = hm.predict("decode", shp1, hw, model)
+    t2 = hm.predict("decode", shp2, hw, model)
+    assert t1 > 0
+    assert t2 >= t1 - 1e-12          # more work never takes less time
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.dictionaries(
+    st.text(alphabet="abcdefgh", min_size=1, max_size=6),
+    st.one_of(st.integers(-1000, 1000), st.booleans(),
+              st.text(alphabet="xyz", min_size=0, max_size=5)),
+    min_size=0, max_size=6))
+def test_miniyaml_roundtrip_flat_dicts(d):
+    text = "\n".join(
+        f"{k}: {repr(v) if isinstance(v, str) else v}" for k, v in d.items())
+    parsed = yaml_loads(text)
+    if not d:
+        assert parsed is None
+        return
+    for k, v in d.items():
+        assert parsed[k] == v

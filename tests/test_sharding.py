@@ -1,0 +1,131 @@
+"""Sharding-spec and dry-run plumbing tests (no 512-device init needed:
+fit_spec only reads mesh axis sizes, and the collective parser is pure)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.sharding.specs import fit_spec
+from repro.launch.dryrun import parse_collectives, _shape_bytes
+from repro.launch.shapes import SHAPES
+
+
+def _mesh(multi=False):
+    if multi:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+# ----------------------------------------------------------------- fit_spec
+
+def test_fit_spec_keeps_divisible():
+    m = _mesh()
+    assert fit_spec(m, P("data", "model"), (4096, 11008)) == P("data", "model")
+
+
+def test_fit_spec_relocates_nondivisible_axis():
+    m = _mesh()
+    # 40 heads can't shard over model=16 → model moves to head_dim=128
+    out = fit_spec(m, P("data", "model", None), (5120, 40, 128))
+    assert out == P("data", None, "model")
+
+
+def test_fit_spec_drops_unplaceable_axis():
+    m = _mesh()
+    # odd vocab: nothing divides 16 except d_model which is taken
+    out = fit_spec(m, P("model", "data"), (51865, 384))
+    assert "model" not in jax.tree.leaves(tuple(out)) or out[0] != "model"
+    # d_model keeps its data sharding
+    assert out[1] == "data" or out[-1] == "data"
+
+
+def test_fit_spec_tuple_axis_degrades():
+    m = _mesh(multi=True)
+    # ('pod','data') = 32 doesn't divide 48 → largest dividing sub-axis (16)
+    out = fit_spec(m, P(("pod", "data"), None), (48, 128))
+    assert out[0] == "data"
+
+
+def test_fit_spec_kv_heads_to_head_dim():
+    m = _mesh()
+    # (L-free) kv cache (B, S, Hkv=8, hd=128): model relocates off kv=8
+    out = fit_spec(m, P("data", None, "model", None), (128, 32768, 8, 128))
+    padded = list(out) + [None] * (4 - len(out))
+    assert padded[2] != "model"                      # kv dim left unsharded
+    assert "model" in [a for a in padded if isinstance(a, str)]
+    assert padded[0] == "data"
+
+
+# -------------------------------------------------------- collective parser
+
+HLO_SAMPLE = """
+  %all-gather = f32[4096,512]{1,0} all-gather(%x), channel_id=1, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}
+  %all-reduce.3 = bf16[512]{0} all-reduce(%y), channel_id=2, replica_groups=[16,16]<=[256]
+  %reduce-scatter.1 = f32[32,64]{1,0} reduce-scatter(%z), replica_groups=[32,8]<=[256]
+  %add = f32[128,128]{1,0} add(%a, %b)
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    out = parse_collectives(HLO_SAMPLE)
+    kinds = out["per_kind"]
+    assert kinds["all-gather"]["count"] == 1
+    assert kinds["all-reduce"]["count"] == 1
+    assert kinds["reduce-scatter"]["count"] == 1
+    ag = 4096 * 512 * 4
+    assert kinds["all-gather"]["buffer_bytes"] == ag
+    # ring all-gather: (n-1)/n of the gathered buffer crosses each link
+    assert abs(kinds["all-gather"]["moved_bytes"] - ag * 15 / 16) < 1
+    # add op is not counted
+    assert out["buffer_bytes"] < ag + 512 * 2 + 32 * 64 * 4 + 1
+
+
+def test_shape_bytes_tuple():
+    assert _shape_bytes("(bf16[2,4], f32[8])") == 2 * 4 * 2 + 8 * 4
+    assert _shape_bytes("pred[16]") == 16
+
+
+# -------------------------------------------------------------- input shapes
+
+def test_input_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].sliding
+
+
+def test_decode_specs_are_structs_only():
+    """input_specs must not allocate device memory (ShapeDtypeStructs)."""
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    from repro.launch.shapes import input_specs
+    cfg = get_config("qwen2.5-3b")
+    model = build_model(cfg)
+    spec = input_specs(cfg, SHAPES["decode_32k"], model)
+    leaves = jax.tree.leaves(spec["cache"],
+                             is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    assert leaves, "cache spec empty"
+    for leaf in leaves:
+        assert isinstance(leaf, (jax.ShapeDtypeStruct, bool)), type(leaf)
+    assert spec["token"].shape == (128,)
+    # ring cache for long_500k on a dense arch
+    spec_l = input_specs(cfg, SHAPES["long_500k"], model)
+    assert spec_l["ring"] is True
+    assert spec_l["window"] == cfg.serve_sliding_window
+    k_struct = spec_l["cache"].k
+    assert k_struct.shape[2] == cfg.serve_sliding_window   # bounded slots
+
+
+def test_ssm_long_context_state_is_o1():
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    from repro.launch.shapes import input_specs
+    cfg = get_config("mamba2-130m")
+    model = build_model(cfg)
+    spec = input_specs(cfg, SHAPES["long_500k"], model)
+    # recurrent state carries no sequence dimension at all
+    assert spec["cache"].state.shape == (cfg.n_layers, 1, cfg.ssm_heads,
+                                         cfg.ssm_head_dim, cfg.ssm_state)

@@ -1,0 +1,186 @@
+"""DSD-Sim system behaviour tests: event core, scheduler dynamics, and the
+paper's qualitative claims (RTT crossover, JSQ under light load, LAB TPOT)."""
+
+import math
+
+import pytest
+
+from repro.sim import (ClusterSpec, DSDSimulation, Environment, JSQRouting,
+                       LengthAwareBatching, LinkSpec, PolicyStack,
+                       RandomRouting, BatchingConfig, Store, WorkloadGenerator,
+                       simulate_from_yaml, loads)
+from repro.core.window import StaticWindowPolicy, OracleStaticPolicy
+
+
+# ------------------------------------------------------------- event core
+
+def test_event_core_timeout_ordering():
+    env = Environment()
+    log = []
+
+    def proc(name, delay):
+        yield env.timeout(delay)
+        log.append((name, env.now))
+
+    env.process(proc("b", 2.0))
+    env.process(proc("a", 1.0))
+    env.process(proc("c", 2.0))   # same time as b: insertion order
+    env.run()
+    assert log == [("a", 1.0), ("b", 2.0), ("c", 2.0)]
+
+
+def test_store_blocking_get():
+    env = Environment()
+    store = Store(env)
+    got = []
+
+    def consumer():
+        item = yield store.get()
+        got.append((item, env.now))
+
+    def producer():
+        yield env.timeout(5.0)
+        store.put("x")
+
+    env.process(consumer())
+    env.process(producer())
+    env.run()
+    assert got == [("x", 5.0)]
+
+
+def test_process_join():
+    env = Environment()
+    order = []
+
+    def child():
+        yield env.timeout(3.0)
+        order.append("child")
+        return 42
+
+    def parent():
+        result = yield env.process(child())
+        order.append(("parent", result, env.now))
+
+    env.process(parent())
+    env.run()
+    assert order == ["child", ("parent", 42, 3.0)]
+
+
+def test_run_until():
+    env = Environment()
+
+    def proc():
+        for _ in range(10):
+            yield env.timeout(1.0)
+
+    env.process(proc())
+    env.run(until=4.5)
+    assert env.now == 4.5
+
+
+# --------------------------------------------------------------- scheduler
+
+def _run(rtt=10.0, window=None, routing=None, batching=None, n=60,
+         rate=30.0, seed=0, targets=2, drafters=64):
+    cluster = ClusterSpec(num_targets=targets, num_drafters=drafters,
+                          link=LinkSpec(rtt_ms=rtt, jitter_ms=1.0))
+    pol = PolicyStack(
+        routing=routing or RandomRouting(seed=seed),
+        batching=batching or LengthAwareBatching(),
+        batching_cfg=BatchingConfig(max_batch=16),
+        window=window or StaticWindowPolicy(4))
+    gen = WorkloadGenerator("gsm8k", rate, drafters, seed=seed)
+    sim = DSDSimulation(cluster, pol, gen.generate(n), seed=seed)
+    return sim.run().summary()
+
+
+def test_all_requests_complete():
+    s = _run()
+    assert s["completed"] == 60
+    assert s["throughput_rps"] > 0
+    assert s["tpot_ms"]["mean"] > 0
+    assert 0.0 < s["acceptance_rate"] <= 1.0
+
+
+def test_throughput_degrades_with_rtt():
+    lo = _run(rtt=5.0)["throughput_rps"]
+    hi = _run(rtt=80.0)["throughput_rps"]
+    assert lo > hi
+
+
+def test_fused_insensitive_to_rtt():
+    """Paper Fig. 6: fused (cloud-only) stays flat as RTT grows."""
+    f10 = _run(rtt=10.0, window=OracleStaticPolicy(1, fused=True))
+    f80 = _run(rtt=80.0, window=OracleStaticPolicy(1, fused=True))
+    # fused pays RTT only twice per request chunk batch, not per window
+    assert f80["tpot_ms"]["mean"] < f10["tpot_ms"]["mean"] * 1.6
+
+
+def test_distributed_beats_fused_at_low_rtt():
+    """Paper Fig. 6: the target-bound serving regime (many drafters per
+    target) is where distributed SD pays off; fused catches up only once
+    RTT dominates (crossover ≈40-60 ms under our calibration)."""
+    d = _run(rtt=5.0, rate=40.0, n=80)
+    f = _run(rtt=5.0, rate=40.0, n=80,
+             window=OracleStaticPolicy(1, fused=True))
+    assert d["throughput_rps"] > f["throughput_rps"]
+    d_hi = _run(rtt=100.0, rate=40.0, n=80)
+    f_hi = _run(rtt=100.0, rate=40.0, n=80,
+                window=OracleStaticPolicy(1, fused=True))
+    assert f_hi["throughput_rps"] > d_hi["throughput_rps"]
+
+
+def test_jsq_beats_random_under_light_load():
+    """Paper Fig. 8: JSQ lowers TPOT when resources are not saturated."""
+    j = _run(routing=JSQRouting(), rate=20.0, n=80)
+    r = _run(routing=RandomRouting(seed=1), rate=20.0, n=80)
+    assert j["tpot_ms"]["mean"] <= r["tpot_ms"]["mean"] * 1.05
+
+
+def test_deterministic_given_seed():
+    a = _run(seed=3)
+    b = _run(seed=3)
+    assert a["throughput_rps"] == b["throughput_rps"]
+    assert a["tpot_ms"]["mean"] == b["tpot_ms"]["mean"]
+
+
+# ------------------------------------------------------------ yaml config
+
+def test_miniyaml_parses_nested():
+    doc = loads("""
+# comment
+cluster:
+  targets: {count: 2, hw: A100, model: llama2-70b, tp: 4}
+  link: {rtt_ms: 10.5, jitter_ms: 1}
+policies:
+  routing: jsq
+  window: {kind: static, gamma: 6}
+list_field:
+  - 1
+  - two
+  - {a: 3}
+flag: true
+""")
+    assert doc["cluster"]["targets"]["count"] == 2
+    assert doc["cluster"]["link"]["rtt_ms"] == 10.5
+    assert doc["policies"]["routing"] == "jsq"
+    assert doc["list_field"] == [1, "two", {"a": 3}]
+    assert doc["flag"] is True
+
+
+def test_simulate_from_yaml_end_to_end():
+    an = simulate_from_yaml("""
+cluster:
+  targets: {count: 2, hw: A100, model: llama2-70b, tp: 4}
+  drafters: {count: 16, hw: A40, model: llama2-7b}
+  link: {rtt_ms: 10}
+policies:
+  routing: jsq
+  batching: {kind: lab, max_batch: 8}
+  window: {kind: static, gamma: 4}
+workload: {dataset: humaneval, rate_per_s: 10, num_requests: 20, seed: 1}
+""")
+    s = an.summary()
+    assert s["completed"] == 20
+    blob = an.to_json()
+    assert "throughput_rps" in blob

@@ -1,0 +1,137 @@
+"""Speculative-decoding algorithm tests: acceptance semantics, Eq. (1)/(2),
+and engine-level greedy equivalence with target-only decoding."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import (expected_accepted, expected_speedup, optimal_gamma,
+                        verify_window, verify_window_greedy)
+from repro.core.engine import SpecDecodeEngine
+from repro.core.window import StaticWindowPolicy
+
+
+def test_identical_distributions_accept_everything():
+    key = jax.random.PRNGKey(0)
+    B, G, V = 8, 5, 64
+    p = jax.nn.softmax(jax.random.normal(key, (B, G + 1, V)), -1)
+    q = p[:, :G, :]
+    toks = jax.random.categorical(jax.random.PRNGKey(1), jnp.log(q),
+                                  axis=-1).astype(jnp.int32)
+    res = verify_window(jax.random.PRNGKey(2), toks, q, p)
+    assert bool((res.n_accepted == G).all())
+    assert bool((res.num_new == G + 1).all())
+
+
+def test_disjoint_supports_reject_immediately():
+    B, G, V = 4, 4, 32
+    # q concentrated on token 0, p on token V-1 → ratio ≈ 0 → reject at 0
+    q = jnp.full((B, G, V), 1e-9).at[:, :, 0].set(1.0)
+    p = jnp.full((B, G + 1, V), 1e-9).at[:, :, V - 1].set(1.0)
+    toks = jnp.zeros((B, G), jnp.int32)
+    res = verify_window(jax.random.PRNGKey(0), toks, q, p)
+    assert bool((res.n_accepted == 0).all())
+    assert bool((res.next_token == V - 1).all())
+
+
+def test_empirical_acceptance_matches_eq1():
+    """Monte-carlo acceptance with alpha-controlled p/q ≈ Eq. (1)."""
+    alpha, G, V, N = 0.7, 6, 128, 2000
+    key = jax.random.PRNGKey(0)
+    # q uniform over V; p = alpha at drafted token + (1-alpha) spread
+    q = jnp.full((N, G, V), 1.0 / V)
+    toks = jax.random.randint(key, (N, G), 0, V)
+    onehot = jax.nn.one_hot(toks, V)
+    # acceptance prob = min(1, p/q) at token = alpha/ (1/V) ... construct
+    # p so p(token)/q(token) = alpha exactly: p(token) = alpha/V
+    p_g = (jnp.ones((N, G, V)) - onehot * 1.0) * ((1 - alpha / V) / (V - 1)) \
+        + onehot * (alpha / V)
+    p = jnp.concatenate([p_g, jnp.full((N, 1, V), 1.0 / V)], axis=1)
+    res = verify_window(jax.random.PRNGKey(1), toks, q, p)
+    emp = float(res.num_new.mean())
+    theory = float(expected_accepted(alpha, G))
+    assert abs(emp - theory) / theory < 0.05, (emp, theory)
+
+
+def test_eq2_speedup_and_optimum():
+    s1 = float(expected_speedup(0.8, 4, 0.05))
+    assert s1 > 1.0
+    g = optimal_gamma(0.9, 0.02)
+    assert 4 <= g <= 12
+    assert optimal_gamma(0.3, 0.5) <= 2
+
+
+def test_greedy_verify_prefix_semantics():
+    B, G, V = 2, 4, 16
+    logits = jax.random.normal(jax.random.PRNGKey(0), (B, G + 1, V))
+    tgt = jnp.argmax(logits, -1)
+    draft = tgt[:, :G].at[0, 2].add(1)   # seq 0 mismatches at position 2
+    res = verify_window_greedy(draft.astype(jnp.int32), logits)
+    assert int(res.n_accepted[0]) == 2
+    assert int(res.n_accepted[1]) == G
+    assert int(res.next_token[0]) == int(tgt[0, 2])
+    assert int(res.next_token[1]) == int(tgt[1, G])
+
+
+# ------------------------------------------------------- engine equivalence
+
+DRAFT = ModelConfig(name="d", arch_type="dense", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                    dtype="float32", remat=False)
+TARGETS = {
+    "dense": dataclasses.replace(DRAFT, name="t", n_layers=3, n_kv_heads=4),
+    "ssm": ModelConfig(name="ts", arch_type="ssm", n_layers=2, d_model=64,
+                       n_heads=0, n_kv_heads=0, d_ff=0, vocab=128,
+                       ssm_state=16, ssm_head_dim=16, ssm_chunk=8,
+                       dtype="float32", remat=False, tie_embeddings=True),
+    "hybrid": ModelConfig(name="th", arch_type="hybrid", n_layers=4,
+                          d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                          head_dim=16, vocab=128, ssm_state=16,
+                          ssm_head_dim=16, ssm_chunk=8, attn_every=2,
+                          dtype="float32", remat=False),
+}
+
+
+def _reference_greedy(engine, prompts, n):
+    tm = engine.target
+    B, S = prompts.shape
+    lg, cache = tm.prefill(engine.target_params, jnp.asarray(prompts),
+                           S + n + 16)
+    cur = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)
+    ref = [np.asarray(cur)]
+    pos = jnp.full((B,), S, jnp.int32)
+    for _ in range(n - 1):
+        lg1, cache = tm.decode_step(engine.target_params, cur, cache, pos)
+        cur = jnp.argmax(lg1, -1).astype(jnp.int32)
+        ref.append(np.asarray(cur))
+        pos = pos + 1
+    return np.stack(ref, 1)
+
+
+@pytest.mark.parametrize("family", sorted(TARGETS))
+def test_engine_greedy_equals_target_decoding(family):
+    eng = SpecDecodeEngine(DRAFT, TARGETS[family], temperature=0.0,
+                           key=jax.random.PRNGKey(7))
+    B, S, N = 2, 10, 24
+    prompts = np.random.default_rng(0).integers(0, 128, (B, S)).astype(np.int32)
+    toks, stats = eng.generate(prompts, N, StaticWindowPolicy(3))
+    ref = _reference_greedy(eng, prompts, N)
+    assert (toks[:, :N] == ref).all()
+    # stats.tokens excludes the prefill-sampled anchor token (1 per seq)
+    assert stats.tokens >= B * (N - 1)
+    assert len(stats.acceptance_seqs) == B
+
+
+def test_engine_acceptance_traces_schema():
+    eng = SpecDecodeEngine(DRAFT, TARGETS["dense"], temperature=0.0,
+                           key=jax.random.PRNGKey(1))
+    prompts = np.random.default_rng(1).integers(0, 128, (2, 8)).astype(np.int32)
+    seqs = eng.capture_traces(prompts, 12, gamma=4)
+    assert len(seqs) == 2
+    for s in seqs:
+        assert all(b in (0, 1) for b in s)
+        assert len(s) >= 1
