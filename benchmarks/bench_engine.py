@@ -1,0 +1,147 @@
+"""Decode-loop benchmark: compile count, tokens/s and per-iteration wall
+time for static-γ vs adaptive-γ (AWC-style per-iteration varying) workloads
+on the real-model engine — the first point in the repo's perf trajectory.
+
+The engine compiles ONE masked-window step at gamma_max; an adaptive
+workload that changes γ every iteration must hold tokens/s within a few
+percent of the static workload (the seed engine instead paid a full XLA
+compile for every new γ).
+
+    PYTHONPATH=src python benchmarks/bench_engine.py \
+        [--batch 4] [--max-new 48] [--gamma-max 8] [--repeats 3] [--out ...]
+
+Writes BENCH_engine.json (repo root by default).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import SpecDecodeEngine
+from repro.core.window import FeatureSnapshot, StaticWindowPolicy, WindowDecision
+
+DRAFT = ModelConfig(name="bench-draft", arch_type="dense", n_layers=2,
+                    d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                    vocab=512, dtype="float32", remat=False)
+TARGET = ModelConfig(name="bench-target", arch_type="dense", n_layers=4,
+                     d_model=256, n_heads=8, n_kv_heads=4, d_ff=512,
+                     vocab=512, dtype="float32", remat=False)
+
+
+class CyclingWindowPolicy:
+    """Adaptive-γ workload: a different γ every iteration (AWC-style)."""
+
+    def __init__(self, gmax: int):
+        self.gmax = gmax
+        self._i = 0
+
+    def decide(self, pair_key: str, feats: FeatureSnapshot) -> WindowDecision:
+        g = 1 + (self._i % self.gmax)
+        self._i += 1
+        return WindowDecision(g, "distributed")
+
+    def gamma_bound(self) -> int:
+        return self.gmax
+
+    def name(self) -> str:
+        return f"cycling-{self.gmax}"
+
+
+def run_workload(engine: SpecDecodeEngine, prompts, max_new: int,
+                 make_policy, gamma_max: int, repeats: int) -> dict:
+    # warmup: pays the (single) compile
+    c0 = engine.compiled_programs()
+    t0 = time.perf_counter()
+    engine.generate(prompts, max_new, make_policy(), gamma_max=gamma_max)
+    warmup_s = time.perf_counter() - t0
+    compiles = engine.compiled_programs() - c0
+
+    decode_s, tokens, iters, per_iter_ms = [], 0, 0, []
+    for _ in range(repeats):
+        _, stats = engine.generate(prompts, max_new, make_policy(),
+                                   gamma_max=gamma_max)
+        d = stats.wall_s - stats.prefill_s
+        decode_s.append(d)
+        tokens += stats.tokens
+        iters += stats.iterations
+        per_iter_ms.append(d * 1e3 / max(1, stats.iterations))
+    recompiles = engine.compiled_programs() - c0 - compiles
+    total_decode = sum(decode_s)
+    return {
+        "warmup_s": round(warmup_s, 4),
+        "compiles": compiles,
+        "recompiles_after_warmup": recompiles,
+        "repeats": repeats,
+        "decode_s": round(total_decode, 4),
+        "tokens": tokens,
+        "iterations": iters,
+        "tokens_per_s": round(tokens / max(1e-9, total_decode), 2),
+        "per_iteration_ms": round(float(np.mean(per_iter_ms)), 4),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--gamma-max", type=int, default=8)
+    ap.add_argument("--static-gamma", type=int, default=4)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parent.parent
+                                         / "BENCH_engine.json"))
+    args = ap.parse_args(argv)
+
+    engine = SpecDecodeEngine(DRAFT, TARGET, temperature=0.0,
+                              gamma_max=args.gamma_max,
+                              key=jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, TARGET.vocab,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+
+    results = {
+        "static": run_workload(
+            engine, prompts, args.max_new,
+            lambda: StaticWindowPolicy(args.static_gamma),
+            args.gamma_max, args.repeats),
+        "adaptive": run_workload(
+            engine, prompts, args.max_new,
+            lambda: CyclingWindowPolicy(args.gamma_max),
+            args.gamma_max, args.repeats),
+    }
+    ratio = (results["adaptive"]["tokens_per_s"] /
+             max(1e-9, results["static"]["tokens_per_s"]))
+    out = {
+        "bench": "engine_decode_loop",
+        "config": {"batch": args.batch, "prompt_len": args.prompt_len,
+                   "max_new": args.max_new, "gamma_max": args.gamma_max,
+                   "static_gamma": args.static_gamma,
+                   "draft": DRAFT.name, "target": TARGET.name,
+                   "backend": jax.default_backend(),
+                   "jax": jax.__version__,
+                   "platform": platform.platform()},
+        "workloads": results,
+        "adaptive_over_static_tokens_per_s": round(ratio, 4),
+        "compile_once": (results["adaptive"]["compiles"] <= 1 and
+                         results["adaptive"]["recompiles_after_warmup"] == 0),
+    }
+    Path(args.out).write_text(json.dumps(out, indent=2) + "\n")
+    print(json.dumps(out, indent=2))
+    print(f"\nadaptive/static tokens/s = {ratio:.3f}  "
+          f"(adaptive compiles: {results['adaptive']['compiles']}, "
+          f"recompiles after warmup: "
+          f"{results['adaptive']['recompiles_after_warmup']})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

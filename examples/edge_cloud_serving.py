@@ -30,8 +30,11 @@ def main():
     target_cfg = get_config("deepseek-7b").reduced()
     draft_cfg = dataclasses.replace(get_config("qwen2.5-3b").reduced(),
                                     vocab=target_cfg.vocab)
+    # gamma_max bounds every policy's window; the engine compiles one
+    # masked-window step per wave shape and reuses it across policies
     engine = SpecDecodeEngine(draft_cfg, target_cfg, temperature=1.0,
-                              rtt_ms=10.0, key=jax.random.PRNGKey(0))
+                              rtt_ms=10.0, gamma_max=12, sync_every=8,
+                              key=jax.random.PRNGKey(0))
 
     rng = np.random.default_rng(1)
     for policy_name, policy in [("static-4", StaticWindowPolicy(4)),
@@ -45,9 +48,10 @@ def main():
                 args.max_new))
         results = server.run()
         acc = np.mean([r.acceptance_rate for r in results])
+        ttft = np.mean([r.ttft_ms for r in results])
         tpot = np.mean([r.tpot_ms for r in results])
         print(f"policy={policy_name:9s} served={len(results):3d} "
-              f"acceptance={acc:.3f} tpot={tpot:.1f}ms")
+              f"acceptance={acc:.3f} ttft={ttft:.1f}ms tpot={tpot:.1f}ms")
 
     # fused Pallas verification kernel == engine verification semantics
     B, G, V = 4, 4, target_cfg.vocab

@@ -32,13 +32,18 @@ def main():
     prompts = rng.integers(0, target_cfg.vocab, (4, 16)).astype(np.int32)
 
     print("=== real-model engine (temp 1.0; 4 sequences, 32 new tokens) ===")
+    # gamma_max=12 compiles ONE masked-window step program; all three
+    # policies (static γ=4, the dynamic heuristic, AWC's per-iteration
+    # adaptive γ) reuse it — varying γ never triggers a recompile.
     for policy in (StaticWindowPolicy(4), DynamicWindowPolicy(),
                    AWCWindowPolicy(default_predictor())):
         tokens, stats = engine.generate(prompts, 32, policy,
-                                        key=jax.random.PRNGKey(1))
+                                        key=jax.random.PRNGKey(1),
+                                        gamma_max=12)
         print(f"  {policy.name():10s} acceptance={stats.acceptance_rate:.3f} "
               f"tokens/iter={stats.tokens_per_iteration:.2f} "
-              f"iters={stats.iterations}")
+              f"iters={stats.iterations} "
+              f"programs={engine.compiled_programs()}")
 
     # --- cluster-scale simulation (DSD-Sim) -------------------------------
     print("=== DSD-Sim: 2 cloud targets, 64 edge drafters, GSM8K ===")

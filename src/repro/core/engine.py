@@ -8,6 +8,31 @@ network hop is accounted virtually (``rtt_ms``), while *acceptance outcomes
 are real* — this engine is what captures the ground-truth
 ``acceptance_seq`` traces DSD-Sim replays (DESIGN.md §7.3).
 
+Decode hot loop — compiled ONCE, adaptive-γ for free:
+
+- One XLA program per draft/target pair, compiled at the static window
+  bound ``gamma_max``. The per-iteration window size γ chosen by the window
+  policy (AWC changes it every iteration) enters as a *traced* int32
+  ``active_gamma`` that masks acceptance in ``verify_window`` — any
+  γ ∈ [1, gamma_max] runs with zero recompiles. At temperature 0 causality
+  makes the masked step's committed tokens BIT-identical to a dedicated
+  per-γ program; sampled decoding (temperature > 0) is identical in
+  distribution but consumes the PRNG stream at gamma_max width, so
+  individual sampled tokens differ from a per-γ program run with the same
+  key. (The MoE family is the other caveat: capacity-based routing sees
+  the full-width window, so capacity-binding configs may drop differently.)
+- ``SpecDecodeState`` caches, the output token buffer, the write cursors
+  and the acceptance-stats buffer are DONATED to the jitted step
+  (``donate_argnums``) so KV/SSM buffers update in place instead of copying
+  every iteration.
+- Committed tokens accumulate into a preallocated on-device
+  ``(B, max_new)`` buffer with per-sequence write cursors; per-iteration
+  ``n_accepted`` lands in a device-side stats buffer. The host syncs
+  cursors/stats only every ``sync_every`` iterations, so the loop keeps
+  ``sync_every`` steps in flight instead of blocking on ``new_tokens`` /
+  ``num_new`` transfers per step. Window-policy features (recent α, TPOT)
+  consequently update at sync granularity.
+
 Cache-rollback semantics per family:
 
 - attention families (dense/moe/vlm/encdec): stale window entries are
@@ -17,24 +42,26 @@ Cache-rollback semantics per family:
   engine keeps the window-start state as the checkpoint, verifies on a
   throwaway copy, then *advances* the committed prefix with per-sequence
   active-masking (``_tree_where``) — the SSM analogue of cache rollback.
+  The advance is a ``lax.scan`` over the window, so HLO size and compile
+  time stay flat in ``gamma_max``.
 """
 
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from ..configs.base import ModelConfig
-from ..models.model import Model, build_model
-from .specdec import (SpecDecodeState, draft_propose, spec_decode_step,
-                      verify_window, verify_window_greedy, _temperature_probs,
-                      sample_from_probs)
+from ..models.model import build_model
+from .specdec import (SpecDecodeOut, SpecDecodeState, draft_propose,
+                      spec_decode_step, verify_window, verify_window_greedy,
+                      _temperature_probs, sample_from_probs)
 from .window import FeatureSnapshot, StaticWindowPolicy, WindowPolicy
 
 
@@ -53,6 +80,59 @@ def _tree_where(active: jax.Array, new: Any, old: Any, batch_axis: int = 1):
     return jax.tree.map(sel, new, old)
 
 
+def _scan_cache_advance(decode_fn, params, cache, adv_tokens: jax.Array,
+                        pos: jax.Array, num_new: jax.Array):
+    """Advance a recurrent cache over the committed window with ``lax.scan``.
+
+    ``adv_tokens``: (B, T); step t feeds token t at position pos+t and keeps
+    the updated cache only for sequences with t < num_new. Non-array cache
+    leaves (e.g. the static ``ring`` flag) stay out of the scan carry so
+    their treatment as static metadata survives the loop.
+    """
+    leaves, treedef = jax.tree.flatten(cache)
+    is_arr = [isinstance(l, jax.Array) for l in leaves]
+
+    def pack(c):
+        return [l for l, a in zip(jax.tree.leaves(c), is_arr) if a]
+
+    def unpack(arrs):
+        it = iter(arrs)
+        return jax.tree.unflatten(
+            treedef, [next(it) if a else l for l, a in zip(leaves, is_arr)])
+
+    toks = jnp.moveaxis(adv_tokens, 0, 1)          # (T, B)
+    steps = jnp.arange(adv_tokens.shape[1])
+
+    def body(carry, inp):
+        tok, t = inp
+        cur = unpack(carry)
+        _, cnew = decode_fn(params, tok, cur, pos + t)
+        cnew = _tree_where(t < num_new, cnew, cur)
+        return pack(cnew), None
+
+    out, _ = lax.scan(body, pack(cache), (toks, steps))
+    return unpack(out)
+
+
+def _accumulate(res: SpecDecodeOut, out_buf: jax.Array, cursor: jax.Array,
+                nacc_buf: jax.Array, it_idx: jax.Array):
+    """Scatter this iteration's committed tokens into the device-resident
+    output buffer at per-sequence cursors; record n_accepted in the stats
+    buffer row ``it_idx``. Writes past the buffer edge are dropped — those
+    tokens are beyond ``max_new`` and would be discarded on extraction."""
+    B, W = res.new_tokens.shape
+    cap = out_buf.shape[1]
+    widx = cursor[:, None] + jnp.arange(W)[None, :]
+    valid = jnp.arange(W)[None, :] < res.num_new[:, None]
+    widx = jnp.where(valid, widx, cap)             # out-of-bounds ⇒ dropped
+    out_buf = out_buf.at[jnp.arange(B)[:, None], widx].set(
+        res.new_tokens, mode="drop")
+    cursor = cursor + res.num_new
+    nacc_buf = lax.dynamic_update_slice(
+        nacc_buf, res.n_accepted[None, :].astype(nacc_buf.dtype), (it_idx, 0))
+    return out_buf, cursor, nacc_buf
+
+
 @dataclass
 class GenerationStats:
     iterations: int = 0
@@ -60,6 +140,7 @@ class GenerationStats:
     accepted: int = 0
     tokens: int = 0
     wall_s: float = 0.0
+    prefill_s: float = 0.0           # prompt-processing wall time (≈ TTFT)
     virtual_ms: float = 0.0          # simulated edge-cloud time (incl. RTT)
     acceptance_seqs: list = field(default_factory=list)  # per-seq 0/1 bits
     gamma_seq: list = field(default_factory=list)
@@ -72,15 +153,32 @@ class GenerationStats:
     def tokens_per_iteration(self) -> float:
         return self.tokens / max(1, self.iterations)
 
+    @property
+    def prefill_ms(self) -> float:
+        return self.prefill_s * 1e3
+
+
+DEFAULT_GAMMA_MAX = 8
+
 
 class SpecDecodeEngine:
-    """Edge draft + cloud target, window policy in the loop."""
+    """Edge draft + cloud target, window policy in the loop.
+
+    ``gamma_max`` pins the compile-time window width: when set, the decode
+    step is compiled once at that width and serves every policy and every
+    γ ∈ [1, gamma_max] via acceptance masking (policy decisions above it
+    are clamped). When ``None`` the width is derived per-generate from the
+    policy's own ``gamma_bound()`` — a static-γ workload then compiles at
+    exactly its γ. ``sync_every`` sets how many iterations run between host
+    synchronizations of the device-resident cursors/stats.
+    """
 
     def __init__(self, draft_cfg: ModelConfig, target_cfg: ModelConfig,
                  draft_params=None, target_params=None,
                  key: Optional[jax.Array] = None,
                  temperature: float = 1.0, rtt_ms: float = 0.0,
-                 use_verify_kernel: bool = False):
+                 use_verify_kernel: bool = False,
+                 gamma_max: Optional[int] = None, sync_every: int = 8):
         assert draft_cfg.vocab == target_cfg.vocab, \
             "draft/target must share a tokenizer/vocab"
         self.draft_cfg, self.target_cfg = draft_cfg, target_cfg
@@ -95,6 +193,8 @@ class SpecDecodeEngine:
         self.temperature = temperature
         self.rtt_ms = rtt_ms
         self.use_verify_kernel = use_verify_kernel
+        self.gamma_max = None if gamma_max is None else int(gamma_max)
+        self.sync_every = int(sync_every)
         self._target_attention = target_cfg.arch_type in (
             "dense", "moe", "vlm", "encdec")
         self._draft_attention = draft_cfg.arch_type in (
@@ -103,50 +203,58 @@ class SpecDecodeEngine:
 
     # ------------------------------------------------------------- jit paths
 
-    def _fused_step(self, gamma: int):
-        """Attention-target path: one jitted program per γ."""
-        keyt = ("fused", gamma)
+    def _fused_step(self, gamma_max: int):
+        """Attention-target path: ONE jitted program at gamma_max; the
+        per-iteration γ arrives as the traced ``active_gamma`` scalar."""
+        keyt = ("fused", gamma_max)
         if keyt in self._jit_cache:
             return self._jit_cache[keyt]
 
         draft_decode = lambda p, t, c, pos: self.draft.decode_step(p, t, c, pos)
         target_verify = lambda p, w, c, pos: self.target.verify_step(p, w, c, pos)
 
-        @jax.jit
-        def step(draft_params, target_params, state, key):
-            return spec_decode_step(draft_decode, target_verify,
-                                    draft_params, target_params,
-                                    state, gamma, key, self.temperature)
+        def step(draft_params, target_params, state, key, active_gamma,
+                 it_idx, out_buf, cursor, nacc_buf):
+            res = spec_decode_step(draft_decode, target_verify,
+                                   draft_params, target_params,
+                                   state, gamma_max, key, self.temperature,
+                                   active_gamma=active_gamma)
+            out_buf, cursor, nacc_buf = _accumulate(
+                res, out_buf, cursor, nacc_buf, it_idx)
+            return res.state, out_buf, cursor, nacc_buf
 
-        self._jit_cache[keyt] = step
-        return step
+        jitted = jax.jit(step, donate_argnums=(2, 6, 7, 8))
+        self._jit_cache[keyt] = jitted
+        return jitted
 
-    def _split_step(self, gamma: int):
+    def _split_step(self, gamma_max: int):
         """SSM/hybrid-target path: verify on a throwaway cache, then advance
-        the committed prefix with active-masked decode steps."""
-        keyt = ("split", gamma)
+        the committed prefix with an active-masked ``lax.scan``."""
+        keyt = ("split", gamma_max)
         if keyt in self._jit_cache:
             return self._jit_cache[keyt]
 
         draft_decode = lambda p, t, c, pos: self.draft.decode_step(p, t, c, pos)
 
-        @jax.jit
-        def step(draft_params, target_params, state, key):
+        def step(draft_params, target_params, state, key, active_gamma,
+                 it_idx, out_buf, cursor, nacc_buf):
             kd, kv = jax.random.split(key)
             prop = draft_propose(draft_decode, draft_params,
                                  state.draft_cache, state.last_token,
-                                 state.pos, gamma, kd, self.temperature)
+                                 state.pos, gamma_max, kd, self.temperature)
             window = jnp.concatenate(
                 [state.last_token[:, None], prop.tokens], axis=1)
             p_logits, _discard = self.target.verify_step(
                 target_params, window, state.target_cache, state.pos)
             if self.temperature <= 0.0:
-                res = verify_window_greedy(prop.tokens, p_logits)
+                res = verify_window_greedy(prop.tokens, p_logits,
+                                           active_gamma=active_gamma)
             else:
                 p_probs = _temperature_probs(p_logits, self.temperature)
-                res = verify_window(kv, prop.tokens, prop.q_probs, p_probs)
+                res = verify_window(kv, prop.tokens, prop.q_probs, p_probs,
+                                    active_gamma=active_gamma)
 
-            arange = jnp.arange(gamma + 1)[None, :]
+            arange = jnp.arange(gamma_max + 1)[None, :]
             acc_part = jnp.concatenate(
                 [prop.tokens, jnp.zeros_like(prop.tokens[:, :1])], axis=1)
             committed = jnp.where(arange == res.n_accepted[:, None],
@@ -157,41 +265,57 @@ class SpecDecodeEngine:
             # enters the state only when the *next* window processes it, so
             # we advance exactly num_new tokens starting from last_token.
             adv_tokens = jnp.concatenate(
-                [state.last_token[:, None], committed[:, :gamma]], axis=1)
-            tcache = state.target_cache
-            for t in range(gamma + 1):
-                active = t < res.num_new
-                _, cnew = self.target.decode_step(
-                    target_params, adv_tokens[:, t], tcache, state.pos + t)
-                tcache = _tree_where(active, cnew, tcache)
+                [state.last_token[:, None], committed[:, :gamma_max]], axis=1)
+            tcache = _scan_cache_advance(
+                self.target.decode_step, target_params, state.target_cache,
+                adv_tokens, state.pos, res.num_new)
 
             dcache = prop.cache
             if not self._draft_attention:
                 # same treatment for a recurrent draft: re-advance from the
                 # window-start checkpoint over the committed prefix
-                dcache = state.draft_cache
-                for t in range(gamma + 1):
-                    active = t < res.num_new
-                    _, cnew = self.draft.decode_step(
-                        draft_params, adv_tokens[:, t], dcache, state.pos + t)
-                    dcache = _tree_where(active, cnew, dcache)
+                dcache = _scan_cache_advance(
+                    self.draft.decode_step, draft_params, state.draft_cache,
+                    adv_tokens, state.pos, res.num_new)
 
-            new_tokens = jnp.where(arange < res.num_new[:, None], committed, -1)
-            state = SpecDecodeState(
-                draft_cache=dcache, target_cache=tcache,
-                last_token=res.next_token, pos=state.pos + res.num_new)
-            from .specdec import SpecDecodeOut
-            return SpecDecodeOut(state=state, new_tokens=new_tokens,
-                                 num_new=res.num_new,
-                                 n_accepted=res.n_accepted)
+            new_tokens = jnp.where(arange < res.num_new[:, None],
+                                   committed, -1)
+            out = SpecDecodeOut(
+                state=SpecDecodeState(
+                    draft_cache=dcache, target_cache=tcache,
+                    last_token=res.next_token, pos=state.pos + res.num_new),
+                new_tokens=new_tokens, num_new=res.num_new,
+                n_accepted=res.n_accepted)
+            out_buf, cursor, nacc_buf = _accumulate(
+                out, out_buf, cursor, nacc_buf, it_idx)
+            return out.state, out_buf, cursor, nacc_buf
 
-        self._jit_cache[keyt] = step
-        return step
+        jitted = jax.jit(step, donate_argnums=(2, 6, 7, 8))
+        self._jit_cache[keyt] = jitted
+        return jitted
 
-    def _step_fn(self, gamma: int):
+    def _step_fn(self, gamma_max: int):
         if self._target_attention and self._draft_attention:
-            return self._fused_step(gamma)
-        return self._split_step(gamma)
+            return self._fused_step(gamma_max)
+        return self._split_step(gamma_max)
+
+    def compiled_programs(self) -> int:
+        """Number of distinct XLA step programs compiled so far (the
+        compile-once invariant: adaptive-γ generation keeps this at 1)."""
+        total = 0
+        for fn in self._jit_cache.values():
+            try:
+                total += fn._cache_size()
+            except Exception:       # pragma: no cover — older jax
+                total += 1
+        return total
+
+    def _policy_gamma_bound(self, policy) -> int:
+        """Static window bound to compile the step at: the policy's own
+        declared bound when it has one, else the module default."""
+        bound = getattr(policy, "gamma_bound", None)
+        g = bound() if callable(bound) else DEFAULT_GAMMA_MAX
+        return max(1, int(g))
 
     # --------------------------------------------------------------- prefill
 
@@ -230,73 +354,117 @@ class SpecDecodeEngine:
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  window_policy: Optional[WindowPolicy] = None,
                  key: Optional[jax.Array] = None, frontend=None,
-                 prompt_lens: Optional[np.ndarray] = None
+                 prompt_lens: Optional[np.ndarray] = None,
+                 gamma_max: Optional[int] = None,
+                 sync_every: Optional[int] = None
                  ) -> tuple[np.ndarray, GenerationStats]:
-        """Batched generation. Returns (tokens (B, ≥max_new), stats)."""
+        """Batched generation. Returns (tokens (B, max_new), stats).
+
+        The decode loop dispatches ``sync_every`` masked-window steps
+        between host synchronizations; committed tokens stay device-resident
+        until extraction. Compile-width resolution for ``gamma_max``: this
+        call's override > the engine-level pin > the policy's declared
+        bound; policy γ decisions above the width are clamped.
+        """
         policy = window_policy or StaticWindowPolicy(4)
+        if gamma_max:
+            gmax = int(gamma_max)
+        elif self.gamma_max:
+            gmax = self.gamma_max
+        else:
+            gmax = self._policy_gamma_bound(policy)
+        sync = max(1, int(sync_every if sync_every else self.sync_every))
         key = key if key is not None else jax.random.PRNGKey(0)
         prompts = jnp.asarray(prompts, jnp.int32)
         B, S = prompts.shape
-        slots = S + max_new_tokens + 16
+        slots = S + max_new_tokens + gmax + 17
         key, kp = jax.random.split(key)
         t0 = time.perf_counter()
         pl = None if prompt_lens is None else jnp.asarray(prompt_lens, jnp.int32)
         state = self._prefill(prompts, slots, kp, frontend=frontend,
                               prompt_lens=pl)
+        # canonicalize non-array leaves (the caches' static `ring` flag):
+        # the jitted step returns them as arrays, so feeding a python bool on
+        # the first iteration would give that call a different signature —
+        # one avoidable recompile per generate
+        state = jax.tree.map(
+            lambda x: x if isinstance(x, jax.Array) else jnp.asarray(x), state)
+        state = jax.block_until_ready(state)
+        prefill_s = time.perf_counter() - t0
 
-        stats = GenerationStats()
-        stats.acceptance_seqs = [[] for _ in range(B)]
-        out = [[int(state.last_token[b])] for b in range(B)]
-        produced = np.ones(B, np.int64)
+        stats = GenerationStats(prefill_s=prefill_s)
+        step = self._step_fn(gmax)
+        max_iters = max_new_tokens + sync
+        out_buf = jnp.full((B, max_new_tokens), -1, jnp.int32)
+        out_buf = out_buf.at[:, 0].set(state.last_token)
+        cursor = jnp.ones((B,), jnp.int32)
+        nacc_buf = jnp.zeros((max_iters, B), jnp.int32)
+
         alpha_recent: list[float] = []
         tpot_recent: list[float] = []
         gamma_prev = 4.0
+        it = 0
+        produced_min = 1
+        prev_cursor_sum = B            # anchor token per sequence
 
-        while produced.min() < max_new_tokens:
-            feats = FeatureSnapshot(
-                q_depth=0.0,
-                alpha_recent=(sum(alpha_recent[-16:]) /
-                              max(1, len(alpha_recent[-16:]))
-                              if alpha_recent else 0.7),
-                rtt_recent_ms=self.rtt_ms,
-                tpot_recent_ms=(sum(tpot_recent[-16:]) /
-                                max(1, len(tpot_recent[-16:]))
-                                if tpot_recent else 50.0),
-                gamma_prev=gamma_prev)
-            dec = policy.decide("engine", feats)
-            gamma = max(1, int(dec.gamma))
-            stats.gamma_seq.append(gamma)
-            it0 = time.perf_counter()
-            key, ks = jax.random.split(key)
-            res = self._step_fn(gamma)(self.draft_params, self.target_params,
-                                       state, ks)
-            state = res.state
-            new = np.asarray(res.new_tokens)
-            num_new = np.asarray(res.num_new)
-            n_acc = np.asarray(res.n_accepted)
-            for b in range(B):
-                bits = [1] * int(n_acc[b])
-                if n_acc[b] < gamma:
-                    bits.append(0)
-                stats.acceptance_seqs[b].extend(bits)
-                take = int(num_new[b])
-                out[b].extend(int(t) for t in new[b, :take])
-            produced += num_new
-            stats.iterations += 1
-            stats.proposed += int(gamma * B)
-            stats.accepted += int(n_acc.sum())
-            stats.tokens += int(num_new.sum())
-            it_wall = time.perf_counter() - it0
-            tpot_recent.append(it_wall * 1e3 / max(1.0, float(num_new.mean())))
-            alpha_recent.append(float(n_acc.mean()) / gamma)
-            stats.virtual_ms += self.rtt_ms + it_wall * 1e3
-            gamma_prev = float(gamma)
+        while produced_min < max_new_tokens and it < max_iters:
+            chunk_t0 = time.perf_counter()
+            chunk_start = it
+            for _ in range(min(sync, max_iters - it)):
+                feats = FeatureSnapshot(
+                    q_depth=0.0,
+                    alpha_recent=(sum(alpha_recent[-16:]) /
+                                  max(1, len(alpha_recent[-16:]))
+                                  if alpha_recent else 0.7),
+                    rtt_recent_ms=self.rtt_ms,
+                    tpot_recent_ms=(sum(tpot_recent[-16:]) /
+                                    max(1, len(tpot_recent[-16:]))
+                                    if tpot_recent else 50.0),
+                    gamma_prev=gamma_prev)
+                dec = policy.decide("engine", feats)
+                gamma = min(gmax, max(1, int(dec.gamma)))
+                stats.gamma_seq.append(gamma)
+                key, ks = jax.random.split(key)
+                state, out_buf, cursor, nacc_buf = step(
+                    self.draft_params, self.target_params, state, ks,
+                    jnp.asarray(gamma, jnp.int32),
+                    jnp.asarray(it, jnp.int32),
+                    out_buf, cursor, nacc_buf)
+                gamma_prev = float(gamma)
+                it += 1
+            # -- sync point: one tiny host transfer per chunk ---------------
+            cur_host = np.asarray(cursor)
+            nacc_host = np.asarray(nacc_buf[chunk_start:it])
+            chunk_wall = time.perf_counter() - chunk_t0
+            chunk_iters = it - chunk_start
+            for r in range(chunk_iters):
+                alpha_recent.append(float(nacc_host[r].mean()) /
+                                    stats.gamma_seq[chunk_start + r])
+            chunk_tokens = int(cur_host.sum()) - prev_cursor_sum
+            prev_cursor_sum = int(cur_host.sum())
+            mean_tok = chunk_tokens / max(1, B * chunk_iters)
+            tpot_recent.append((chunk_wall * 1e3 / chunk_iters) /
+                               max(1.0, mean_tok))
+            stats.virtual_ms += chunk_iters * self.rtt_ms + chunk_wall * 1e3
+            produced_min = int(cur_host.min())
 
-        stats.wall_s = time.perf_counter() - t0
-        tokens = np.full((B, max_new_tokens), -1, np.int64)
+        # -- finalize: everything else comes off-device exactly once --------
+        nacc_all = np.asarray(nacc_buf)[:it]
+        stats.iterations = it
+        stats.proposed = B * sum(stats.gamma_seq)
+        stats.accepted = int(nacc_all.sum())
+        stats.tokens = prev_cursor_sum - B
+        stats.acceptance_seqs = []
         for b in range(B):
-            seq = out[b][:max_new_tokens]
-            tokens[b, :len(seq)] = seq
+            bits: list[int] = []
+            for i in range(it):
+                na = int(nacc_all[i, b])
+                bits.extend([1] * na)
+                if na < stats.gamma_seq[i]:
+                    bits.append(0)
+            stats.acceptance_seqs.append(bits)
+        tokens = np.asarray(out_buf).astype(np.int64)
+        stats.wall_s = time.perf_counter() - t0
         return tokens, stats
 
     # ------------------------------------------------------------ trace capture

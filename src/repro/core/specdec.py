@@ -85,32 +85,55 @@ class VerifyResult(NamedTuple):
     num_new: jax.Array         # (B,) int32 — n_accepted + 1 tokens produced
 
 
+def _active_gamma_vec(active_gamma, B: int, gamma_max: int) -> jax.Array:
+    """Normalize ``active_gamma`` (None | python int | traced scalar | (B,))
+    to a (B,) int32 vector. ``None`` means the full static window."""
+    if active_gamma is None:
+        return jnp.full((B,), gamma_max, jnp.int32)
+    return jnp.broadcast_to(jnp.asarray(active_gamma, jnp.int32), (B,))
+
+
 def verify_window(key: jax.Array,
-                  draft_tokens: jax.Array,   # (B, γ) int32
-                  q_probs: jax.Array,        # (B, γ, V) draft distributions
-                  p_probs: jax.Array,        # (B, γ+1, V) target distributions
+                  draft_tokens: jax.Array,   # (B, Γ) int32
+                  q_probs: jax.Array,        # (B, Γ, V) draft distributions
+                  p_probs: jax.Array,        # (B, Γ+1, V) target distributions
+                  active_gamma=None,
                   ) -> VerifyResult:
     """Vectorized accept/resample over the speculation window.
+
+    ``active_gamma`` (traced scalar or (B,) int32, or None) masks the window
+    to the first ``active_gamma`` positions: positions ≥ active_gamma are
+    force-rejected, the bonus distribution is taken at position
+    ``active_gamma`` and the all-accepted condition is ``n_acc ==
+    active_gamma``. With ``active_gamma=None`` this is exactly the classic
+    static-γ rule (bit-identical RNG consumption) — which makes one program
+    compiled at Γ=gamma_max serve every γ ∈ [1, Γ] with zero recompiles.
+    Masked acceptance at γ < Γ is the per-γ rule *in distribution*; the
+    uniforms are drawn at width Γ, so sampled outcomes are not bitwise
+    reproductions of a width-γ program (greedy verification is — see
+    :func:`verify_window_greedy`).
 
     The reference (oracle) semantics for the Pallas kernel in
     ``repro.kernels.verify`` — see ``kernels/verify/ref.py`` which wraps this.
     """
     B, gamma = draft_tokens.shape
+    ag = _active_gamma_vec(active_gamma, B, gamma)
     ku, kr = jax.random.split(key)
     u = jax.random.uniform(ku, (B, gamma))
 
     p_at = jnp.take_along_axis(p_probs[:, :gamma, :], draft_tokens[..., None],
-                               axis=-1)[..., 0]                      # (B, γ)
+                               axis=-1)[..., 0]                      # (B, Γ)
     q_at = jnp.take_along_axis(q_probs, draft_tokens[..., None],
-                               axis=-1)[..., 0]                      # (B, γ)
+                               axis=-1)[..., 0]                      # (B, Γ)
     ratio = p_at / jnp.maximum(q_at, 1e-20)
-    accept = u < jnp.minimum(1.0, ratio)                             # (B, γ)
+    accept = u < jnp.minimum(1.0, ratio)                             # (B, Γ)
+    accept = accept & (jnp.arange(gamma)[None, :] < ag[:, None])
     prefix = jnp.cumprod(accept.astype(jnp.int32), axis=-1)
     n_acc = prefix.sum(axis=-1)                                      # (B,)
 
     # Distribution for the extra token: residual at the reject position,
-    # or p_{γ+1} when everything accepted.
-    idx = jnp.minimum(n_acc, gamma - 1)                              # reject pos
+    # or p_{active_gamma+1} when everything accepted.
+    idx = jnp.minimum(n_acc, ag - 1)                                 # reject pos
     p_rej = jnp.take_along_axis(p_probs, idx[:, None, None], axis=1)[:, 0]
     q_rej = jnp.take_along_axis(q_probs, idx[:, None, None], axis=1)[:, 0]
     residual = jnp.maximum(p_rej - q_rej, 0.0)
@@ -118,8 +141,8 @@ def verify_window(key: jax.Array,
     # Degenerate residual (p == q exactly) falls back to p itself.
     residual = jnp.where(res_mass > 1e-12, residual / jnp.maximum(res_mass, 1e-20),
                          p_rej)
-    bonus = p_probs[:, gamma, :]
-    all_accepted = (n_acc == gamma)[:, None]
+    bonus = jnp.take_along_axis(p_probs, ag[:, None, None], axis=1)[:, 0]
+    all_accepted = (n_acc == ag)[:, None]
     dist = jnp.where(all_accepted, bonus, residual)
     next_token = sample_from_probs(kr, dist).astype(jnp.int32)
     return VerifyResult(n_accepted=n_acc.astype(jnp.int32),
@@ -129,13 +152,19 @@ def verify_window(key: jax.Array,
 
 
 def verify_window_greedy(draft_tokens: jax.Array,
-                         p_logits: jax.Array) -> VerifyResult:
+                         p_logits: jax.Array,
+                         active_gamma=None) -> VerifyResult:
     """Deterministic variant: accept while the draft token equals the
     target argmax; the correction/bonus token is the target argmax at the
-    first mismatch (or the extra position)."""
+    first mismatch (or the extra position). ``active_gamma`` masks the
+    window as in :func:`verify_window`; because attention/SSM decoding is
+    causal, the committed tokens of the masked step at any γ are
+    bit-identical to a dedicated per-γ program."""
     B, gamma = draft_tokens.shape
-    tgt = jnp.argmax(p_logits, axis=-1).astype(jnp.int32)   # (B, γ+1)
+    ag = _active_gamma_vec(active_gamma, B, gamma)
+    tgt = jnp.argmax(p_logits, axis=-1).astype(jnp.int32)   # (B, Γ+1)
     accept = tgt[:, :gamma] == draft_tokens
+    accept = accept & (jnp.arange(gamma)[None, :] < ag[:, None])
     prefix = jnp.cumprod(accept.astype(jnp.int32), axis=-1)
     n_acc = prefix.sum(axis=-1)
     next_token = jnp.take_along_axis(tgt, n_acc[:, None], axis=1)[:, 0]
@@ -202,7 +231,8 @@ class SpecDecodeOut(NamedTuple):
 def spec_decode_step(draft_decode_fn: Callable, target_verify_fn: Callable,
                      draft_params, target_params,
                      state: SpecDecodeState, gamma: int, key: jax.Array,
-                     temperature: float = 1.0) -> SpecDecodeOut:
+                     temperature: float = 1.0,
+                     active_gamma=None) -> SpecDecodeOut:
     """One distributed-SD iteration, jittable end to end.
 
     ``target_verify_fn(params, tokens, cache, pos) -> (logits, cache)``
@@ -211,6 +241,11 @@ def spec_decode_step(draft_decode_fn: Callable, target_verify_fn: Callable,
     callers commit only ``num_new`` tokens; stale cache entries beyond the
     committed position are overwritten by later iterations (attention) or
     restored from the pre-window checkpoint (SSM — see models/ssm.py).
+
+    ``gamma`` is the STATIC window width the program is compiled at;
+    ``active_gamma`` (traced, None ⇒ gamma) masks acceptance to the first
+    ``active_gamma`` draft positions so a single program compiled at
+    ``gamma_max`` serves any γ ∈ [1, gamma_max] without recompiling.
     """
     kd, kv = jax.random.split(key)
     prop = draft_propose(draft_decode_fn, draft_params, state.draft_cache,
@@ -221,10 +256,12 @@ def spec_decode_step(draft_decode_fn: Callable, target_verify_fn: Callable,
     p_logits, target_cache = target_verify_fn(
         target_params, window, state.target_cache, state.pos)
     if temperature <= 0.0:
-        res = verify_window_greedy(prop.tokens, p_logits)
+        res = verify_window_greedy(prop.tokens, p_logits,
+                                   active_gamma=active_gamma)
     else:
         p_probs = _temperature_probs(p_logits, temperature)
-        res = verify_window(kv, prop.tokens, prop.q_probs, p_probs)
+        res = verify_window(kv, prop.tokens, prop.q_probs, p_probs,
+                            active_gamma=active_gamma)
 
     # committed tokens: accepted prefix then the corrected/bonus token
     arange = jnp.arange(gamma + 1)[None, :]

@@ -52,6 +52,11 @@ class StaticWindowPolicy:
     def decide(self, pair_key: str, feats: FeatureSnapshot) -> WindowDecision:
         return WindowDecision(self.gamma, "distributed")
 
+    def gamma_bound(self) -> int:
+        """Largest γ this policy can ever emit — the engine compiles its
+        single masked-window step at this width."""
+        return self.gamma
+
     def name(self) -> str:
         return f"static-{self.gamma}"
 
@@ -73,6 +78,9 @@ class DynamicWindowPolicy:
             g = max(self.gmin, g - 1)
         self._state[pair_key] = g
         return WindowDecision(g, "distributed")
+
+    def gamma_bound(self) -> int:
+        return self.gmax
 
     def name(self) -> str:
         return "dynamic"
@@ -101,6 +109,9 @@ class AWCWindowPolicy:
         gamma, mode = stab.step(raw)
         return WindowDecision(gamma, mode)
 
+    def gamma_bound(self) -> int:
+        return int(self.stab_cfg.clamp_hi)
+
     def name(self) -> str:
         return "awc"
 
@@ -118,6 +129,9 @@ class OracleStaticPolicy:
         if self.fused:
             return WindowDecision(1, "fused")
         return WindowDecision(self.gamma, "distributed")
+
+    def gamma_bound(self) -> int:
+        return 1 if self.fused else self.gamma
 
     def name(self) -> str:
         return f"oracle-{'fused' if self.fused else self.gamma}"

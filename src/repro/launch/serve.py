@@ -48,6 +48,11 @@ def main(argv=None) -> int:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--rtt-ms", type=float, default=10.0)
+    ap.add_argument("--gamma-max", type=int, default=12,
+                    help="compile-once window bound; any policy γ ≤ this "
+                         "runs without recompiling")
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="decode iterations between host stat syncs")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
@@ -61,6 +66,8 @@ def main(argv=None) -> int:
 
     engine = SpecDecodeEngine(dcfg, tcfg, temperature=args.temperature,
                               rtt_ms=args.rtt_ms,
+                              gamma_max=args.gamma_max,
+                              sync_every=args.sync_every,
                               key=jax.random.PRNGKey(args.seed))
     server = SpecDecodeServer(engine, build_policy(args.policy, args.gamma),
                               ServerConfig(max_batch=args.max_batch))
@@ -77,8 +84,10 @@ def main(argv=None) -> int:
         "policy": args.policy,
         "requests": len(results),
         "mean_acceptance": float(np.mean(accs)),
+        "mean_ttft_ms": float(np.mean([r.ttft_ms for r in results])),
         "mean_tpot_ms": float(np.mean(tpots)),
         "mean_e2e_ms": float(np.mean([r.e2e_ms for r in results])),
+        "compiled_step_programs": engine.compiled_programs(),
     }
     if args.json:
         print(json.dumps(summary, indent=1))
@@ -86,8 +95,10 @@ def main(argv=None) -> int:
         print(f"served {summary['requests']} requests  "
               f"policy={args.policy}  "
               f"acceptance={summary['mean_acceptance']:.3f}  "
+              f"ttft={summary['mean_ttft_ms']:.1f}ms  "
               f"tpot={summary['mean_tpot_ms']:.1f}ms  "
-              f"e2e={summary['mean_e2e_ms']:.0f}ms")
+              f"e2e={summary['mean_e2e_ms']:.0f}ms  "
+              f"programs={summary['compiled_step_programs']}")
     return 0
 
 

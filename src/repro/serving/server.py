@@ -110,9 +110,11 @@ class SpecDecodeServer:
                                                  window_policy=self.policy,
                                                  prompt_lens=lens)
             wall_ms = (time.perf_counter() - t0) * 1e3
-            # wave-level timing attribution: prefill ≈ TTFT for every member,
-            # decode time spread per produced token
-            ttft_ms = wall_ms / max(1, stats.iterations)  # first-iteration share
+            # wave-level timing attribution: the measured prefill wall time
+            # IS the TTFT for every wave member (the anchor token is sampled
+            # at the end of prefill); decode time spread per produced token
+            ttft_ms = stats.prefill_ms
+            decode_ms = max(0.0, wall_ms - ttft_ms)
             for i, r in enumerate(wave):
                 n = r.max_new_tokens
                 seq_bits = stats.acceptance_seqs[i]
@@ -121,7 +123,7 @@ class SpecDecodeServer:
                     request_id=r.request_id,
                     tokens=tokens[i, :n],
                     ttft_ms=ttft_ms,
-                    tpot_ms=(wall_ms - ttft_ms) / max(1, n - 1),
+                    tpot_ms=decode_ms / max(1, n - 1),
                     e2e_ms=wall_ms,
                     acceptance_rate=acc))
         return self.results

@@ -43,11 +43,25 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
+def abstract_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...]):
+    """Version-compatible :class:`jax.sharding.AbstractMesh` constructor.
+
+    jax ≤ 0.4.x takes one ``((name, size), ...)`` shape tuple; newer
+    releases take ``(axis_sizes, axis_names)``. Spec/fit logic only needs
+    axis names and sizes, so tests and the dry-run build meshes through this
+    helper instead of pinning a jax version."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
 def _axis_size_of(mesh: Mesh, axes) -> int:
     if axes is None:
         return 1
     if isinstance(axes, str):
-        return mesh.shape[axes]
+        return int(mesh.shape[axes])
     return int(np.prod([mesh.shape[a] for a in axes]))
 
 

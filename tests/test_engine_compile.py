@@ -1,0 +1,143 @@
+"""Compile-once decode-loop regression tests.
+
+The engine jits ONE masked-window step at gamma_max; the per-iteration γ is
+a traced scalar, so AWC-style adaptive-γ generation must never recompile.
+Committed tokens must stay bit-identical to the classic per-γ speculative
+step (`spec_decode_step` with a dedicated static γ each iteration — the
+seed engine's execution model).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import SpecDecodeEngine
+from repro.core.specdec import SpecDecodeState, spec_decode_step
+from repro.core.window import FeatureSnapshot, WindowDecision
+
+DRAFT = ModelConfig(name="d", arch_type="dense", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                    dtype="float32", remat=False)
+TARGET_DENSE = dataclasses.replace(DRAFT, name="t", n_layers=3, n_kv_heads=4)
+TARGET_SSM = ModelConfig(name="ts", arch_type="ssm", n_layers=2, d_model=64,
+                         n_heads=0, n_kv_heads=0, d_ff=0, vocab=128,
+                         ssm_state=16, ssm_head_dim=16, ssm_chunk=8,
+                         dtype="float32", remat=False, tie_embeddings=True)
+
+GAMMA_MAX = 6
+
+
+class CyclingWindowPolicy:
+    """AWC-style adversarial workload: a different γ every iteration."""
+
+    def __init__(self, gmax: int = GAMMA_MAX):
+        self.gmax = gmax
+        self._i = 0
+
+    def decide(self, pair_key: str, feats: FeatureSnapshot) -> WindowDecision:
+        g = 1 + (self._i % self.gmax)
+        self._i += 1
+        return WindowDecision(g, "distributed")
+
+    def gamma_bound(self) -> int:
+        return self.gmax
+
+    def name(self) -> str:
+        return f"cycling-{self.gmax}"
+
+
+def _reference_greedy(engine, prompts, n):
+    """Target-only greedy decoding — the ground truth any speculative
+    schedule must reproduce exactly at temperature 0."""
+    tm = engine.target
+    B, S = prompts.shape
+    lg, cache = tm.prefill(engine.target_params, jnp.asarray(prompts),
+                           S + n + 16)
+    cur = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)
+    ref = [np.asarray(cur)]
+    pos = jnp.full((B,), S, jnp.int32)
+    for _ in range(n - 1):
+        lg1, cache = tm.decode_step(engine.target_params, cur, cache, pos)
+        cur = jnp.argmax(lg1, -1).astype(jnp.int32)
+        ref.append(np.asarray(cur))
+        pos = pos + 1
+    return np.stack(ref, 1)
+
+
+@pytest.mark.parametrize("target_cfg", [TARGET_DENSE, TARGET_SSM],
+                         ids=["dense", "ssm"])
+def test_adaptive_gamma_compiles_one_program(target_cfg):
+    """γ varying every iteration over [1, gamma_max] ⇒ exactly one jit-cache
+    entry AND exactly one lowered/compiled XLA program."""
+    eng = SpecDecodeEngine(DRAFT, target_cfg, temperature=0.0,
+                           key=jax.random.PRNGKey(7))
+    B, S, N = 2, 10, 24
+    prompts = np.random.default_rng(0).integers(0, 128, (B, S)).astype(np.int32)
+    toks, stats = eng.generate(prompts, N, CyclingWindowPolicy(),
+                               sync_every=4)
+    assert len(eng._jit_cache) == 1, eng._jit_cache.keys()
+    assert eng.compiled_programs() == 1
+    # γ really did vary across the run
+    assert len(set(stats.gamma_seq)) > 1
+    # adaptive-γ output is still exactly the target's greedy continuation
+    ref = _reference_greedy(eng, prompts, N)
+    np.testing.assert_array_equal(toks[:, :N], ref)
+
+    # a second same-shape generate reuses the program (different max_new or
+    # batch shapes legitimately compile new entries)
+    eng.generate(prompts, N, CyclingWindowPolicy(), sync_every=4)
+    assert eng.compiled_programs() == 1
+
+
+@pytest.mark.slow
+def test_masked_step_bit_identical_to_per_gamma_step():
+    """The masked-window engine's committed tokens == driving the classic
+    per-γ `spec_decode_step` (a dedicated static-γ program per iteration,
+    the seed engine's model) with the same γ schedule, token for token."""
+    eng = SpecDecodeEngine(DRAFT, TARGET_DENSE, temperature=0.0,
+                           key=jax.random.PRNGKey(3))
+    B, S, N = 2, 8, 16
+    prompts = np.random.default_rng(1).integers(0, 128, (B, S)).astype(np.int32)
+    toks, stats = eng.generate(prompts, N, CyclingWindowPolicy(),
+                               sync_every=4)
+
+    # reference: the per-γ execution model, eager, one window at a time
+    draft_decode = lambda p, t, c, pos: eng.draft.decode_step(p, t, c, pos)
+    target_verify = lambda p, w, c, pos: eng.target.verify_step(p, w, c, pos)
+    state = eng._prefill(jnp.asarray(prompts, jnp.int32), S + N + 32,
+                         jax.random.PRNGKey(0))
+    out = [[int(state.last_token[b])] for b in range(B)]
+    gammas = iter(stats.gamma_seq)
+    produced = np.ones(B, np.int64)
+    while produced.min() < N:
+        gamma = next(gammas)
+        res = spec_decode_step(draft_decode, target_verify,
+                               eng.draft_params, eng.target_params,
+                               state, gamma, jax.random.PRNGKey(9),
+                               temperature=0.0)
+        state = res.state
+        new = np.asarray(res.new_tokens)
+        nn = np.asarray(res.num_new)
+        for b in range(B):
+            out[b].extend(int(t) for t in new[b, :nn[b]])
+        produced += nn
+    ref = np.stack([np.asarray(seq[:N]) for seq in out])
+    np.testing.assert_array_equal(toks[:, :N], ref)
+
+
+def test_stats_schema_and_prefill_timing():
+    eng = SpecDecodeEngine(DRAFT, TARGET_DENSE, temperature=0.0,
+                           key=jax.random.PRNGKey(5))
+    prompts = np.random.default_rng(2).integers(0, 128, (2, 8)).astype(np.int32)
+    toks, stats = eng.generate(prompts, 12, CyclingWindowPolicy())
+    assert stats.prefill_s > 0.0
+    assert stats.prefill_s < stats.wall_s
+    assert stats.tokens >= 2 * 11
+    assert stats.iterations == len(stats.gamma_seq)
+    assert len(stats.acceptance_seqs) == 2
+    assert all(b in (0, 1) for s in stats.acceptance_seqs for b in s)
+    assert (toks[:, :12] >= 0).all()

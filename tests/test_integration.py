@@ -6,6 +6,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import ARCHS
 from repro.configs.base import ModelConfig
@@ -33,6 +34,7 @@ def test_moe_grouping_matches_ungrouped():
                                atol=2e-5, rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_chunked_prefill_cache_matches_full():
     cfg = ARCHS["qwen3-14b"].reduced()
     m = build_model(cfg)
@@ -53,6 +55,7 @@ def test_chunked_prefill_cache_matches_full():
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
 
 
+@pytest.mark.slow
 def test_awc_policy_runs_in_engine():
     dcfg = ModelConfig(name="d", arch_type="dense", n_layers=2, d_model=64,
                        n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
@@ -71,6 +74,7 @@ def test_awc_policy_runs_in_engine():
     np.testing.assert_array_equal(ref[:, :16], awc[:, :16])
 
 
+@pytest.mark.slow
 def test_captured_traces_replay_through_sim():
     dcfg = ModelConfig(name="d", arch_type="dense", n_layers=1, d_model=32,
                        n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,

@@ -17,6 +17,7 @@ from repro.kernels.ssd import (ssd_chunked_kernel, ssd_chunked_reference,
 
 @pytest.mark.parametrize("B,G,V", [(4, 4, 1024), (2, 6, 2000), (3, 1, 512),
                                    (5, 12, 4096), (1, 8, 50304)])
+@pytest.mark.slow
 def test_verify_kernel_matches_oracle(B, G, V):
     key = jax.random.PRNGKey(B * 1000 + G)
     p = jax.nn.softmax(jax.random.normal(key, (B, G + 1, V)) * 2, -1)
@@ -38,6 +39,7 @@ def test_verify_kernel_matches_oracle(B, G, V):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.slow
 def test_verify_kernel_dtypes(dtype):
     B, G, V = 3, 4, 1024
     p = jax.nn.softmax(
@@ -63,6 +65,7 @@ def test_verify_kernel_dtypes(dtype):
      (1, 4, 16, 4, 128, 2048, 256, False),
      (3, 1, 4, 1, 64, 512, 128, True),
      (2, 3, 6, 2, 32, 700, 0, False)])      # uneven S → pad path
+@pytest.mark.slow
 def test_decode_attn_matches_oracle(B, T, H, Hkv, hd, S, window, ring):
     rng = np.random.default_rng(B + T + S)
     q = jax.random.normal(jax.random.PRNGKey(0), (B, T, H, hd), jnp.float32)
@@ -85,6 +88,7 @@ def test_decode_attn_matches_oracle(B, T, H, Hkv, hd, S, window, ring):
                                atol=3e-5, rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_decode_attn_bf16():
     B, T, H, Hkv, hd, S = 2, 2, 4, 2, 64, 512
     q = jax.random.normal(jax.random.PRNGKey(0), (B, T, H, hd)).astype(jnp.bfloat16)
@@ -105,6 +109,7 @@ def test_decode_attn_bf16():
 @pytest.mark.parametrize("B,S,nh,hd,N,chunk",
                          [(2, 64, 3, 16, 32, 16), (1, 128, 2, 64, 128, 32),
                           (2, 50, 2, 32, 64, 16), (1, 256, 4, 32, 16, 128)])
+@pytest.mark.slow
 def test_ssd_kernel_matches_recurrence(B, S, nh, hd, N, chunk):
     x = jax.random.normal(jax.random.PRNGKey(0), (B, S, nh, hd))
     Bm = jax.random.normal(jax.random.PRNGKey(1), (B, S, N)) * 0.5
@@ -120,6 +125,7 @@ def test_ssd_kernel_matches_recurrence(B, S, nh, hd, N, chunk):
                                atol=5e-4, rtol=1e-3)
 
 
+@pytest.mark.slow
 def test_ssm_block_kernel_flag_equivalence():
     """ssm_block_train(use_kernel=True) must match the jnp path exactly."""
     from repro.configs.base import ModelConfig

@@ -22,6 +22,7 @@ def _reduced(name, **over):
 
 
 @pytest.mark.parametrize("arch", FAMS)
+@pytest.mark.slow
 def test_incremental_equals_full(arch):
     cfg = _reduced(arch)
     m = build_model(cfg)
@@ -38,6 +39,7 @@ def test_incremental_equals_full(arch):
 
 
 @pytest.mark.parametrize("arch", ["llama4-maverick-400b-a17b", "arctic-480b"])
+@pytest.mark.slow
 def test_moe_incremental_equals_full_nodrop(arch):
     cfg = _reduced(arch, capacity_factor=8.0)   # no token drops
     m = build_model(cfg)
@@ -53,6 +55,7 @@ def test_moe_incremental_equals_full_nodrop(arch):
     assert err < 1e-4
 
 
+@pytest.mark.slow
 def test_ring_buffer_equals_full_cache_within_window():
     """Sliding-window serving with a ring cache of exactly window slots must
     match full-cache attention restricted to the same window."""
@@ -79,6 +82,7 @@ def test_ring_buffer_equals_full_cache_within_window():
     assert err < 1e-4, err
 
 
+@pytest.mark.slow
 def test_ragged_right_padding_exact():
     """Right-padded prefill with prompt_lens must equal unpadded prefill."""
     for arch in ("deepseek-7b", "mamba2-130m", "zamba2-1.2b"):

@@ -3,6 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.awc.stabilize import StabilizerConfig, WindowStabilizer

@@ -4,17 +4,17 @@ fit_spec only reads mesh axis sizes, and the collective parser is pure)."""
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.sharding.specs import fit_spec
+from repro.sharding.specs import abstract_mesh, fit_spec
 from repro.launch.dryrun import parse_collectives, _shape_bytes
 from repro.launch.shapes import SHAPES
 
 
 def _mesh(multi=False):
     if multi:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 # ----------------------------------------------------------------- fit_spec

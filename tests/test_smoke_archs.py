@@ -44,6 +44,7 @@ def test_reduced_forward_shapes_no_nans(arch):
 
 
 @pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.slow
 def test_reduced_train_step(arch):
     cfg = ARCHS[arch].reduced()
     model = build_model(cfg)

@@ -113,6 +113,7 @@ def _reference_greedy(engine, prompts, n):
 
 
 @pytest.mark.parametrize("family", sorted(TARGETS))
+@pytest.mark.slow
 def test_engine_greedy_equals_target_decoding(family):
     eng = SpecDecodeEngine(DRAFT, TARGETS[family], temperature=0.0,
                            key=jax.random.PRNGKey(7))

@@ -6,6 +6,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import ModelConfig
 from repro.models import build_model
@@ -88,6 +89,7 @@ def test_checkpoint_roundtrip(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_server_wave_equals_unbatched():
     tcfg = dataclasses.replace(TINY, name="t", n_layers=3, n_kv_heads=4,
                                vocab=128)
