@@ -1,7 +1,7 @@
-"""End-to-end serving driver (deliverable b): serve a batch of requests
-through the wave-batched SpecDecodeServer on real JAX models, comparing the
-paper's window policies, and validate the fused-verification Pallas kernel
-against the engine's jnp path on the same inputs.
+"""End-to-end serving driver (deliverable b): serve a stream of requests
+through the continuous slot-based SpecDecodeServer on real JAX models,
+comparing the paper's window policies, and validate the fused-verification
+Pallas kernel against the engine's jnp path on the same inputs.
 
     PYTHONPATH=src python examples/edge_cloud_serving.py [--requests 12]
 """

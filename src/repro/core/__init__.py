@@ -1,10 +1,12 @@
 """DSD core — the paper's contribution: distributed speculative decoding
 (algorithm + engine) and Adaptive Window Control."""
 
-from .specdec import (DraftProposal, SpecDecodeOut, SpecDecodeState,
-                      VerifyResult, draft_propose, expected_accepted,
-                      expected_speedup, optimal_gamma, spec_decode_step,
-                      verify_window, verify_window_greedy)
+from .specdec import (DraftProposal, SlotStop, SpecDecodeOut,
+                      SpecDecodeState, VerifyResult, draft_propose,
+                      expected_accepted, expected_speedup, optimal_gamma,
+                      slot_stop_mask, spec_decode_step, verify_window,
+                      verify_window_greedy)
 from .window import (AWCWindowPolicy, DynamicWindowPolicy, FeatureSnapshot,
                      OracleStaticPolicy, StaticWindowPolicy, WindowDecision)
 from .engine import GenerationStats, SpecDecodeEngine
+from .session import DecodeSession, SlotRecord

@@ -8,7 +8,8 @@ network hop is accounted virtually (``rtt_ms``), while *acceptance outcomes
 are real* — this engine is what captures the ground-truth
 ``acceptance_seq`` traces DSD-Sim replays (DESIGN.md §7.3).
 
-Decode hot loop — compiled ONCE, adaptive-γ for free:
+Decode hot loop — compiled ONCE, adaptive-γ AND continuous batching for
+free:
 
 - One XLA program per draft/target pair, compiled at the static window
   bound ``gamma_max``. The per-iteration window size γ chosen by the window
@@ -20,18 +21,28 @@ Decode hot loop — compiled ONCE, adaptive-γ for free:
   distribution but consumes the PRNG stream at gamma_max width, so
   individual sampled tokens differ from a per-γ program run with the same
   key. (The MoE family is the other caveat: capacity-based routing sees
-  the full-width window, so capacity-binding configs may drop differently.)
+  the full batch × full-width window, so capacity-binding configs may drop
+  tokens differently depending on co-tenants.)
+- The same program is *slot-aware*: every batch row carries a per-slot
+  token budget (``max_new``) and a ``done`` flag, and
+  :func:`repro.core.specdec.slot_stop_mask` zeroes ``num_new`` for
+  finished/free rows so their cursor, position, KV writes and recurrent
+  state freeze while neighbouring rows keep decoding. This is what lets
+  :class:`repro.core.session.DecodeSession` admit and retire requests
+  in-flight (continuous batching) without ever recompiling: the active-slot
+  pattern is data, not shape.
 - ``SpecDecodeState`` caches, the output token buffer, the write cursors
-  and the acceptance-stats buffer are DONATED to the jitted step
+  and the stats buffers are DONATED to the jitted step
   (``donate_argnums``) so KV/SSM buffers update in place instead of copying
   every iteration.
 - Committed tokens accumulate into a preallocated on-device
   ``(B, max_new)`` buffer with per-sequence write cursors; per-iteration
-  ``n_accepted`` lands in a device-side stats buffer. The host syncs
-  cursors/stats only every ``sync_every`` iterations, so the loop keeps
-  ``sync_every`` steps in flight instead of blocking on ``new_tokens`` /
-  ``num_new`` transfers per step. Window-policy features (recent α, TPOT)
-  consequently update at sync granularity.
+  ``n_accepted``/``num_new`` land in device-side ring buffers. The host
+  syncs cursors/stats only every ``sync_every`` iterations, so the loop
+  keeps ``sync_every`` steps in flight instead of blocking on
+  ``new_tokens`` / ``num_new`` transfers per step. Window-policy features
+  (recent α, TPOT) and admission/retirement decisions consequently happen
+  at sync granularity.
 
 Cache-rollback semantics per family:
 
@@ -58,11 +69,13 @@ import numpy as np
 from jax import lax
 
 from ..configs.base import ModelConfig
+from ..models.kvcache import insert_slot
 from ..models.model import build_model
 from .specdec import (SpecDecodeOut, SpecDecodeState, draft_propose,
-                      spec_decode_step, verify_window, verify_window_greedy,
-                      _temperature_probs, sample_from_probs)
-from .window import FeatureSnapshot, StaticWindowPolicy, WindowPolicy
+                      slot_stop_mask, spec_decode_step, verify_window,
+                      verify_window_greedy, _temperature_probs,
+                      sample_from_probs)
+from .window import StaticWindowPolicy, WindowPolicy
 
 
 def _tree_where(active: jax.Array, new: Any, old: Any, batch_axis: int = 1):
@@ -115,11 +128,14 @@ def _scan_cache_advance(decode_fn, params, cache, adv_tokens: jax.Array,
 
 
 def _accumulate(res: SpecDecodeOut, out_buf: jax.Array, cursor: jax.Array,
-                nacc_buf: jax.Array, it_idx: jax.Array):
+                nacc_buf: jax.Array, nn_buf: jax.Array, row_idx: jax.Array):
     """Scatter this iteration's committed tokens into the device-resident
-    output buffer at per-sequence cursors; record n_accepted in the stats
-    buffer row ``it_idx``. Writes past the buffer edge are dropped — those
-    tokens are beyond ``max_new`` and would be discarded on extraction."""
+    output buffer at per-sequence cursors; record n_accepted / num_new in
+    row ``row_idx`` of the stats ring buffers (num_new == 0 marks a slot
+    that was inactive this iteration — the host uses it to attribute
+    acceptance bits to the right request). Writes past the buffer edge are
+    dropped — those tokens are beyond ``max_new`` and would be discarded on
+    extraction."""
     B, W = res.new_tokens.shape
     cap = out_buf.shape[1]
     widx = cursor[:, None] + jnp.arange(W)[None, :]
@@ -129,8 +145,11 @@ def _accumulate(res: SpecDecodeOut, out_buf: jax.Array, cursor: jax.Array,
         res.new_tokens, mode="drop")
     cursor = cursor + res.num_new
     nacc_buf = lax.dynamic_update_slice(
-        nacc_buf, res.n_accepted[None, :].astype(nacc_buf.dtype), (it_idx, 0))
-    return out_buf, cursor, nacc_buf
+        nacc_buf, res.n_accepted[None, :].astype(nacc_buf.dtype),
+        (row_idx, 0))
+    nn_buf = lax.dynamic_update_slice(
+        nn_buf, res.num_new[None, :].astype(nn_buf.dtype), (row_idx, 0))
+    return out_buf, cursor, nacc_buf, nn_buf
 
 
 @dataclass
@@ -144,6 +163,9 @@ class GenerationStats:
     virtual_ms: float = 0.0          # simulated edge-cloud time (incl. RTT)
     acceptance_seqs: list = field(default_factory=list)  # per-seq 0/1 bits
     gamma_seq: list = field(default_factory=list)
+    produced: Any = None             # (B,) per-sequence tokens produced
+                                     # (anchor included; ≤ max_new; < only
+                                     # on EOS stop)
 
     @property
     def acceptance_rate(self) -> float:
@@ -205,7 +227,15 @@ class SpecDecodeEngine:
 
     def _fused_step(self, gamma_max: int):
         """Attention-target path: ONE jitted program at gamma_max; the
-        per-iteration γ arrives as the traced ``active_gamma`` scalar."""
+        per-iteration γ arrives as the traced ``active_gamma`` scalar and
+        the per-slot lifecycle (budget/EOS/done) as traced (B,) buffers.
+
+        Finished/free rows commit nothing and their position freezes; the
+        window KV they still write lands in the speculative region
+        ``pos..pos+γ`` (beyond their committed prefix, masked out of
+        attention by ``pos_map``) and is fully overwritten by the next
+        prefill-insert into that slot, so no per-row cache select is
+        needed."""
         keyt = ("fused", gamma_max)
         if keyt in self._jit_cache:
             return self._jit_cache[keyt]
@@ -214,22 +244,38 @@ class SpecDecodeEngine:
         target_verify = lambda p, w, c, pos: self.target.verify_step(p, w, c, pos)
 
         def step(draft_params, target_params, state, key, active_gamma,
-                 it_idx, out_buf, cursor, nacc_buf):
+                 row_idx, out_buf, cursor, nacc_buf, nn_buf, max_new, done,
+                 eos_id):
             res = spec_decode_step(draft_decode, target_verify,
                                    draft_params, target_params,
                                    state, gamma_max, key, self.temperature,
                                    active_gamma=active_gamma)
-            out_buf, cursor, nacc_buf = _accumulate(
-                res, out_buf, cursor, nacc_buf, it_idx)
-            return res.state, out_buf, cursor, nacc_buf
+            stop = slot_stop_mask(res.num_new, res.n_accepted,
+                                  res.new_tokens, cursor, max_new, done,
+                                  eos_id)
+            new_state = SpecDecodeState(
+                draft_cache=res.state.draft_cache,
+                target_cache=res.state.target_cache,
+                last_token=jnp.where(done, state.last_token,
+                                     res.state.last_token),
+                pos=state.pos + stop.num_new)
+            out = SpecDecodeOut(state=new_state, new_tokens=res.new_tokens,
+                                num_new=stop.num_new,
+                                n_accepted=stop.n_accepted)
+            out_buf, cursor, nacc_buf, nn_buf = _accumulate(
+                out, out_buf, cursor, nacc_buf, nn_buf, row_idx)
+            return new_state, out_buf, cursor, nacc_buf, nn_buf, stop.done
 
-        jitted = jax.jit(step, donate_argnums=(2, 6, 7, 8))
+        jitted = jax.jit(step, donate_argnums=(2, 6, 7, 8, 9, 11))
         self._jit_cache[keyt] = jitted
         return jitted
 
     def _split_step(self, gamma_max: int):
         """SSM/hybrid-target path: verify on a throwaway cache, then advance
-        the committed prefix with an active-masked ``lax.scan``."""
+        the committed prefix with an active-masked ``lax.scan``. Per-slot
+        stopping composes naturally: the advance is masked by the *stopped*
+        ``num_new``, so a finished/free row's recurrent state (and hybrid
+        shared-attention cache) never advances."""
         keyt = ("split", gamma_max)
         if keyt in self._jit_cache:
             return self._jit_cache[keyt]
@@ -237,7 +283,8 @@ class SpecDecodeEngine:
         draft_decode = lambda p, t, c, pos: self.draft.decode_step(p, t, c, pos)
 
         def step(draft_params, target_params, state, key, active_gamma,
-                 it_idx, out_buf, cursor, nacc_buf):
+                 row_idx, out_buf, cursor, nacc_buf, nn_buf, max_new, done,
+                 eos_id):
             kd, kv = jax.random.split(key)
             prop = draft_propose(draft_decode, draft_params,
                                  state.draft_cache, state.last_token,
@@ -259,6 +306,10 @@ class SpecDecodeEngine:
                 [prop.tokens, jnp.zeros_like(prop.tokens[:, :1])], axis=1)
             committed = jnp.where(arange == res.n_accepted[:, None],
                                   res.next_token[:, None], acc_part)
+            new_tokens = jnp.where(arange < res.num_new[:, None],
+                                   committed, -1)
+            stop = slot_stop_mask(res.num_new, res.n_accepted, new_tokens,
+                                  cursor, max_new, done, eos_id)
 
             # advance target over [last_token, committed[:num_new-1]] — i.e.
             # the tokens whose state transitions are now final. committed[t]
@@ -268,7 +319,7 @@ class SpecDecodeEngine:
                 [state.last_token[:, None], committed[:, :gamma_max]], axis=1)
             tcache = _scan_cache_advance(
                 self.target.decode_step, target_params, state.target_cache,
-                adv_tokens, state.pos, res.num_new)
+                adv_tokens, state.pos, stop.num_new)
 
             dcache = prop.cache
             if not self._draft_attention:
@@ -276,21 +327,21 @@ class SpecDecodeEngine:
                 # window-start checkpoint over the committed prefix
                 dcache = _scan_cache_advance(
                     self.draft.decode_step, draft_params, state.draft_cache,
-                    adv_tokens, state.pos, res.num_new)
+                    adv_tokens, state.pos, stop.num_new)
 
-            new_tokens = jnp.where(arange < res.num_new[:, None],
-                                   committed, -1)
             out = SpecDecodeOut(
                 state=SpecDecodeState(
                     draft_cache=dcache, target_cache=tcache,
-                    last_token=res.next_token, pos=state.pos + res.num_new),
-                new_tokens=new_tokens, num_new=res.num_new,
-                n_accepted=res.n_accepted)
-            out_buf, cursor, nacc_buf = _accumulate(
-                out, out_buf, cursor, nacc_buf, it_idx)
-            return out.state, out_buf, cursor, nacc_buf
+                    last_token=jnp.where(done, state.last_token,
+                                         res.next_token),
+                    pos=state.pos + stop.num_new),
+                new_tokens=new_tokens, num_new=stop.num_new,
+                n_accepted=stop.n_accepted)
+            out_buf, cursor, nacc_buf, nn_buf = _accumulate(
+                out, out_buf, cursor, nacc_buf, nn_buf, row_idx)
+            return out.state, out_buf, cursor, nacc_buf, nn_buf, stop.done
 
-        jitted = jax.jit(step, donate_argnums=(2, 6, 7, 8))
+        jitted = jax.jit(step, donate_argnums=(2, 6, 7, 8, 9, 11))
         self._jit_cache[keyt] = jitted
         return jitted
 
@@ -317,21 +368,56 @@ class SpecDecodeEngine:
         g = bound() if callable(bound) else DEFAULT_GAMMA_MAX
         return max(1, int(g))
 
+    def _insert_step(self, capacity: int, slots: int, pad_len: int):
+        """ONE jitted prefill-insert program per session geometry: prefill a
+        single ``pad_len``-padded prompt (true length ``plen`` traced) and
+        write its cache row, anchor token, position and lifecycle entries
+        into batch row ``slot`` of a LIVE session — neighbouring rows'
+        buffers are donated through untouched. ``slot``, ``plen`` and
+        ``req_max_new`` are traced, so admission into any slot at any
+        prompt length ≤ pad_len reuses the same XLA program."""
+        keyt = ("insert", capacity, slots, pad_len)
+        if keyt in self._jit_cache:
+            return self._jit_cache[keyt]
+
+        def insert(draft_params, target_params, state, out_buf, cursor,
+                   max_new_buf, done, prompt, plen, slot, req_max_new, key):
+            one = self._prefill(prompt, slots, key, prompt_lens=plen,
+                                draft_params=draft_params,
+                                target_params=target_params)
+            state = insert_slot(state, one, slot)
+            row = jnp.full((1, out_buf.shape[1]), -1, jnp.int32)
+            row = row.at[0, 0].set(one.last_token[0])
+            out_buf = lax.dynamic_update_index_in_dim(out_buf, row, slot, 0)
+            cursor = cursor.at[slot].set(1)
+            max_new_buf = max_new_buf.at[slot].set(req_max_new)
+            done = done.at[slot].set(False)
+            return state, out_buf, cursor, max_new_buf, done
+
+        jitted = jax.jit(insert, donate_argnums=(2, 3, 4, 5, 6))
+        self._jit_cache[keyt] = jitted
+        return jitted
+
     # --------------------------------------------------------------- prefill
 
     def _prefill(self, prompts: jax.Array, slots: int, key: jax.Array,
-                 frontend=None, prompt_lens: Optional[jax.Array] = None
+                 frontend=None, prompt_lens: Optional[jax.Array] = None,
+                 draft_params=None, target_params=None
                  ) -> SpecDecodeState:
         """Right-padded batched prefill. With ``prompt_lens``, the anchor
         logit is gathered at each sequence's true last prompt token; padded
         cache slots are later overwritten before any query can attend them
         (slot j is rewritten by the window covering position j), and SSM
-        state is identity-masked past the true length."""
+        state is identity-masked past the true length. ``draft_params`` /
+        ``target_params`` override the engine's own (so jitted callers can
+        pass them as traced arguments instead of baked-in constants)."""
         B, S = prompts.shape
-        dlg, dcache = self.draft.prefill(self.draft_params, prompts, slots,
+        dp = self.draft_params if draft_params is None else draft_params
+        tp = self.target_params if target_params is None else target_params
+        dlg, dcache = self.draft.prefill(dp, prompts, slots,
                                          frontend=frontend,
                                          prompt_lens=prompt_lens)
-        tlg, tcache = self.target.prefill(self.target_params, prompts, slots,
+        tlg, tcache = self.target.prefill(tp, prompts, slots,
                                           frontend=frontend,
                                           prompt_lens=prompt_lens)
         if prompt_lens is None:
@@ -356,16 +442,23 @@ class SpecDecodeEngine:
                  key: Optional[jax.Array] = None, frontend=None,
                  prompt_lens: Optional[np.ndarray] = None,
                  gamma_max: Optional[int] = None,
-                 sync_every: Optional[int] = None
+                 sync_every: Optional[int] = None,
+                 eos_id: int = -1
                  ) -> tuple[np.ndarray, GenerationStats]:
         """Batched generation. Returns (tokens (B, max_new), stats).
 
-        The decode loop dispatches ``sync_every`` masked-window steps
-        between host synchronizations; committed tokens stay device-resident
-        until extraction. Compile-width resolution for ``gamma_max``: this
-        call's override > the engine-level pin > the policy's declared
-        bound; policy γ decisions above the width are clamped.
+        This is now a thin ONE-WAVE wrapper over
+        :class:`repro.core.session.DecodeSession`: all B prompts are
+        admitted together via a batched prefill, the session's masked-γ /
+        masked-slot step runs until every row stops (per-row budget, or a
+        committed ``eos_id`` ≥ 0), and the device-resident output buffer is
+        extracted once. Continuous serving — in-flight admission into freed
+        slots — uses the session directly (``repro.serving``). Compile-width
+        resolution for ``gamma_max``: this call's override > the
+        engine-level pin > the policy's declared bound; policy γ decisions
+        above the width are clamped.
         """
+        from .session import DecodeSession    # session imports engine types
         policy = window_policy or StaticWindowPolicy(4)
         if gamma_max:
             gmax = int(gamma_max)
@@ -374,96 +467,17 @@ class SpecDecodeEngine:
         else:
             gmax = self._policy_gamma_bound(policy)
         sync = max(1, int(sync_every if sync_every else self.sync_every))
-        key = key if key is not None else jax.random.PRNGKey(0)
-        prompts = jnp.asarray(prompts, jnp.int32)
-        B, S = prompts.shape
-        slots = S + max_new_tokens + gmax + 17
-        key, kp = jax.random.split(key)
+        B = prompts.shape[0]
         t0 = time.perf_counter()
-        pl = None if prompt_lens is None else jnp.asarray(prompt_lens, jnp.int32)
-        state = self._prefill(prompts, slots, kp, frontend=frontend,
-                              prompt_lens=pl)
-        # canonicalize non-array leaves (the caches' static `ring` flag):
-        # the jitted step returns them as arrays, so feeding a python bool on
-        # the first iteration would give that call a different signature —
-        # one avoidable recompile per generate
-        state = jax.tree.map(
-            lambda x: x if isinstance(x, jax.Array) else jnp.asarray(x), state)
-        state = jax.block_until_ready(state)
-        prefill_s = time.perf_counter() - t0
-
-        stats = GenerationStats(prefill_s=prefill_s)
-        step = self._step_fn(gmax)
+        sess = DecodeSession(self, capacity=B, max_new_cap=max_new_tokens,
+                             gamma_max=gmax, sync_every=sync, eos_id=eos_id,
+                             key=key)
+        sess.admit_batch(prompts, max_new_tokens, prompt_lens=prompt_lens,
+                         frontend=frontend)
         max_iters = max_new_tokens + sync
-        out_buf = jnp.full((B, max_new_tokens), -1, jnp.int32)
-        out_buf = out_buf.at[:, 0].set(state.last_token)
-        cursor = jnp.ones((B,), jnp.int32)
-        nacc_buf = jnp.zeros((max_iters, B), jnp.int32)
-
-        alpha_recent: list[float] = []
-        tpot_recent: list[float] = []
-        gamma_prev = 4.0
-        it = 0
-        produced_min = 1
-        prev_cursor_sum = B            # anchor token per sequence
-
-        while produced_min < max_new_tokens and it < max_iters:
-            chunk_t0 = time.perf_counter()
-            chunk_start = it
-            for _ in range(min(sync, max_iters - it)):
-                feats = FeatureSnapshot(
-                    q_depth=0.0,
-                    alpha_recent=(sum(alpha_recent[-16:]) /
-                                  max(1, len(alpha_recent[-16:]))
-                                  if alpha_recent else 0.7),
-                    rtt_recent_ms=self.rtt_ms,
-                    tpot_recent_ms=(sum(tpot_recent[-16:]) /
-                                    max(1, len(tpot_recent[-16:]))
-                                    if tpot_recent else 50.0),
-                    gamma_prev=gamma_prev)
-                dec = policy.decide("engine", feats)
-                gamma = min(gmax, max(1, int(dec.gamma)))
-                stats.gamma_seq.append(gamma)
-                key, ks = jax.random.split(key)
-                state, out_buf, cursor, nacc_buf = step(
-                    self.draft_params, self.target_params, state, ks,
-                    jnp.asarray(gamma, jnp.int32),
-                    jnp.asarray(it, jnp.int32),
-                    out_buf, cursor, nacc_buf)
-                gamma_prev = float(gamma)
-                it += 1
-            # -- sync point: one tiny host transfer per chunk ---------------
-            cur_host = np.asarray(cursor)
-            nacc_host = np.asarray(nacc_buf[chunk_start:it])
-            chunk_wall = time.perf_counter() - chunk_t0
-            chunk_iters = it - chunk_start
-            for r in range(chunk_iters):
-                alpha_recent.append(float(nacc_host[r].mean()) /
-                                    stats.gamma_seq[chunk_start + r])
-            chunk_tokens = int(cur_host.sum()) - prev_cursor_sum
-            prev_cursor_sum = int(cur_host.sum())
-            mean_tok = chunk_tokens / max(1, B * chunk_iters)
-            tpot_recent.append((chunk_wall * 1e3 / chunk_iters) /
-                               max(1.0, mean_tok))
-            stats.virtual_ms += chunk_iters * self.rtt_ms + chunk_wall * 1e3
-            produced_min = int(cur_host.min())
-
-        # -- finalize: everything else comes off-device exactly once --------
-        nacc_all = np.asarray(nacc_buf)[:it]
-        stats.iterations = it
-        stats.proposed = B * sum(stats.gamma_seq)
-        stats.accepted = int(nacc_all.sum())
-        stats.tokens = prev_cursor_sum - B
-        stats.acceptance_seqs = []
-        for b in range(B):
-            bits: list[int] = []
-            for i in range(it):
-                na = int(nacc_all[i, b])
-                bits.extend([1] * na)
-                if na < stats.gamma_seq[i]:
-                    bits.append(0)
-            stats.acceptance_seqs.append(bits)
-        tokens = np.asarray(out_buf).astype(np.int64)
+        while sess.unfinished and sess.iterations < max_iters:
+            sess.run_chunk(policy, max_iters=max_iters)
+        tokens, stats = sess.snapshot()
         stats.wall_s = time.perf_counter() - t0
         return tokens, stats
 

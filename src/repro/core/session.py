@@ -1,0 +1,397 @@
+"""Persistent slot-based decode session — continuous batching on real models.
+
+:class:`DecodeSession` owns a fixed-capacity pool of batch rows ("slots")
+whose KV/SSM caches, output buffers and cursors live ON DEVICE across
+requests. Requests are admitted into free slots by a jitted prefill-insert
+(one program per session geometry, any slot / any prompt length ≤ the pad
+bound) and retired from finished slots at ``sync_every`` boundaries; the
+engine's compile-once masked-γ step keeps running untouched while the
+active-slot pattern changes — admission and retirement are *data*, never a
+new XLA program.
+
+Lifecycle of one slot::
+
+    admit (prefill-insert row j)  →  decode chunks (slot active)
+        →  done (budget / EOS; num_new masked to 0, row freezes)
+        →  retire (tokens extracted, host record closed, slot free)
+        →  admit next request (row j fully overwritten)
+
+Invariants the tests pin down:
+
+- a request decoded with staggered co-tenants commits the SAME greedy
+  tokens as a solo :meth:`SpecDecodeEngine.generate` run (attention *and*
+  SSM/hybrid families) — per-row independence of the masked step;
+- retire → re-admit leaves no stale cache state (the insert overwrites the
+  whole row; :func:`repro.models.kvcache.reset_slot` additionally scrubs it
+  for long-lived sessions);
+- the number of compiled XLA programs is constant across any
+  admission/retirement pattern after warmup (one step + one insert).
+
+``SpecDecodeEngine.generate`` is a thin one-wave wrapper over this class;
+the continuous scheduler in :mod:`repro.serving.server` drives it with a
+live arrival queue.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.kvcache import reset_slot
+from .engine import DEFAULT_GAMMA_MAX, GenerationStats
+from .specdec import SpecDecodeState
+from .window import FeatureSnapshot
+
+
+@dataclass
+class SlotRecord:
+    """Host-side bookkeeping for the request occupying one slot."""
+    request_id: int
+    max_new: int
+    admit_it: int                    # session iteration at admission
+    bits: list = field(default_factory=list)   # acceptance 0/1 stream
+    produced: int = 1                # tokens in out_buf row (anchor incl.)
+    proposed: int = 0
+    accepted: int = 0
+    done: bool = False
+
+
+def _canon(tree):
+    """Array-ify non-array leaves (the caches' static ``ring`` flag) so the
+    first jitted call sees the same signature the step returns."""
+    return jax.tree.map(
+        lambda x: x if isinstance(x, jax.Array) else jnp.asarray(x), tree)
+
+
+class DecodeSession:
+    """Fixed-capacity slot pool over a :class:`SpecDecodeEngine`.
+
+    ``capacity``       batch rows (the compiled batch size),
+    ``max_new_cap``    output-buffer width (per-request budgets clamp to it),
+    ``max_prompt_len`` pad bound for per-slot admission (``admit``); a
+                       session only ever driven by ``admit_batch`` may leave
+                       it None and inherits the wave's prompt width,
+    ``gamma_max``      compile-once window bound (session > engine > default),
+    ``sync_every``     decode iterations between host syncs — the admission/
+                       retirement granularity,
+    ``eos_id``         stop token (−1 disables; per-slot budgets always cap).
+    """
+
+    def __init__(self, engine, capacity: int, max_new_cap: int,
+                 max_prompt_len: Optional[int] = None,
+                 gamma_max: Optional[int] = None,
+                 sync_every: Optional[int] = None,
+                 eos_id: int = -1, key: Optional[jax.Array] = None,
+                 log_gamma: bool = True):
+        self.engine = engine
+        self.capacity = int(capacity)
+        self.max_new_cap = int(max_new_cap)
+        self.max_prompt_len = (None if max_prompt_len is None
+                               else int(max_prompt_len))
+        if gamma_max:
+            self.gamma_max = int(gamma_max)
+        elif engine.gamma_max:
+            self.gamma_max = engine.gamma_max
+        else:
+            self.gamma_max = DEFAULT_GAMMA_MAX
+        self.sync_every = max(1, int(sync_every or engine.sync_every))
+        self.eos_id = -1 if eos_id is None else int(eos_id)
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+
+        self.slots_len = (None if self.max_prompt_len is None
+                          else self._cache_len(self.max_prompt_len))
+        self._state: Optional[SpecDecodeState] = None
+        self._slots: list[Optional[SlotRecord]] = [None] * self.capacity
+        self._out_buf = None
+        self._cursor = None
+        self._max_new = None
+        self._done = None
+        self._nacc = None
+        self._nn = None
+
+        # engine-wide accounting / window-policy features. Feature lists
+        # are bounded (only the last 16 samples feed FeatureSnapshot) and
+        # gamma_seq logging is optional so a long-lived serving session
+        # does not grow host state linearly in decode iterations.
+        self.iterations = 0
+        self.proposed = 0
+        self.accepted = 0
+        self.prefill_s = 0.0
+        self.decode_wall_s = 0.0
+        self.virtual_ms = 0.0
+        self.log_gamma = bool(log_gamma)
+        self.gamma_seq: list[int] = []
+        self._alpha_recent: list[float] = []
+        self._tpot_recent: list[float] = []
+        self._gamma_prev = 4.0
+
+    # ------------------------------------------------------------- geometry
+
+    def _cache_len(self, prompt_len: int) -> int:
+        return prompt_len + self.max_new_cap + self.gamma_max + 17
+
+    def _init_buffers(self) -> None:
+        B = self.capacity
+        self._out_buf = jnp.full((B, self.max_new_cap), -1, jnp.int32)
+        self._cursor = jnp.zeros((B,), jnp.int32)
+        self._max_new = jnp.zeros((B,), jnp.int32)
+        self._done = jnp.ones((B,), bool)          # free slots are inert
+        self._nacc = jnp.zeros((self.sync_every, B), jnp.int32)
+        self._nn = jnp.zeros((self.sync_every, B), jnp.int32)
+
+    def _ensure_state(self) -> None:
+        """Lazily build an all-free device state for per-slot admission."""
+        if self._state is not None:
+            return
+        eng = self.engine
+        assert self.max_prompt_len is not None, \
+            "per-slot admission needs max_prompt_len at session creation"
+        for cfg in (eng.draft_cfg, eng.target_cfg):
+            assert cfg.arch_type not in ("vlm", "encdec"), \
+                "per-slot admission needs a frontend-free arch; use " \
+                "admit_batch for vlm/encdec waves"
+        self._state = _canon(SpecDecodeState(
+            draft_cache=eng.draft.init_cache(self.capacity, self.slots_len),
+            target_cache=eng.target.init_cache(self.capacity, self.slots_len),
+            last_token=jnp.zeros((self.capacity,), jnp.int32),
+            pos=jnp.zeros((self.capacity,), jnp.int32)))
+        self._init_buffers()
+
+    # ------------------------------------------------------------ occupancy
+
+    @property
+    def occupied(self) -> list[int]:
+        return [j for j, r in enumerate(self._slots) if r is not None]
+
+    @property
+    def free(self) -> list[int]:
+        return [j for j, r in enumerate(self._slots) if r is None]
+
+    @property
+    def unfinished(self) -> bool:
+        return any(r is not None and not r.done for r in self._slots)
+
+    def finished_slots(self) -> list[int]:
+        return [j for j, r in enumerate(self._slots)
+                if r is not None and r.done]
+
+    def record(self, slot: int) -> Optional[SlotRecord]:
+        return self._slots[slot]
+
+    # ------------------------------------------------------------- admission
+
+    def admit_batch(self, prompts: np.ndarray, max_new,
+                    prompt_lens: Optional[np.ndarray] = None,
+                    frontend=None,
+                    request_ids: Optional[Sequence[int]] = None) -> list[int]:
+        """Admit one full wave into a FRESH session via batched prefill.
+
+        This is the ``generate()`` path (and the only admission path for
+        frontend archs). ``max_new`` may be a scalar or a per-slot vector.
+        """
+        assert self._state is None and not self.occupied, \
+            "admit_batch only fills a fresh session; use admit() for " \
+            "in-flight admission"
+        prompts = jnp.asarray(prompts, jnp.int32)
+        B, S = prompts.shape
+        assert B == self.capacity, (B, self.capacity)
+        if self.max_prompt_len is not None:
+            assert S <= self.max_prompt_len, (S, self.max_prompt_len)
+            if S < self.max_prompt_len:
+                if prompt_lens is None:
+                    prompt_lens = np.full((B,), S, np.int32)
+                prompts = jnp.pad(prompts,
+                                  ((0, 0), (0, self.max_prompt_len - S)))
+        else:
+            self.slots_len = self._cache_len(S)
+
+        t0 = time.perf_counter()
+        self._key, kp = jax.random.split(self._key)
+        pl = (None if prompt_lens is None
+              else jnp.asarray(prompt_lens, jnp.int32))
+        state = self.engine._prefill(prompts, self.slots_len, kp,
+                                     frontend=frontend, prompt_lens=pl)
+        state = _canon(state)
+        self._init_buffers()
+        mn = np.minimum(np.broadcast_to(np.asarray(max_new), (B,)),
+                        self.max_new_cap).astype(np.int32)
+        self._max_new = jnp.asarray(mn)
+        self._done = jnp.zeros((B,), bool)
+        self._cursor = jnp.ones((B,), jnp.int32)
+        self._out_buf = self._out_buf.at[:, 0].set(state.last_token)
+        self._state = jax.block_until_ready(state)
+        self.prefill_s = time.perf_counter() - t0
+        ids = list(request_ids) if request_ids is not None else list(range(B))
+        self._slots = [SlotRecord(request_id=ids[j], max_new=int(mn[j]),
+                                  admit_it=self.iterations)
+                       for j in range(B)]
+        return list(range(B))
+
+    def admit(self, prompt: np.ndarray, max_new: int, request_id: int = 0,
+              slot: Optional[int] = None, block: bool = True) -> int:
+        """Admit one request into a free slot of a LIVE session.
+
+        Runs the jitted prefill-insert: the prompt (right-padded to
+        ``max_prompt_len``) is prefilled at batch size 1 and its cache row,
+        anchor token and lifecycle entries are scattered into the chosen
+        slot. The request's first token exists when this returns (with
+        ``block=True``) — per-request TTFT is measured from its own
+        prefill-insert, not from any wave's."""
+        free = self.free
+        if not free:
+            raise RuntimeError("no free slot; retire a finished request first")
+        j = free[0] if slot is None else slot
+        assert self._slots[j] is None, f"slot {j} is occupied"
+        self._ensure_state()
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        P = self.max_prompt_len
+        assert 1 <= prompt.size <= P, (prompt.size, P)
+        padded = np.zeros((1, P), np.int32)
+        padded[0, :prompt.size] = prompt
+        budget = min(int(max_new), self.max_new_cap)
+        insert = self.engine._insert_step(self.capacity, self.slots_len, P)
+        self._key, kk = jax.random.split(self._key)
+        (self._state, self._out_buf, self._cursor, self._max_new,
+         self._done) = insert(
+            self.engine.draft_params, self.engine.target_params,
+            self._state, self._out_buf, self._cursor, self._max_new,
+            self._done, jnp.asarray(padded),
+            jnp.asarray([prompt.size], jnp.int32),
+            jnp.asarray(j, jnp.int32), jnp.asarray(budget, jnp.int32), kk)
+        if block:
+            jax.block_until_ready(self._cursor)
+        self._slots[j] = SlotRecord(request_id=request_id, max_new=budget,
+                                    admit_it=self.iterations)
+        return j
+
+    # -------------------------------------------------------------- decode
+
+    def run_chunk(self, policy, max_iters: Optional[int] = None,
+                  q_depth: float = 0.0) -> int:
+        """Dispatch up to ``sync_every`` masked steps, then sync the host:
+        cursors/done flags come off-device once, acceptance bits are
+        attributed to the request occupying each slot (``num_new == 0``
+        rows were inactive), and window-policy features update. Returns the
+        number of iterations run."""
+        n = self.sync_every
+        if max_iters is not None:
+            n = min(n, max_iters - self.iterations)
+        if n <= 0 or not self.occupied:
+            return 0
+        eng = self.engine
+        step = eng._step_fn(self.gamma_max)
+        chunk_t0 = time.perf_counter()
+        chunk_gammas: list[int] = []
+        for r in range(n):
+            dec = policy.decide("engine", self._features(q_depth))
+            gamma = min(self.gamma_max, max(1, int(dec.gamma)))
+            if self.log_gamma:
+                self.gamma_seq.append(gamma)
+            chunk_gammas.append(gamma)
+            self._key, ks = jax.random.split(self._key)
+            (self._state, self._out_buf, self._cursor, self._nacc,
+             self._nn, self._done) = step(
+                eng.draft_params, eng.target_params, self._state, ks,
+                jnp.asarray(gamma, jnp.int32), jnp.asarray(r, jnp.int32),
+                self._out_buf, self._cursor, self._nacc, self._nn,
+                self._max_new, self._done,
+                jnp.asarray(self.eos_id, jnp.int32))
+            self._gamma_prev = float(gamma)
+            self.iterations += 1
+        # -- sync point: one tiny host transfer per chunk -------------------
+        cur = np.asarray(self._cursor)
+        done = np.asarray(self._done)
+        nacc = np.asarray(self._nacc[:n])
+        nn = np.asarray(self._nn[:n])
+        chunk_wall = time.perf_counter() - chunk_t0
+
+        for r in range(n):
+            act = nn[r] > 0
+            n_act = int(act.sum())
+            if n_act:
+                self._alpha_recent.append(
+                    float(nacc[r][act].sum()) / (chunk_gammas[r] * n_act))
+                self.proposed += chunk_gammas[r] * n_act
+        self.accepted += int(nacc.sum())
+
+        chunk_tokens = 0
+        for j, rec in enumerate(self._slots):
+            if rec is None:
+                continue
+            for r in range(n):
+                ne = int(nn[r, j])
+                if ne > 0:
+                    # n_accepted is pre-clamped to committed tokens; a
+                    # reject bit exists only when a correction token was
+                    # actually committed (num_new exceeded the accepted
+                    # prefix without the window being fully accepted)
+                    na = int(nacc[r, j])
+                    rec.bits.extend([1] * na)
+                    if ne > na and na < chunk_gammas[r]:
+                        rec.bits.append(0)
+                    rec.proposed += chunk_gammas[r]
+                    rec.accepted += na
+            chunk_tokens += int(cur[j]) - rec.produced
+            rec.produced = int(cur[j])
+            rec.done = bool(done[j])
+
+        active_iters = int((nn > 0).sum())
+        mean_tok = chunk_tokens / max(1, active_iters)
+        self._tpot_recent.append((chunk_wall * 1e3 / n) / max(1.0, mean_tok))
+        del self._alpha_recent[:-16], self._tpot_recent[:-16]
+        self.virtual_ms += n * eng.rtt_ms + chunk_wall * 1e3
+        self.decode_wall_s += chunk_wall
+        return n
+
+    def _features(self, q_depth: float) -> FeatureSnapshot:
+        a = self._alpha_recent[-16:]
+        t = self._tpot_recent[-16:]
+        return FeatureSnapshot(
+            q_depth=q_depth,
+            alpha_recent=(sum(a) / len(a)) if a else 0.7,
+            rtt_recent_ms=self.engine.rtt_ms,
+            tpot_recent_ms=(sum(t) / len(t)) if t else 50.0,
+            gamma_prev=self._gamma_prev)
+
+    # ------------------------------------------------------------ retirement
+
+    def retire(self, slot: int, scrub: bool = False
+               ) -> tuple[np.ndarray, SlotRecord]:
+        """Extract a slot's committed tokens (ONE row transfer, length from
+        the per-slot cursor) and free the slot. The device row stays inert
+        (``done`` masks it) until the next admission overwrites it;
+        ``scrub=True`` additionally resets the row's caches immediately so
+        a long-lived session holds no retired request's KV."""
+        rec = self._slots[slot]
+        assert rec is not None, f"slot {slot} is empty"
+        n = min(rec.produced, self.max_new_cap)
+        tokens = np.asarray(self._out_buf[slot])[:n].astype(np.int64)
+        self._slots[slot] = None
+        if scrub:
+            self._state = reset_slot(self._state, slot)
+        return tokens, rec
+
+    # -------------------------------------------------------------- extract
+
+    def snapshot(self) -> tuple[np.ndarray, GenerationStats]:
+        """Wave-style extraction: the full output buffer plus engine-schema
+        stats over currently-occupied slots (the ``generate()`` epilogue)."""
+        tokens = np.asarray(self._out_buf).astype(np.int64) \
+            if self._out_buf is not None \
+            else np.empty((self.capacity, 0), np.int64)
+        produced = np.array([r.produced if r else 0 for r in self._slots],
+                            np.int64)
+        n_occ = len(self.occupied)
+        stats = GenerationStats(
+            iterations=self.iterations, proposed=self.proposed,
+            accepted=self.accepted,
+            tokens=int(produced.sum()) - n_occ,
+            prefill_s=self.prefill_s, virtual_ms=self.virtual_ms,
+            acceptance_seqs=[r.bits for r in self._slots if r is not None],
+            gamma_seq=list(self.gamma_seq), produced=produced)
+        return tokens, stats

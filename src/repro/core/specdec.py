@@ -175,6 +175,56 @@ def verify_window_greedy(draft_tokens: jax.Array,
 
 
 # --------------------------------------------------------------------------
+# Per-slot stopping (continuous batching)
+# --------------------------------------------------------------------------
+
+class SlotStop(NamedTuple):
+    num_new: jax.Array      # (B,) int32 — tokens to commit after masking
+    n_accepted: jax.Array   # (B,) int32 — masked acceptance count
+    done: jax.Array         # (B,) bool  — updated finished flags
+
+
+def slot_stop_mask(num_new: jax.Array, n_accepted: jax.Array,
+                   new_tokens: jax.Array, cursor: jax.Array,
+                   max_new: jax.Array, done: jax.Array,
+                   eos_id) -> SlotStop:
+    """Per-slot active masking + EOS/length stopping for a batch whose rows
+    ("slots") belong to independent requests at different lifecycle stages.
+
+    - rows with ``done`` commit nothing (``num_new → 0``) so their cursor,
+      position and recurrent state freeze while neighbours keep decoding;
+    - active rows are clamped to their remaining budget
+      ``max_new − cursor`` and marked done when they exhaust it;
+    - a committed ``eos_id`` token (traced int32; −1 disables) truncates
+      the window after the EOS position and marks the row done.
+
+    Pure ``jnp`` on (B,)-shaped operands: one program compiled at the batch
+    capacity serves every admission/retirement pattern with zero recompiles.
+    Any clamp implies ``done``, so a row's ``last_token``/state being "one
+    step ahead" of its committed prefix is never observable.
+    """
+    B, W = new_tokens.shape
+    active = ~done
+    eos = jnp.asarray(eos_id, jnp.int32)
+    num_eff = jnp.where(active,
+                        jnp.minimum(num_new, jnp.maximum(0, max_new - cursor)),
+                        0)
+    arange = jnp.arange(W)[None, :]
+    is_eos = (new_tokens == eos) & (arange < num_eff[:, None]) & (eos >= 0)
+    has_eos = is_eos.any(axis=-1)
+    eos_pos = jnp.argmax(is_eos, axis=-1).astype(jnp.int32)
+    num_eff = jnp.where(has_eos, jnp.minimum(num_eff, eos_pos + 1), num_eff)
+    new_done = done | (cursor + num_eff >= max_new) | has_eos
+    # acceptance stats reflect COMMITTED tokens only: a budget/EOS clamp
+    # that cuts accepted drafts also cuts them from n_accepted, so traces
+    # and acceptance rates match the emitted sequence exactly
+    n_eff = jnp.where(active, jnp.minimum(n_accepted, num_eff), 0)
+    return SlotStop(num_new=num_eff.astype(jnp.int32),
+                    n_accepted=n_eff.astype(jnp.int32),
+                    done=new_done)
+
+
+# --------------------------------------------------------------------------
 # Draft proposal loop
 # --------------------------------------------------------------------------
 

@@ -4,3 +4,14 @@
 - decode_attn  — GQA flash-decode over KV caches (+sliding window/ring)
 - ssd          — Mamba2/SSD chunked scan
 """
+
+from jax.experimental.pallas import tpu as _pltpu
+
+
+def tpu_compiler_params(**kwargs):
+    """Version-compat shim: newer jax exposes ``pltpu.CompilerParams``,
+    older releases call it ``TPUCompilerParams``."""
+    cls = getattr(_pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = _pltpu.TPUCompilerParams
+    return cls(**kwargs)

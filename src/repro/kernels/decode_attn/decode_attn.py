@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from .. import tpu_compiler_params
 
 S_TILE = 512
 NEG_INF = -1e30
@@ -115,7 +116,7 @@ def decode_attn_call(q: jax.Array,        # (B, T, Hkv, G, hd)
         scratch_shapes=[pltpu.VMEM((T, G), jnp.float32),
                         pltpu.VMEM((T, G), jnp.float32),
                         pltpu.VMEM((T, G, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q_pos, q, k, v, pos_map)

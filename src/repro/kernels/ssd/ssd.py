@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from .. import tpu_compiler_params
 
 CHUNK = 128
 
@@ -104,7 +105,7 @@ def ssd_call(x: jax.Array,    # (B, S, nh, hd)
             jax.ShapeDtypeStruct((B, nh, hd, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((hd, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, Bm, Cm, dt, A, h_in)

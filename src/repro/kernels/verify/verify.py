@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from .. import tpu_compiler_params
 
 VOCAB_TILE = 512
 
@@ -127,7 +128,7 @@ def gather_reduce_call(tokens, p, q, tile: int = VOCAB_TILE):
         ],
         out_shape=[jax.ShapeDtypeStruct((B, gamma), jnp.float32)] * 3,
         scratch_shapes=[pltpu.VMEM((gamma,), jnp.float32)] * 3,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=True,
     )(tokens, p, q)

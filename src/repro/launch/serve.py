@@ -1,12 +1,16 @@
 """Serving launcher: edge-draft + cloud-target speculative decoding on real
-JAX models with the paper's window policies.
+JAX models with the paper's window policies, on the continuous slot-based
+scheduler (default) or the wave-batched baseline.
 
     PYTHONPATH=src python -m repro.launch.serve \
         --target qwen3-14b --draft qwen2.5-3b --policy awc \
-        --requests 16 --max-new 48 [--temperature 0.0] [--rtt-ms 10]
+        --requests 16 --max-new 48 [--server continuous|wave] \
+        [--arrival-rate 8] [--temperature 0.0] [--rtt-ms 10]
 
-Reduced-variant models by default (this is the host-runnable driver; the
-full configs exercise the dry-run path).
+``--arrival-rate`` draws Poisson arrivals (requests/s); TTFT and e2e are
+measured from each request's arrival, so they include queue wait. Reduced-
+variant models by default (this is the host-runnable driver; the full
+configs exercise the dry-run path).
 """
 
 from __future__ import annotations
@@ -23,7 +27,8 @@ from ..core.engine import SpecDecodeEngine
 from ..core.window import (AWCWindowPolicy, DynamicWindowPolicy,
                            StaticWindowPolicy)
 from ..core.awc.model import default_predictor
-from ..serving import ServeRequest, ServerConfig, SpecDecodeServer
+from ..serving import (ServeRequest, ServerConfig, SpecDecodeServer,
+                       WaveSpecDecodeServer)
 
 
 def build_policy(name: str, gamma: int):
@@ -46,6 +51,11 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--server", default="continuous",
+                    choices=["continuous", "wave"],
+                    help="continuous slot scheduler vs wave-batched baseline")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrivals per second (0 = all at t=0)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--rtt-ms", type=float, default=10.0)
     ap.add_argument("--gamma-max", type=int, default=12,
@@ -69,22 +79,30 @@ def main(argv=None) -> int:
                               gamma_max=args.gamma_max,
                               sync_every=args.sync_every,
                               key=jax.random.PRNGKey(args.seed))
-    server = SpecDecodeServer(engine, build_policy(args.policy, args.gamma),
-                              ServerConfig(max_batch=args.max_batch))
+    server_cls = (SpecDecodeServer if args.server == "continuous"
+                  else WaveSpecDecodeServer)
+    server = server_cls(engine, build_policy(args.policy, args.gamma),
+                        ServerConfig(max_batch=args.max_batch))
     rng = np.random.default_rng(args.seed)
+    arrival = 0.0
     for i in range(args.requests):
         plen = int(rng.integers(8, 48))
+        if args.arrival_rate > 0:
+            arrival += float(rng.exponential(1.0 / args.arrival_rate))
         server.submit(ServeRequest(
-            i, rng.integers(0, vocab, plen).astype(np.int32), args.max_new))
+            i, rng.integers(0, vocab, plen).astype(np.int32), args.max_new,
+            arrival_s=arrival))
     results = server.run()
 
     accs = [r.acceptance_rate for r in results]
     tpots = [r.tpot_ms for r in results]
     summary = {
+        "server": args.server,
         "policy": args.policy,
         "requests": len(results),
         "mean_acceptance": float(np.mean(accs)),
         "mean_ttft_ms": float(np.mean([r.ttft_ms for r in results])),
+        "mean_queue_ms": float(np.mean([r.queue_ms for r in results])),
         "mean_tpot_ms": float(np.mean(tpots)),
         "mean_e2e_ms": float(np.mean([r.e2e_ms for r in results])),
         "compiled_step_programs": engine.compiled_programs(),
@@ -93,7 +111,7 @@ def main(argv=None) -> int:
         print(json.dumps(summary, indent=1))
     else:
         print(f"served {summary['requests']} requests  "
-              f"policy={args.policy}  "
+              f"server={args.server}  policy={args.policy}  "
               f"acceptance={summary['mean_acceptance']:.3f}  "
               f"ttft={summary['mean_ttft_ms']:.1f}ms  "
               f"tpot={summary['mean_tpot_ms']:.1f}ms  "

@@ -104,3 +104,61 @@ class HybridCache(NamedTuple):
     attention cache reused at each shared-block invocation site."""
     ssm: SSMCache
     attn: AttnCache
+
+
+# --------------------------------------------------------------------------
+# Slot recycling (continuous batching)
+#
+# A serving DecodeSession keeps ONE live cache of fixed batch capacity and
+# recycles batch rows ("slots") across requests: a finished request's slot
+# is retired and a new prompt's freshly prefilled cache row is inserted in
+# its place, without touching neighbouring rows. Both helpers are jittable
+# with a traced ``slot`` index, so admission/retirement never recompiles.
+# --------------------------------------------------------------------------
+
+def insert_slot(dst, src, slot, batch_axis: int = 1):
+    """Write batch row 0 of every array leaf of ``src`` into batch row
+    ``slot`` of the matching leaf of ``dst``.
+
+    Works on any cache pytree (:class:`AttnCache`, :class:`SSMCache`,
+    :class:`HybridCache`, encdec caches, full ``SpecDecodeState`` trees):
+    layer-stacked leaves carry batch on ``batch_axis`` (L, B, ...); rank-1
+    leaves (per-sequence scalars like ``pos``/``last_token``) carry it on
+    axis 0. Non-array leaves (the static ``ring`` flag) keep ``dst``'s
+    value. ``slot`` may be a traced int32 — the write lowers to
+    ``dynamic_update_index_in_dim``, one compiled program for any slot."""
+    def ins(d, s):
+        if not isinstance(d, jax.Array) or d.ndim == 0:
+            return d
+        ax = batch_axis if d.ndim > batch_axis else 0
+        row = jax.lax.index_in_dim(jnp.asarray(s), 0, axis=ax, keepdims=True)
+        return jax.lax.dynamic_update_index_in_dim(
+            d, row.astype(d.dtype), slot, axis=ax)
+    return jax.tree.map(ins, dst, src)
+
+
+def reset_slot(cache, slot, batch_axis: int = 1):
+    """Scrub batch row ``slot`` of a cache pytree back to its init state:
+    k/v/conv/state zeroed, ``pos_map`` re-filled with −1 (empty). Insertion
+    already fully overwrites a slot, so this is hygiene for long-lived
+    sessions (drops stale KV of retired requests) rather than a
+    correctness requirement; the retire→re-admit tests assert both paths."""
+    def _scrub(node):
+        if isinstance(node, tuple) and hasattr(node, "_fields"):
+            vals = {}
+            for name in node._fields:
+                leaf = getattr(node, name)
+                if isinstance(leaf, jax.Array) and leaf.ndim > 0:
+                    ax = batch_axis if leaf.ndim > batch_axis else 0
+                    fill = -1 if name == "pos_map" else 0
+                    row = jnp.full_like(
+                        jax.lax.index_in_dim(leaf, 0, axis=ax,
+                                             keepdims=True), fill)
+                    vals[name] = jax.lax.dynamic_update_index_in_dim(
+                        leaf, row, slot, axis=ax)
+                else:
+                    vals[name] = _scrub(leaf) if isinstance(leaf, tuple) \
+                        else leaf
+            return type(node)(**vals)
+        return node
+    return _scrub(cache)

@@ -1,4 +1,5 @@
-"""Serving substrate: batched request serving over the SD engine."""
+"""Serving substrate: continuous slot-based request serving over a
+persistent DecodeSession (plus the wave-batched baseline)."""
 
 from .server import (ServeRequest, ServeResult, ServerConfig,
-                     SpecDecodeServer)
+                     SpecDecodeServer, WaveSpecDecodeServer)

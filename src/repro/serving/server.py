@@ -1,17 +1,26 @@
-"""In-process batched serving loop on real JAX models.
+"""In-process serving on real JAX models — continuous (iteration-level)
+batching over a persistent :class:`repro.core.session.DecodeSession`.
 
-Wave-based batched serving: requests are admitted from a queue into waves of
-up to ``max_batch`` sequences (FIFO or length-aware grouping — the same
-policies DSD-Sim models), each wave runs the distributed speculative
-decoding engine with the configured window policy, and per-request
-TTFT/TPOT/e2e metrics are recorded in the same schema as DSD-Sim's analyzer
-(so simulator predictions and real execution are directly comparable —
-that comparison is benchmarks/fig4's decode-path calibration).
+:class:`SpecDecodeServer` is a slot-based continuous scheduler: requests
+are admitted into free slots of a live decode session the moment they have
+arrived and a slot is open (admission policy mirroring
+``sim/policies.py`` — FIFO or length-aware LAB), decode proceeds in
+``sync_every``-iteration chunks shared by all co-resident requests, and
+finished requests retire at chunk boundaries, freeing their slot for the
+next arrival without stalling neighbours. This is the execution model
+DSD-Sim assumes (``BatchingConfig.continuous=True``), so simulator
+predictions and real execution are directly comparable — that comparison
+is ``benchmarks/bench_serving.py``'s sim↔real delta.
 
-Continuous (iteration-level) batching is modeled in DSD-Sim; the real-model
-server uses wave batching, which keeps the engine state dense. Sequences
-that finish early in a wave simply stop contributing tokens (their slots pad
-until the wave completes).
+Per-request metrics include queue wait: TTFT runs from the request's own
+``arrival_s`` to the end of its own prefill-insert (its anchor token), and
+e2e to its retirement; token payloads come from the per-sequence cursor,
+never from an assumed ``max_new_tokens``.
+
+:class:`WaveSpecDecodeServer` keeps the previous wave-batched execution
+model (admit a wave, drain it fully, admit the next) as the measured
+baseline: a long sequence holds every slot in its wave hostage, which is
+exactly the sim↔real gap the continuous scheduler closes.
 """
 
 from __future__ import annotations
@@ -23,6 +32,7 @@ from typing import Optional
 import numpy as np
 
 from ..core.engine import SpecDecodeEngine
+from ..core.session import DecodeSession
 from ..core.window import StaticWindowPolicy, WindowPolicy
 
 
@@ -31,27 +41,50 @@ class ServeRequest:
     request_id: int
     prompt: np.ndarray           # (S,) int32
     max_new_tokens: int
-    arrival_s: float = 0.0
+    arrival_s: float = 0.0       # relative to the serve-loop start
 
 
 @dataclass
 class ServeResult:
     request_id: int
-    tokens: np.ndarray
-    ttft_ms: float
-    tpot_ms: float
-    e2e_ms: float
+    tokens: np.ndarray           # exactly the tokens produced (cursor-true)
+    ttft_ms: float               # arrival → own first token (queue incl.)
+    tpot_ms: float               # first token → finish, per later token
+    e2e_ms: float                # arrival → retirement
     acceptance_rate: float
+    queue_ms: float = 0.0        # arrival → admission start
 
 
 @dataclass
 class ServerConfig:
-    max_batch: int = 8
-    length_aware: bool = True    # LAB wave formation
+    max_batch: int = 8           # slot-pool capacity
+    length_aware: bool = True    # LAB admission (vs FIFO), as in sim
     pad_to: int = 16             # prompt padding quantum
+    max_prompt_len: Optional[int] = None   # continuous pad bound
+                                           # (default: queue max, rounded)
+    max_new_cap: Optional[int] = None      # output width (default: queue max)
+    eos_id: int = -1
+    sync_every: Optional[int] = None       # admission/retirement granularity
+
+
+class _ArrivalClock:
+    """Wall clock for the serve loop; ``wait_until`` idles to an arrival."""
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def wait_until(self, t_s: float) -> None:
+        d = t_s - self.now()
+        if d > 0:
+            time.sleep(d)
 
 
 class SpecDecodeServer:
+    """Continuous slot-based scheduler over one decode session."""
+
     def __init__(self, engine: SpecDecodeEngine,
                  window_policy: Optional[WindowPolicy] = None,
                  cfg: Optional[ServerConfig] = None):
@@ -64,23 +97,124 @@ class SpecDecodeServer:
     def submit(self, req: ServeRequest) -> None:
         self.queue.append(req)
 
-    # -- wave formation (FIFO vs LAB, mirroring sim/policies.py) -------------
+    # -- admission (FIFO vs LAB, mirroring sim/policies.py) ------------------
 
-    def _next_wave(self) -> list[ServeRequest]:
-        if not self.queue:
+    def _select_admissions(self, arrived: list[ServeRequest],
+                           k: int) -> list[ServeRequest]:
+        """Pick ≤ k arrived requests: head-of-line always goes; LAB fills
+        the remaining free slots with the requests whose prompt lengths are
+        closest to the head's (minimum intra-pool padding waste), FIFO in
+        arrival order — the same rule ``sim.policies.LengthAwareBatching``
+        applies to a wave."""
+        if not arrived or k <= 0:
             return []
-        head = self.queue.pop(0)
+        head = arrived[0]
+        if not self.cfg.length_aware:
+            return arrived[:k]
+        rest = sorted(arrived[1:],
+                      key=lambda r: abs(len(r.prompt) - len(head.prompt)))
+        return [head] + rest[:k - 1]
+
+    # -- serve loop ----------------------------------------------------------
+
+    def _make_session(self, pending: list[ServeRequest]) -> DecodeSession:
+        q = self.cfg.pad_to
+        mp = self.cfg.max_prompt_len or max(len(r.prompt) for r in pending)
+        mp = ((mp + q - 1) // q) * q
+        cap = self.cfg.max_new_cap or max(r.max_new_tokens for r in pending)
+        gmax = (self.engine.gamma_max or
+                self.engine._policy_gamma_bound(self.policy))
+        return DecodeSession(self.engine, capacity=self.cfg.max_batch,
+                             max_new_cap=cap, max_prompt_len=mp,
+                             gamma_max=gmax,
+                             sync_every=self.cfg.sync_every,
+                             eos_id=self.cfg.eos_id, log_gamma=False)
+
+    def run(self) -> list[ServeResult]:
+        """Drain the submitted stream; returns per-request results.
+
+        Loop invariant per cycle: admit arrived requests into free slots →
+        run one decode chunk → retire finished slots. When no request is
+        in flight the loop idles to the next arrival instead of spinning.
+        """
+        if not self.queue:
+            return self.results
+        pending = sorted(self.queue, key=lambda r: r.arrival_s)
+        self.queue = []
+        session = self._make_session(pending)
+        clock = _ArrivalClock()
+        in_flight: dict[int, tuple[ServeRequest, float, float]] = {}
+
+        while pending or session.occupied:
+            now = clock.now()
+            arrived = [r for r in pending if r.arrival_s <= now]
+            free = session.free
+            if free and arrived:
+                for r in self._select_admissions(arrived, len(free)):
+                    admit_start = clock.now()
+                    session.admit(r.prompt, r.max_new_tokens,
+                                  request_id=r.request_id)
+                    in_flight[r.request_id] = (r, admit_start, clock.now())
+                    pending.remove(r)
+                    arrived.remove(r)
+            if not session.occupied:
+                clock.wait_until(min(r.arrival_s for r in pending))
+                continue
+            # q_depth: requests that have ARRIVED and wait for a slot —
+            # future arrivals must not leak into policy features
+            session.run_chunk(
+                self.policy,
+                q_depth=len(arrived) / max(1, 4 * self.cfg.max_batch))
+            for j in session.finished_slots():
+                tokens, rec = session.retire(j)
+                r, admit_s, first_tok_s = in_flight.pop(rec.request_id)
+                end_s = clock.now()
+                n = len(tokens)
+                bits = rec.bits
+                self.results.append(ServeResult(
+                    request_id=r.request_id,
+                    tokens=tokens,
+                    ttft_ms=(first_tok_s - r.arrival_s) * 1e3,
+                    tpot_ms=(end_s - first_tok_s) * 1e3 / max(1, n - 1),
+                    e2e_ms=(end_s - r.arrival_s) * 1e3,
+                    acceptance_rate=(sum(bits) / len(bits)) if bits else 0.0,
+                    queue_ms=(admit_s - r.arrival_s) * 1e3))
+        return self.results
+
+
+class WaveSpecDecodeServer:
+    """Wave-batched baseline: requests are admitted in waves of up to
+    ``max_batch`` sequences (FIFO or LAB grouping), each wave runs
+    ``engine.generate`` to the wave-max token budget, and the next wave
+    starts only when the whole wave has drained. Kept as the measured
+    baseline for ``benchmarks/bench_serving.py``; new code should use the
+    continuous :class:`SpecDecodeServer`."""
+
+    def __init__(self, engine: SpecDecodeEngine,
+                 window_policy: Optional[WindowPolicy] = None,
+                 cfg: Optional[ServerConfig] = None):
+        self.engine = engine
+        self.policy = window_policy or StaticWindowPolicy(4)
+        self.cfg = cfg or ServerConfig()
+        self.queue: list[ServeRequest] = []
+        self.results: list[ServeResult] = []
+
+    def submit(self, req: ServeRequest) -> None:
+        self.queue.append(req)
+
+    def _next_wave(self, arrived: list[ServeRequest]) -> list[ServeRequest]:
+        head = arrived.pop(0)
         wave = [head]
         if self.cfg.length_aware:
-            rest = sorted(self.queue,
+            rest = sorted(arrived,
                           key=lambda r: abs(len(r.prompt) - len(head.prompt)))
             chosen = rest[: self.cfg.max_batch - 1]
             ids = {id(c) for c in chosen}
-            self.queue = [r for r in self.queue if id(r) not in ids]
+            arrived[:] = [r for r in arrived if id(r) not in ids]
             wave.extend(chosen)
         else:
-            while self.queue and len(wave) < self.cfg.max_batch:
-                wave.append(self.queue.pop(0))
+            while arrived and len(wave) < self.cfg.max_batch:
+                wave.append(arrived.pop(0))
         return wave
 
     def _pad_prompts(self, wave: list[ServeRequest]
@@ -100,30 +234,43 @@ class SpecDecodeServer:
         return out, lens
 
     def run(self) -> list[ServeResult]:
-        """Drain the queue; returns per-request results."""
-        while self.queue:
-            wave = self._next_wave()
+        """Drain the queue wave by wave; returns per-request results."""
+        pending = sorted(self.queue, key=lambda r: r.arrival_s)
+        self.queue = []
+        clock = _ArrivalClock()
+        while pending:
+            now = clock.now()
+            arrived = [r for r in pending if r.arrival_s <= now]
+            if not arrived:
+                clock.wait_until(min(r.arrival_s for r in pending))
+                continue
+            wave = self._next_wave(arrived)
+            for r in wave:
+                pending.remove(r)
             prompts, lens = self._pad_prompts(wave)
             max_new = max(r.max_new_tokens for r in wave)
-            t0 = time.perf_counter()
+            wave_start = clock.now()
             tokens, stats = self.engine.generate(prompts, max_new,
                                                  window_policy=self.policy,
-                                                 prompt_lens=lens)
-            wall_ms = (time.perf_counter() - t0) * 1e3
+                                                 prompt_lens=lens,
+                                                 eos_id=self.cfg.eos_id)
+            wave_end = clock.now()
             # wave-level timing attribution: the measured prefill wall time
-            # IS the TTFT for every wave member (the anchor token is sampled
-            # at the end of prefill); decode time spread per produced token
-            ttft_ms = stats.prefill_ms
-            decode_ms = max(0.0, wall_ms - ttft_ms)
+            # IS the first-token time for every wave member (the anchor
+            # token is sampled at the end of the batched prefill); decode
+            # time spreads per produced token. Queue wait — arrival to the
+            # wave's prefill — is part of every member's TTFT.
+            first_tok_s = wave_start + stats.prefill_s
             for i, r in enumerate(wave):
-                n = r.max_new_tokens
+                n = min(r.max_new_tokens, int(stats.produced[i]))
                 seq_bits = stats.acceptance_seqs[i]
                 acc = (sum(seq_bits) / len(seq_bits)) if seq_bits else 0.0
                 self.results.append(ServeResult(
                     request_id=r.request_id,
                     tokens=tokens[i, :n],
-                    ttft_ms=ttft_ms,
-                    tpot_ms=decode_ms / max(1, n - 1),
-                    e2e_ms=wall_ms,
-                    acceptance_rate=acc))
+                    ttft_ms=(first_tok_s - r.arrival_s) * 1e3,
+                    tpot_ms=(wave_end - first_tok_s) * 1e3 / max(1, n - 1),
+                    e2e_ms=(wave_end - r.arrival_s) * 1e3,
+                    acceptance_rate=acc,
+                    queue_ms=(wave_start - r.arrival_s) * 1e3))
         return self.results

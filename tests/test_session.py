@@ -1,0 +1,233 @@
+"""Continuous-batching regression tests for the slot-based DecodeSession.
+
+The invariants: a request decoded in a session with staggered co-tenants
+commits greedy tokens BIT-identical to a solo ``generate()`` run (per-row
+independence of the masked step, attention and SSM/hybrid families);
+retiring a slot and re-admitting into it leaves no stale cache state; and
+any admission/retirement pattern reuses the same two XLA programs (one
+masked step + one prefill-insert) — continuous batching never recompiles.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import SpecDecodeEngine
+from repro.core.session import DecodeSession
+from repro.core.window import StaticWindowPolicy
+from repro.models import build_model
+from repro.models.kvcache import init_attn_cache, insert_slot, reset_slot
+from repro.serving import (ServeRequest, ServerConfig, SpecDecodeServer,
+                           WaveSpecDecodeServer)
+
+DRAFT = ModelConfig(name="d", arch_type="dense", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                    dtype="float32", remat=False)
+TARGETS = {
+    "dense": dataclasses.replace(DRAFT, name="t", n_layers=3, n_kv_heads=4),
+    "ssm": ModelConfig(name="ts", arch_type="ssm", n_layers=2, d_model=64,
+                       n_heads=0, n_kv_heads=0, d_ff=0, vocab=128,
+                       ssm_state=16, ssm_head_dim=16, ssm_chunk=8,
+                       dtype="float32", remat=False, tie_embeddings=True),
+    "hybrid": ModelConfig(name="th", arch_type="hybrid", n_layers=4,
+                          d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                          head_dim=16, vocab=128, ssm_state=16,
+                          ssm_head_dim=16, ssm_chunk=8, attn_every=2,
+                          dtype="float32", remat=False),
+}
+GAMMA = 3
+
+
+def _engine(family):
+    return SpecDecodeEngine(DRAFT, TARGETS[family], temperature=0.0,
+                            key=jax.random.PRNGKey(7))
+
+
+def _drain(session, policy, outs, max_chunks=64):
+    """Run chunks until every occupied slot finished, retiring as we go."""
+    for _ in range(max_chunks):
+        if not session.unfinished:
+            break
+        session.run_chunk(policy)
+        for j in session.finished_slots():
+            toks, rec = session.retire(j)
+            outs[rec.request_id] = toks
+    assert not session.unfinished
+
+
+def _run_staggered(eng, prompts, budgets, scrub=False):
+    """Admit request 0 alone, co-admit 1 and 2 mid-flight, retire 0 and
+    re-admit request 3 into its freed slot; returns {request_id: tokens}
+    and the compiled-program count delta across the in-flight churn."""
+    pol = StaticWindowPolicy(GAMMA)
+    sess = DecodeSession(eng, capacity=3, max_new_cap=max(budgets),
+                         max_prompt_len=16, gamma_max=GAMMA, sync_every=2)
+    outs = {}
+    sess.admit(prompts[0], budgets[0], request_id=0)
+    sess.run_chunk(pol)                      # slot 0 decodes solo first
+    warm = eng.compiled_programs()           # step + insert both compiled
+    sess.admit(prompts[1], budgets[1], request_id=1)
+    sess.admit(prompts[2], budgets[2], request_id=2)
+    while 0 not in outs:
+        sess.run_chunk(pol)
+        for j in sess.finished_slots():
+            toks, rec = sess.retire(j, scrub=scrub)
+            outs[rec.request_id] = toks
+    assert sess.free, "request 0 should have freed a slot"
+    sess.admit(prompts[3], budgets[3], request_id=3)   # re-admission
+    _drain(sess, pol, outs)
+    return outs, eng.compiled_programs() - warm
+
+
+@pytest.mark.parametrize("family", sorted(TARGETS))
+@pytest.mark.slow
+def test_staggered_cotenants_bit_identical(family):
+    """Greedy tokens under in-flight admission/retirement == solo generate,
+    for attention AND recurrent-state targets, with zero recompiles across
+    the churn."""
+    eng = _engine(family)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 128, int(n)).astype(np.int32)
+               for n in (9, 13, 6, 11)]
+    budgets = [12, 8, 12, 10]
+    outs, recompiles = _run_staggered(eng, prompts, budgets)
+    assert recompiles == 0
+    for rid in range(4):
+        solo, _ = eng.generate(prompts[rid][None, :], budgets[rid],
+                               StaticWindowPolicy(GAMMA))
+        assert len(outs[rid]) == budgets[rid]
+        np.testing.assert_array_equal(outs[rid], solo[0, :budgets[rid]])
+
+
+def test_retire_readmit_no_stale_state():
+    """The same prompt admitted into a recycled slot (with a live
+    co-tenant) decodes identically on both visits, with and without
+    explicit slot scrubbing."""
+    eng = _engine("dense")
+    rng = np.random.default_rng(5)
+    p = rng.integers(0, 128, 9).astype(np.int32)
+    co = rng.integers(0, 128, 12).astype(np.int32)
+    pol = StaticWindowPolicy(GAMMA)
+    for scrub in (False, True):
+        sess = DecodeSession(eng, capacity=2, max_new_cap=8,
+                             max_prompt_len=16, gamma_max=GAMMA,
+                             sync_every=2)
+        sess.admit(co, 8, request_id=99)         # long-lived co-tenant
+        first = sess.admit(p, 6, request_id=0)
+        outs = {}
+        while 0 not in outs:
+            sess.run_chunk(pol)
+            for j in sess.finished_slots():
+                toks, rec = sess.retire(j, scrub=scrub)
+                outs[rec.request_id] = toks
+        again = sess.admit(p, 6, request_id=1)   # recycled slot
+        assert again == first
+        _drain(sess, pol, outs)
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_session_zero_recompiles_across_churn():
+    """After the first admit + first chunk, the program count is frozen:
+    admissions into any slot, retirements and re-admissions are data."""
+    eng = _engine("dense")
+    rng = np.random.default_rng(1)
+    pol = StaticWindowPolicy(GAMMA)
+    sess = DecodeSession(eng, capacity=2, max_new_cap=6, max_prompt_len=12,
+                         gamma_max=GAMMA, sync_every=2)
+    sess.admit(rng.integers(0, 128, 7).astype(np.int32), 6, request_id=0)
+    sess.run_chunk(pol)
+    warm = eng.compiled_programs()
+    assert warm == 2         # one masked step + one prefill-insert
+    outs = {}
+    for rid in range(1, 5):  # churn: varying lengths/budgets/slots
+        plen = int(rng.integers(2, 12))
+        sess.admit(rng.integers(0, 128, plen).astype(np.int32),
+                   int(rng.integers(2, 7)), request_id=rid)
+        while not sess.free:
+            sess.run_chunk(pol)
+            for j in sess.finished_slots():
+                toks, rec = sess.retire(j)
+                outs[rec.request_id] = toks
+    _drain(sess, pol, outs)
+    assert eng.compiled_programs() == warm
+    assert set(outs) == set(range(5))
+
+
+def test_eos_stops_slot_early():
+    """A committed eos_id truncates the request at the EOS token and frees
+    its budget; other rows are unaffected."""
+    eng = _engine("dense")
+    rng = np.random.default_rng(2)
+    p = rng.integers(0, 128, 8).astype(np.int32)
+    ref, _ = eng.generate(p[None, :], 12, StaticWindowPolicy(GAMMA))
+    eos = int(ref[0, 5])                      # 6th greedy token as EOS
+    toks, stats = eng.generate(p[None, :], 12, StaticWindowPolicy(GAMMA),
+                               eos_id=eos)
+    k = int(np.argmax(ref[0, :12] == eos))    # first occurrence
+    assert int(stats.produced[0]) == k + 1
+    np.testing.assert_array_equal(toks[0, :k + 1], ref[0, :k + 1])
+    assert (toks[0, k + 1:] == -1).all()
+
+
+def test_insert_and_reset_slot_helpers():
+    """kvcache slot recycling primitives: insert writes exactly one batch
+    row; reset scrubs exactly one batch row back to init state."""
+    c = init_attn_cache(n_layers=2, batch=3, slots=5, n_kv=2, head_dim=4,
+                        dtype=np.float32)
+    one = init_attn_cache(n_layers=2, batch=1, slots=5, n_kv=2, head_dim=4,
+                          dtype=np.float32)
+    one = one._replace(k=one.k + 1.0, v=one.v + 2.0,
+                       pos_map=one.pos_map * 0 + 7)
+    ins = insert_slot(c, one, 1)
+    assert (np.asarray(ins.k[:, 1]) == 1.0).all()
+    assert (np.asarray(ins.pos_map[:, 1]) == 7).all()
+    assert (np.asarray(ins.k[:, 0]) == 0.0).all()       # neighbours intact
+    assert (np.asarray(ins.pos_map[:, 2]) == -1).all()
+    back = reset_slot(ins, 1)
+    assert (np.asarray(back.k[:, 1]) == 0.0).all()
+    assert (np.asarray(back.pos_map[:, 1]) == -1).all()
+    assert (np.asarray(back.pos_map[:, 0]) == -1).all()
+
+
+def test_continuous_server_metrics_schema():
+    """Stream served end-to-end: cursor-true token payloads, and
+    arrival-anchored timing (queue wait ≤ TTFT ≤ e2e)."""
+    eng = _engine("dense")
+    rng = np.random.default_rng(0)
+    srv = SpecDecodeServer(eng, StaticWindowPolicy(GAMMA),
+                           ServerConfig(max_batch=2, pad_to=4))
+    budgets = {}
+    for i in range(5):
+        plen = int(rng.integers(5, 14))
+        budgets[i] = int(rng.integers(4, 9))
+        srv.submit(ServeRequest(i, rng.integers(0, 128, plen)
+                                .astype(np.int32), budgets[i],
+                                arrival_s=0.02 * i))
+    results = {r.request_id: r for r in srv.run()}
+    assert set(results) == set(range(5))
+    for i, r in results.items():
+        assert len(r.tokens) == budgets[i]
+        assert (r.tokens >= 0).all()
+        assert 0.0 <= r.queue_ms <= r.ttft_ms <= r.e2e_ms
+        assert r.tpot_ms > 0
+
+
+def test_wave_server_cursor_true_tokens():
+    """The wave baseline also reports per-request payloads from the
+    per-sequence cursor and arrival-anchored TTFT."""
+    eng = _engine("dense")
+    rng = np.random.default_rng(4)
+    srv = WaveSpecDecodeServer(eng, StaticWindowPolicy(GAMMA),
+                               ServerConfig(max_batch=2, pad_to=4))
+    for i in range(4):
+        srv.submit(ServeRequest(i, rng.integers(0, 128, int(rng.integers(
+            5, 12))).astype(np.int32), 6 + 2 * (i % 2)))
+    results = {r.request_id: r for r in srv.run()}
+    assert set(results) == set(range(4))
+    for i, r in results.items():
+        assert len(r.tokens) == 6 + 2 * (i % 2)
+        assert (r.tokens >= 0).all()
+        assert r.ttft_ms >= r.queue_ms >= 0.0
