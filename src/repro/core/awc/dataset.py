@@ -207,7 +207,7 @@ def sweep_scenario_pairwise(scn: Scenario,
         pol = None
         for s in obj_seeds:     # seed-averaged objective: stabler δ*
             pol = RecordingWindowPolicy(AWCWindowPolicy(
-                lambda f, d=d: bootstrap_gamma(f) + d))
+                lambda f, d=d: bootstrap_gamma(f, mode_aware=False) + d))
             objs.append(objective(_run(
                 _dc.replace(scn, seed=scn.seed + 1000 * s), pol, hw)))
         per_delta[d] = sum(objs) / len(objs)
@@ -231,7 +231,9 @@ def sweep_scenario_pairwise(scn: Scenario,
         # fused-thrash collapse on the bursty humaneval workload)
         for rec in recorders.values():
             rows.extend(
-                (f, max(2.0, min(12.0, bootstrap_gamma(f) + best)))
+                (f, max(2.0, min(12.0,
+                                 bootstrap_gamma(f, mode_aware=False)
+                                 + best)))
                 for f, _ in rec.log)
         gamma_repr = int(round(4 + best))
     return SweepResult(scenario=scn, gamma=gamma_repr,

@@ -141,8 +141,16 @@ def load(path: str) -> WCDNNParams:
 # Analytic bootstrap controller (pre-training fallback + label prior)
 # --------------------------------------------------------------------------
 
+# mirrors repro.sim.network.DEFAULT_FUSED_CHUNK — not imported because
+# core.window → core.awc → this module loads while repro.sim.scheduler
+# (which imports core.window) may be mid-import; keep the two in sync
+_FUSED_CHUNK_DEFAULT = 8
+
+
 def bootstrap_gamma(feats: list[float], cost_ratio: float = 0.12,
-                    gmax: int = 12) -> float:
+                    gmax: int = 12,
+                    fused_chunk: int = _FUSED_CHUNK_DEFAULT,
+                    mode_aware: bool = True) -> float:
     """γ* maximizing tokens/second from Eq. (1) with network- and
     queue-aware iteration cost:
 
@@ -151,17 +159,38 @@ def bootstrap_gamma(feats: list[float], cost_ratio: float = 0.12,
     where t_verify ≈ TPOT is the per-iteration verification service time.
     High queue depth or RTT pushes γ up (amortize round trips); low α pushes
     γ down (rollback waste). Mirrors the objective the sweep labels encode.
+
+    The controller is MODE-aware (paper Fig. 6 / §3.3): the best
+    distributed rate is compared against the fused (cloud-only)
+    alternative, which produces one token per target step and pays the
+    round trip only once per ``fused_chunk``-token chunk:
+
+        rate_fused = 1 / (1 + (RTT + queue·TPOT) / (chunk · t_verify))
+
+    When fused wins — high RTT relative to target service time, or low α
+    draining E[τ] toward 1 — the controller returns 1.0, which the
+    stabilizer's hysteresis maps to fused mode (γ ≤ 1 ⇒ fused).
+    ``mode_aware=False`` disables the comparison and returns the pure
+    distributed-mode argmax — callers that treat this function as the
+    analytic γ* controller (the WC-DNN label sweep shifts it by δ and
+    runs its OWN fused-vs-distributed objective comparison) must not
+    receive the mode sentinel.
     """
     q_depth, alpha, rtt_ms, tpot_ms, _ = feats
     alpha = min(0.98, max(0.02, alpha))
     t_verify = max(1.0, tpot_ms)
-    overhead = (rtt_ms + max(0.0, q_depth) * tpot_ms) / t_verify
+    stall_ms = rtt_ms + max(0.0, q_depth) * tpot_ms
+    overhead = stall_ms / t_verify
     best_g, best_rate = 1, -1.0
     for g in range(1, gmax + 1):
         e_tau = (1.0 - alpha ** (g + 1)) / (1.0 - alpha)
         rate = e_tau / (g * cost_ratio + 1.0 + overhead)
         if rate > best_rate:
             best_g, best_rate = g, rate
+    if mode_aware:
+        fused_rate = 1.0 / (1.0 + stall_ms / (fused_chunk * t_verify))
+        if fused_rate > best_rate:
+            return 1.0
     return float(best_g)
 
 

@@ -1,12 +1,22 @@
 """Distributed speculative-decoding engine on *real* JAX models.
 
 This is the execution layer the simulator abstracts: an edge draft model and
-a cloud target model exchanging speculation windows (Fig. 1b). On real
-hardware the two jitted programs run on separate pods and exchange only the
-tiny token/verdict payloads; in this container both run on the host and the
-network hop is accounted virtually (``rtt_ms``), while *acceptance outcomes
-are real* — this engine is what captures the ground-truth
-``acceptance_seq`` traces DSD-Sim replays (DESIGN.md §7.3).
+a cloud target model exchanging speculation windows (Fig. 1b). Two ways to
+run the exchange:
+
+- **colocated** (default): one fused jitted step per iteration; any network
+  hop is accounted virtually (``rtt_ms`` on a virtual clock).
+- **distributed** (:meth:`SpecDecodeEngine.split_workers` +
+  :mod:`repro.distributed`): the step is split into a draft-side propose
+  program and a target-side verify/commit program whose token/verdict
+  payloads cross a ``Transport`` — zero-delay in process (bit-identical to
+  the colocated path at temperature 0) or over an emulated edge–cloud link
+  with measured wall-clock delays that feed the AWC ``rtt_recent_ms``
+  feature.
+
+Either way *acceptance outcomes are real* — this engine is what captures
+the ground-truth ``acceptance_seq`` traces DSD-Sim replays (DESIGN.md
+§7.3).
 
 Decode hot loop — compiled ONCE, adaptive-γ AND continuous batching for
 free:
@@ -222,6 +232,19 @@ class SpecDecodeEngine:
         self._draft_attention = draft_cfg.arch_type in (
             "dense", "moe", "vlm", "encdec")
         self._jit_cache: dict = {}
+        self._split = None
+
+    def split_workers(self):
+        """The engine split at the wire: ``(DraftWorker, TargetWorker)``.
+
+        The workers share this engine's models, params and ``_jit_cache``
+        (so :meth:`compiled_programs` counts their programs and the
+        zero-recompile invariant covers the distributed path). Built
+        lazily — colocated sessions never construct them."""
+        if self._split is None:
+            from ..distributed.workers import DraftWorker, TargetWorker
+            self._split = (DraftWorker(self), TargetWorker(self))
+        return self._split
 
     # ------------------------------------------------------------- jit paths
 
@@ -443,7 +466,8 @@ class SpecDecodeEngine:
                  prompt_lens: Optional[np.ndarray] = None,
                  gamma_max: Optional[int] = None,
                  sync_every: Optional[int] = None,
-                 eos_id: int = -1
+                 eos_id: int = -1, transport=None,
+                 mode_policy: str = "auto"
                  ) -> tuple[np.ndarray, GenerationStats]:
         """Batched generation. Returns (tokens (B, max_new), stats).
 
@@ -456,7 +480,10 @@ class SpecDecodeEngine:
         slots — uses the session directly (``repro.serving``). Compile-width
         resolution for ``gamma_max``: this call's override > the
         engine-level pin > the policy's declared bound; policy γ decisions
-        above the width are clamped.
+        above the width are clamped. ``transport``/``mode_policy`` pass
+        through to the session: with a transport, every speculation round
+        is a real draft→verify→verdict exchange between the split workers
+        (:mod:`repro.distributed`).
         """
         from .session import DecodeSession    # session imports engine types
         policy = window_policy or StaticWindowPolicy(4)
@@ -471,7 +498,8 @@ class SpecDecodeEngine:
         t0 = time.perf_counter()
         sess = DecodeSession(self, capacity=B, max_new_cap=max_new_tokens,
                              gamma_max=gmax, sync_every=sync, eos_id=eos_id,
-                             key=key)
+                             key=key, transport=transport,
+                             mode_policy=mode_policy)
         sess.admit_batch(prompts, max_new_tokens, prompt_lens=prompt_lens,
                          frontend=frontend)
         max_iters = max_new_tokens + sync

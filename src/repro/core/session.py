@@ -43,6 +43,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.kvcache import reset_slot
+# fused-mode tokens stream edge-ward one control round trip per this many
+# committed tokens — the same amortization DSD-Sim's ``fused_chunk``
+# charges (one shared constant so sim and real paths cannot drift)
+from ..sim.network import DEFAULT_FUSED_CHUNK as FUSED_FLUSH_TOKENS
 from .engine import DEFAULT_GAMMA_MAX, GenerationStats
 from .specdec import SpecDecodeState
 from .window import FeatureSnapshot
@@ -79,7 +83,14 @@ class DecodeSession:
     ``gamma_max``      compile-once window bound (session > engine > default),
     ``sync_every``     decode iterations between host syncs — the admission/
                        retirement granularity,
-    ``eos_id``         stop token (−1 disables; per-slot budgets always cap).
+    ``eos_id``         stop token (−1 disables; per-slot budgets always cap),
+    ``transport``      a :class:`repro.distributed.Transport`: when set,
+                       speculation rounds run as real draft→verify→verdict
+                       exchanges between the engine's DraftWorker and
+                       TargetWorker over this transport (colocated fused
+                       step otherwise),
+    ``mode_policy``    ``"auto"`` honors ``WindowDecision.mode``,
+                       ``"distributed"``/``"fused"`` force one mode.
     """
 
     def __init__(self, engine, capacity: int, max_new_cap: int,
@@ -87,7 +98,8 @@ class DecodeSession:
                  gamma_max: Optional[int] = None,
                  sync_every: Optional[int] = None,
                  eos_id: int = -1, key: Optional[jax.Array] = None,
-                 log_gamma: bool = True):
+                 log_gamma: bool = True, transport=None,
+                 mode_policy: str = "auto"):
         self.engine = engine
         self.capacity = int(capacity)
         self.max_new_cap = int(max_new_cap)
@@ -102,6 +114,9 @@ class DecodeSession:
         self.sync_every = max(1, int(sync_every or engine.sync_every))
         self.eos_id = -1 if eos_id is None else int(eos_id)
         self._key = key if key is not None else jax.random.PRNGKey(0)
+        assert mode_policy in ("auto", "distributed", "fused"), mode_policy
+        self.transport = transport
+        self.mode_policy = mode_policy
 
         self.slots_len = (None if self.max_prompt_len is None
                           else self._cache_len(self.max_prompt_len))
@@ -126,6 +141,10 @@ class DecodeSession:
         self.virtual_ms = 0.0
         self.log_gamma = bool(log_gamma)
         self.gamma_seq: list[int] = []
+        self.fused_iterations = 0
+        self.link_ms = 0.0               # transport delay imposed so far
+        self._fused_pending = 0          # fused tokens since last flush
+        self._q_zero = None              # cached fused-round q placeholder
         self._alpha_recent: list[float] = []
         self._tpot_recent: list[float] = []
         self._gamma_prev = 4.0
@@ -271,13 +290,47 @@ class DecodeSession:
 
     # -------------------------------------------------------------- decode
 
+    def _decide(self, policy, q_depth: float) -> tuple[int, bool]:
+        """One window-policy decision → (effective γ, fused?).
+
+        ``mode_policy`` overrides the decision's mode; a fused round runs
+        with effective γ = 0 — the traced ``active_gamma`` masks the whole
+        window, so nothing is accepted and the target's own next token is
+        committed (a pure cloud-side autoregressive step). γ = 0 is data,
+        not shape: fused/distributed switching never recompiles."""
+        dec = policy.decide("engine", self._features(q_depth))
+        if self.mode_policy == "fused":
+            fused = True
+        elif self.mode_policy == "distributed":
+            fused = False
+        else:
+            fused = dec.mode == "fused"
+        gamma_eff = 0 if fused else min(self.gamma_max, max(1, int(dec.gamma)))
+        if self.log_gamma:
+            self.gamma_seq.append(1 if fused else gamma_eff)
+        if fused:
+            self.fused_iterations += 1
+        self._gamma_prev = 1.0 if fused else float(gamma_eff)
+        return gamma_eff, fused
+
     def run_chunk(self, policy, max_iters: Optional[int] = None,
                   q_depth: float = 0.0) -> int:
-        """Dispatch up to ``sync_every`` masked steps, then sync the host:
-        cursors/done flags come off-device once, acceptance bits are
+        """Dispatch up to ``sync_every`` speculation rounds, then sync the
+        host: cursors/done flags come off-device once, acceptance bits are
         attributed to the request occupying each slot (``num_new == 0``
         rows were inactive), and window-policy features update. Returns the
-        number of iterations run."""
+        number of iterations run.
+
+        With a ``transport``, each round is a real draft→verify→verdict
+        exchange between the engine's split workers
+        (:meth:`_run_chunk_transport`); otherwise the engine's fused
+        colocated step runs with ``sync_every`` iterations in flight.
+        Both paths honor ``WindowDecision.mode`` — a fused decision
+        commits target-only tokens (the colocated step still pays the
+        draft proposal compute, which is masked dead weight there; the
+        transport path skips the draft and the round trip entirely)."""
+        if self.transport is not None:
+            return self._run_chunk_transport(policy, max_iters, q_depth)
         n = self.sync_every
         if max_iters is not None:
             n = min(n, max_iters - self.iterations)
@@ -288,10 +341,7 @@ class DecodeSession:
         chunk_t0 = time.perf_counter()
         chunk_gammas: list[int] = []
         for r in range(n):
-            dec = policy.decide("engine", self._features(q_depth))
-            gamma = min(self.gamma_max, max(1, int(dec.gamma)))
-            if self.log_gamma:
-                self.gamma_seq.append(gamma)
+            gamma, _fused = self._decide(policy, q_depth)
             chunk_gammas.append(gamma)
             self._key, ks = jax.random.split(self._key)
             (self._state, self._out_buf, self._cursor, self._nacc,
@@ -301,19 +351,186 @@ class DecodeSession:
                 self._out_buf, self._cursor, self._nacc, self._nn,
                 self._max_new, self._done,
                 jnp.asarray(self.eos_id, jnp.int32))
-            self._gamma_prev = float(gamma)
             self.iterations += 1
-        # -- sync point: one tiny host transfer per chunk -------------------
+        self._sync_and_attribute(n, chunk_gammas, chunk_t0,
+                                 non_target_ms=0.0,
+                                 colocated_rtt_ms=eng.rtt_ms)
+        return n
+
+    def _run_chunk_transport(self, policy, max_iters: Optional[int],
+                             q_depth: float) -> int:
+        """Up to ``sync_every`` speculation rounds over the transport.
+
+        Per distributed round: the DraftWorker proposes γ_max tokens, the
+        token ids materialize on the host and cross the transport as a
+        :class:`~repro.distributed.wire.WindowMsg` (paying the link's
+        measured delay), the TargetWorker verifies/commits, and the
+        :class:`~repro.distributed.wire.VerdictMsg` pays the return delay.
+        A fused round skips the draft and both hops; fused-mode tokens
+        stream back in one small control round trip per
+        ``FUSED_FLUSH_TOKENS`` committed tokens — the same per-chunk
+        amortization DSD-Sim charges (``fused_chunk``), which is what
+        makes fused mode comparatively RTT-insensitive. The per-round host
+        sync is inherent — tokens must exist as bytes to cross a wire —
+        so this path trades the colocated loop's in-flight pipelining for
+        a real network boundary."""
+        from ..distributed.wire import VerdictMsg, WindowMsg
+        n = self.sync_every
+        if max_iters is not None:
+            n = min(n, max_iters - self.iterations)
+        if n <= 0 or not self.occupied:
+            return 0
+        eng = self.engine
+        dw, tw = eng.split_workers()
+        G = self.gamma_max
+        B = self.capacity
+        tr = self.transport
+        sampled = eng.temperature > 0.0
+        chunk_t0 = time.perf_counter()
+        chunk_gammas: list[int] = []
+        link_ms = 0.0
+        draft_ms = 0.0
+        done_host = np.asarray(self._done)
+        it_run = 0
+        for r in range(n):
+            if done_host.all():
+                break
+            gamma, fused = self._decide(policy, q_depth)
+            n_active = int(B - done_host.sum())
+            self._key, ks = jax.random.split(self._key)
+            kd, kv = jax.random.split(ks)
+            state = self._state
+            last_host = np.asarray(state.last_token)
+            q_probs = None
+            if fused:
+                window_np = np.zeros((B, G + 1), np.int32)
+                window_np[:, 0] = last_host
+            else:
+                # timing the propose dispatch through the host materialize
+                # isolates the draft's serial scan — excluded from the
+                # TPOT feature like the sim excludes its draft time
+                t_draft = time.perf_counter()
+                toks, q_probs, dcache_prop = dw.propose(G)(
+                    dw.params, state.draft_cache, state.last_token,
+                    state.pos, kd)
+                toks_np = np.asarray(toks)
+                draft_ms += (time.perf_counter() - t_draft) * 1e3
+                msg = WindowMsg(tokens=toks_np, gamma=gamma,
+                                n_active=n_active,
+                                q_probs=q_probs if sampled else None)
+                link_ms += tr.send_window(msg)
+                window_np = np.concatenate([last_host[:, None], msg.tokens],
+                                           axis=1)
+            args = [tw.params, state.target_cache, jnp.asarray(window_np),
+                    state.pos, jnp.asarray(gamma, jnp.int32), kv]
+            if sampled:
+                if q_probs is None:       # fused round: q is never read
+                    if self._q_zero is None:
+                        self._q_zero = jnp.zeros(
+                            (B, G, eng.draft_cfg.vocab), jnp.float32)
+                    q_probs = self._q_zero
+                args.append(q_probs)
+            (tcache, new_pos, new_last, self._out_buf, self._cursor,
+             self._nacc, self._nn, self._done, num_new_dev, nacc_dev,
+             next_raw) = tw.verify_commit(G)(
+                *args, self._out_buf, self._cursor, self._nacc, self._nn,
+                self._max_new, self._done,
+                jnp.asarray(r, jnp.int32), jnp.asarray(self.eos_id,
+                                                       jnp.int32))
+            done_host = np.asarray(self._done)
+            if fused:
+                # the draft shadows the committed token so its cache stays
+                # coherent for a later distributed round
+                dcache = dw.ingest()(dw.params, state.draft_cache,
+                                     state.last_token, state.pos,
+                                     num_new_dev)
+                # cloud-side tokens stream to the edge one control round
+                # trip per FUSED_FLUSH_TOKENS, amortized over the BATCH's
+                # committed tokens: per-request streams overlap on the
+                # link in the sim, so batch-level amortization approximates
+                # their wall-clock cost (per-request stream modeling is a
+                # ROADMAP item)
+                self._fused_pending += int(np.asarray(num_new_dev).sum())
+                while self._fused_pending >= FUSED_FLUSH_TOKENS:
+                    link_ms += tr.control_roundtrip()
+                    self._fused_pending -= FUSED_FLUSH_TOKENS
+            else:
+                verdict = VerdictMsg(
+                    n_accepted=np.asarray(nacc_dev),
+                    num_new=np.asarray(num_new_dev),
+                    next_token=np.asarray(next_raw),
+                    last_token=np.asarray(new_last),
+                    done=done_host, gamma=gamma, n_active=n_active)
+                link_ms += tr.send_verdict(verdict)
+                if dw.attention:
+                    dcache = dcache_prop   # pos_map masks the stale tail
+                else:
+                    # recurrent draft: re-advance the pre-window checkpoint
+                    # over the committed prefix. The correction token never
+                    # enters the advance (it is committed at position
+                    # pos+num_new−1 and only processed by the NEXT round),
+                    # so the [anchor, proposals] window is the advance input.
+                    dcache = dw.advance(G)(dw.params, state.draft_cache,
+                                           jnp.asarray(window_np),
+                                           state.pos, num_new_dev)
+            self._state = SpecDecodeState(
+                draft_cache=dcache, target_cache=tcache,
+                last_token=new_last, pos=new_pos)
+            chunk_gammas.append(gamma)
+            self.iterations += 1
+            it_run += 1
+        if it_run == 0:
+            return 0
+        if self._fused_pending and done_host.all():
+            # the batch drained: flush the sub-chunk tail of fused tokens
+            # so short fused outputs still pay their stream delivery (a
+            # session abandoned mid-stream drains the tail in snapshot())
+            link_ms += tr.control_roundtrip()
+            self._fused_pending = 0
+        self.link_ms += link_ms
+        # the TPOT feature tracks TARGET service time: subtract the
+        # measured draft proposal time and the link delay (only when the
+        # transport really slept it into wall time — a non-sleeping
+        # transport's delay goes to the virtual clock instead)
+        self._sync_and_attribute(
+            it_run, chunk_gammas, chunk_t0,
+            non_target_ms=draft_ms + (link_ms if tr.wall_clock else 0.0),
+            virtual_extra_ms=0.0 if tr.wall_clock else link_ms)
+        return it_run
+
+    def _sync_and_attribute(self, n: int, chunk_gammas: list[int],
+                            chunk_t0: float, non_target_ms: float,
+                            virtual_extra_ms: float = 0.0,
+                            colocated_rtt_ms: float = 0.0) -> None:
+        """Chunk epilogue shared by the colocated and transport paths: one
+        host transfer of cursors/flags/stat rows, per-request acceptance
+        attribution, window-policy feature update. ``chunk_gammas`` holds
+        the EFFECTIVE per-round γ (0 for fused rounds, which propose
+        nothing — their commits enter token counts but not acceptance
+        stats). ``non_target_ms`` (imposed link delay + measured draft
+        proposal time) is excluded from the TPOT feature so it tracks
+        target service time, matching what DSD-Sim's analyzer feeds AWC;
+        the link shows up in ``rtt_recent_ms`` instead.
+
+        Virtual-clock network accounting: the transport path passes its
+        imposed-but-not-slept delay as ``virtual_extra_ms``; the colocated
+        path passes ``colocated_rtt_ms`` and is billed one RTT per
+        distributed round plus the per-token amortized stream flush for
+        fused commits — the same charges the transport path and DSD-Sim
+        make, so ``virtual_ms`` stays comparable across paths."""
         cur = np.asarray(self._cursor)
         done = np.asarray(self._done)
         nacc = np.asarray(self._nacc[:n])
         nn = np.asarray(self._nn[:n])
+        # wall time is measured AFTER the blocking host transfers above:
+        # the colocated loop dispatches its jitted steps asynchronously,
+        # so the chunk's device compute only completes here
         chunk_wall = time.perf_counter() - chunk_t0
 
         for r in range(n):
             act = nn[r] > 0
             n_act = int(act.sum())
-            if n_act:
+            if n_act and chunk_gammas[r] > 0:
                 self._alpha_recent.append(
                     float(nacc[r][act].sum()) / (chunk_gammas[r] * n_act))
                 self.proposed += chunk_gammas[r] * n_act
@@ -325,7 +542,7 @@ class DecodeSession:
                 continue
             for r in range(n):
                 ne = int(nn[r, j])
-                if ne > 0:
+                if ne > 0 and chunk_gammas[r] > 0:
                     # n_accepted is pre-clamped to committed tokens; a
                     # reject bit exists only when a correction token was
                     # actually committed (num_new exceeded the accepted
@@ -342,19 +559,29 @@ class DecodeSession:
 
         active_iters = int((nn > 0).sum())
         mean_tok = chunk_tokens / max(1, active_iters)
-        self._tpot_recent.append((chunk_wall * 1e3 / n) / max(1.0, mean_tok))
+        compute_ms = max(0.0, chunk_wall * 1e3 - non_target_ms)
+        self._tpot_recent.append((compute_ms / n) / max(1.0, mean_tok))
         del self._alpha_recent[:-16], self._tpot_recent[:-16]
-        self.virtual_ms += n * eng.rtt_ms + chunk_wall * 1e3
+        if colocated_rtt_ms > 0.0:
+            n_dist = sum(1 for g in chunk_gammas if g > 0)
+            fused_tokens = int(sum(nn[r].sum() for r in range(n)
+                                   if chunk_gammas[r] == 0))
+            virtual_extra_ms += colocated_rtt_ms * (
+                n_dist + fused_tokens / FUSED_FLUSH_TOKENS)
+        self.virtual_ms += virtual_extra_ms + chunk_wall * 1e3
         self.decode_wall_s += chunk_wall
-        return n
 
     def _features(self, q_depth: float) -> FeatureSnapshot:
         a = self._alpha_recent[-16:]
         t = self._tpot_recent[-16:]
+        if self.transport is not None:
+            rtt = self.transport.recent_rtt_ms
+        else:
+            rtt = self.engine.rtt_ms
         return FeatureSnapshot(
             q_depth=q_depth,
             alpha_recent=(sum(a) / len(a)) if a else 0.7,
-            rtt_recent_ms=self.engine.rtt_ms,
+            rtt_recent_ms=rtt,
             tpot_recent_ms=(sum(t) / len(t)) if t else 50.0,
             gamma_prev=self._gamma_prev)
 
@@ -380,7 +607,13 @@ class DecodeSession:
 
     def snapshot(self) -> tuple[np.ndarray, GenerationStats]:
         """Wave-style extraction: the full output buffer plus engine-schema
-        stats over currently-occupied slots (the ``generate()`` epilogue)."""
+        stats over currently-occupied slots (the ``generate()`` epilogue).
+        Drains any sub-chunk tail of fused-mode tokens still pending
+        stream delivery, so sessions that stop on the iteration bound pay
+        the final control round trip too."""
+        if self.transport is not None and self._fused_pending:
+            self.link_ms += self.transport.control_roundtrip()
+            self._fused_pending = 0
         tokens = np.asarray(self._out_buf).astype(np.int64) \
             if self._out_buf is not None \
             else np.empty((self.capacity, 0), np.int64)

@@ -1,0 +1,20 @@
+"""Distributed draft–target execution on real models (paper Fig. 1b).
+
+The speculative-decoding engine split at the network boundary: an
+edge-side :class:`DraftWorker` proposes speculation windows, a cloud-side
+:class:`TargetWorker` verifies and commits them, and a :class:`Transport`
+carries the :class:`WindowMsg`/:class:`VerdictMsg` wire messages between
+them — zero-delay in process (the bit-identity regression anchor) or over
+an emulated edge–cloud link whose measured delays feed the AWC window
+policy's ``rtt_recent_ms`` feature.
+"""
+
+from .transport import (CONTROL_PAYLOAD_BYTES, EmulatedLinkTransport,
+                        InProcessTransport, Transport)
+from .wire import VerdictMsg, WindowMsg
+from .workers import DraftWorker, TargetWorker
+
+__all__ = [
+    "CONTROL_PAYLOAD_BYTES", "EmulatedLinkTransport", "InProcessTransport",
+    "Transport", "VerdictMsg", "WindowMsg", "DraftWorker", "TargetWorker",
+]

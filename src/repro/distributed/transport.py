@@ -1,0 +1,142 @@
+"""Transports connecting the DraftWorker (edge) and TargetWorker (cloud).
+
+A transport delivers :mod:`repro.distributed.wire` messages and reports the
+one-way delay it imposed. Two implementations:
+
+- :class:`InProcessTransport` — zero delay. The regression anchor: a
+  session routed through it commits greedy tokens BIT-identical to the
+  colocated ``DecodeSession`` path.
+- :class:`EmulatedLinkTransport` — samples the SAME delay model DSD-Sim's
+  :class:`repro.sim.network.Link` uses (RTT/2 + symmetric truncated jitter
+  + payload/bandwidth serialization, from one :class:`LinkSpec`) and
+  imposes it as measured wall-clock sleep, so real-model decoding
+  experiences the network the simulator predicts.
+
+Every transport keeps measured statistics. Consecutive window→verdict
+deliveries pair into round trips; :attr:`Transport.recent_rtt_ms` is the
+mean of the recent pairs and is what
+:meth:`repro.core.session.DecodeSession._features` feeds the window policy
+as ``rtt_recent_ms`` — AWC adapts to the link actually observed, not to a
+configured constant.
+"""
+
+from __future__ import annotations
+
+import random
+import time
+
+from ..sim.network import (LinkSpec, RttTracker, expected_rtt_ms,
+                           sample_one_way_ms)
+from .wire import VerdictMsg, WindowMsg
+
+CONTROL_PAYLOAD_BYTES = 64   # fused-mode chunk flush / control messages
+
+
+class Transport:
+    """Base transport: delivery accounting + paired RTT measurement.
+
+    Subclasses implement :meth:`_transmit` (returns the imposed one-way
+    delay in ms). ``wall_clock`` tells the session whether imposed delays
+    are already part of measured wall time (sleeping transports) or must
+    be added to the virtual clock (non-sleeping emulation).
+    """
+
+    wall_clock: bool = True
+
+    def __init__(self):
+        self.bytes_sent = 0
+        self.messages_sent = 0
+        # same paired estimator the sim's Link uses — sim and real paths
+        # must compute the AWC rtt_recent_ms feature identically
+        self._rtt = RttTracker()
+
+    # -- delivery -----------------------------------------------------------
+
+    def _transmit(self, payload_bytes: int) -> float:
+        raise NotImplementedError
+
+    def _deliver(self, payload_bytes: int) -> float:
+        delay = self._transmit(payload_bytes)
+        self.bytes_sent += payload_bytes
+        self.messages_sent += 1
+        self._rtt.record(delay)
+        return delay
+
+    def send_window(self, msg: WindowMsg) -> float:
+        """Draft → target. Returns the imposed one-way delay (ms)."""
+        return self._deliver(msg.payload_bytes)
+
+    def send_verdict(self, msg: VerdictMsg) -> float:
+        """Target → draft. Returns the imposed one-way delay (ms)."""
+        return self._deliver(msg.payload_bytes)
+
+    def control_roundtrip(self,
+                          payload_bytes: int = CONTROL_PAYLOAD_BYTES) -> float:
+        """One small out+back exchange (fused-mode token-stream flush)."""
+        return self._deliver(payload_bytes) + self._deliver(payload_bytes)
+
+    # -- measurement --------------------------------------------------------
+
+    @property
+    def recent_rtt_ms(self) -> float:
+        """Mean of the recently measured round trips (paired deliveries)."""
+        return self._rtt.mean_recent_ms(self._default_rtt_ms())
+
+    def _default_rtt_ms(self) -> float:
+        return 0.0
+
+    def describe(self) -> str:
+        return type(self).__name__
+
+
+class InProcessTransport(Transport):
+    """Colocated draft and target: zero-delay delivery.
+
+    The messages still materialize on the host (token ids leave the device
+    exactly as they would for a real link), so the protocol is identical —
+    only the imposed delay is zero. Greedy tokens through this transport
+    are bit-identical to the colocated ``DecodeSession`` fast path."""
+
+    wall_clock = True
+
+    def _transmit(self, payload_bytes: int) -> float:
+        return 0.0
+
+    def describe(self) -> str:
+        return "in-process"
+
+
+class EmulatedLinkTransport(Transport):
+    """Edge–cloud link emulation driven by a :class:`LinkSpec`.
+
+    Each delivery samples :func:`repro.sim.network.sample_one_way_ms` —
+    the exact delay model DSD-Sim's ``Link`` uses — and, with
+    ``sleep=True`` (default), blocks for that long and records the
+    MEASURED elapsed wall time (what the OS actually imposed). With
+    ``sleep=False`` the sampled delay is recorded without blocking and the
+    session adds it to its virtual clock instead (fast deterministic
+    tests)."""
+
+    def __init__(self, spec: LinkSpec, seed: int = 0, sleep: bool = True):
+        super().__init__()
+        self.spec = spec
+        self.sleep = bool(sleep)
+        self.wall_clock = self.sleep
+        self._rng = random.Random(seed)
+
+    def _transmit(self, payload_bytes: int) -> float:
+        delay_ms = sample_one_way_ms(self.spec, self._rng, payload_bytes)
+        if not self.sleep:
+            return delay_ms
+        t0 = time.perf_counter()
+        if delay_ms > 0.0:
+            time.sleep(delay_ms / 1e3)
+        return (time.perf_counter() - t0) * 1e3
+
+    def _default_rtt_ms(self) -> float:
+        return expected_rtt_ms(self.spec)
+
+    def describe(self) -> str:
+        return (f"emulated-link(rtt={self.spec.rtt_ms}ms, "
+                f"jitter={self.spec.jitter_ms}ms, "
+                f"bw={self.spec.bandwidth_gbps}Gbps, sleep={self.sleep})")

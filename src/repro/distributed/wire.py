@@ -1,0 +1,64 @@
+"""Wire types for distributed draft–target execution.
+
+These are the ONLY objects that cross the edge–cloud boundary in the real
+execution path (paper Fig. 1b): the draft ships a speculation window
+(token ids + per-token draft probabilities), the target ships back a
+verdict (accept count + corrected/bonus token + per-position logprobs).
+Payload sizes come from the same models DSD-Sim charges
+(:func:`repro.sim.network.window_payload_bytes` /
+:func:`repro.sim.network.verdict_payload_bytes`), scaled by the number of
+slots actively decoding — so a transport imposes exactly the bytes the
+simulator predicts for the same exchange.
+
+``q_probs`` (needed by the stochastic accept/resample rule at
+temperature > 0) is carried as a device-array pass-through: the paper's
+wire format ships only the per-token draft probability q(t_i) (8B/token,
+already priced into ``window_payload_bytes``), and the residual
+distribution is reconstructed target-side; this in-process reproduction
+skips the reconstruction and hands the full distribution over, without
+charging extra bytes. Greedy decoding (temperature 0 — the bit-identity
+anchor) does not use it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import numpy as np
+
+from ..sim.network import verdict_payload_bytes, window_payload_bytes
+
+
+@dataclass
+class WindowMsg:
+    """Draft → target: one speculation window for the whole slot batch."""
+    tokens: np.ndarray            # (B, gamma_max) int32 draft proposals
+    gamma: int                    # active window size this round (≤ gamma_max)
+    n_active: int                 # slots actually decoding (payload scaling)
+    q_probs: Any = None           # (B, gamma_max, V) draft dists (temp > 0)
+
+    @property
+    def payload_bytes(self) -> int:
+        return max(1, self.n_active) * window_payload_bytes(self.gamma)
+
+
+@dataclass
+class VerdictMsg:
+    """Target → draft: the verdict for one speculation window.
+
+    ``n_accepted``/``num_new`` are post-lifecycle (budget/EOS-clamped)
+    counts; ``next_token`` is the raw corrected/bonus token and
+    ``last_token`` the per-slot anchor for the next round (frozen for done
+    rows)."""
+    n_accepted: np.ndarray        # (B,) int32
+    num_new: np.ndarray           # (B,) int32
+    next_token: np.ndarray        # (B,) int32 raw corrected/bonus token
+    last_token: np.ndarray        # (B,) int32 next-round anchor
+    done: np.ndarray              # (B,) bool
+    gamma: int
+    n_active: int
+
+    @property
+    def payload_bytes(self) -> int:
+        return max(1, self.n_active) * verdict_payload_bytes(self.gamma)

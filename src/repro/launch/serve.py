@@ -5,12 +5,23 @@ scheduler (default) or the wave-batched baseline.
     PYTHONPATH=src python -m repro.launch.serve \
         --target qwen3-14b --draft qwen2.5-3b --policy awc \
         --requests 16 --max-new 48 [--server continuous|wave] \
-        [--arrival-rate 8] [--temperature 0.0] [--rtt-ms 10]
+        [--arrival-rate 8] [--temperature 0.0] [--rtt-ms 10] \
+        [--link-rtt-ms 20 --link-jitter-ms 2 --link-bw-gbps 1] \
+        [--mode-policy auto|distributed|fused]
 
 ``--arrival-rate`` draws Poisson arrivals (requests/s); TTFT and e2e are
 measured from each request's arrival, so they include queue wait. Reduced-
 variant models by default (this is the host-runnable driver; the full
 configs exercise the dry-run path).
+
+``--link-rtt-ms`` switches the continuous server to DISTRIBUTED execution:
+speculation rounds run as real draft→verify→verdict exchanges over a
+transport — zero-delay in-process at ``--link-rtt-ms 0`` (bit-identical to
+the colocated path), an emulated edge-cloud link otherwise (measured
+wall-clock delays; ``--link-jitter-ms``/``--link-bw-gbps`` shape it, and
+the measured RTT feeds the AWC feature vector). ``--mode-policy`` forces
+or frees the fused/distributed mode decision (``fused`` = cloud-only
+autoregressive steps, no draft round trips).
 """
 
 from __future__ import annotations
@@ -57,7 +68,21 @@ def main(argv=None) -> int:
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrivals per second (0 = all at t=0)")
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--rtt-ms", type=float, default=10.0)
+    ap.add_argument("--rtt-ms", type=float, default=10.0,
+                    help="virtual RTT charged by the colocated path "
+                         "(ignored when --link-rtt-ms selects a transport)")
+    ap.add_argument("--link-rtt-ms", type=float, default=None,
+                    help="run distributed over a transport: 0 = in-process "
+                         "(zero delay), >0 = emulated edge-cloud link with "
+                         "this RTT (measured wall-clock delays)")
+    ap.add_argument("--link-jitter-ms", type=float, default=1.0,
+                    help="emulated link jitter (with --link-rtt-ms > 0)")
+    ap.add_argument("--link-bw-gbps", type=float, default=1.0,
+                    help="emulated link bandwidth (with --link-rtt-ms > 0)")
+    ap.add_argument("--mode-policy", default="auto",
+                    choices=["auto", "distributed", "fused"],
+                    help="honor the window policy's fused/distributed "
+                         "decision (auto) or force one mode")
     ap.add_argument("--gamma-max", type=int, default=12,
                     help="compile-once window bound; any policy γ ≤ this "
                          "runs without recompiling")
@@ -66,6 +91,9 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
+    if args.link_rtt_ms is not None and args.server == "wave":
+        raise SystemExit("--link-rtt-ms needs the continuous server "
+                         "(the wave baseline is colocated-only)")
 
     tcfg = get_config(args.target).reduced()
     dcfg = get_config(args.draft).reduced()
@@ -79,10 +107,24 @@ def main(argv=None) -> int:
                               gamma_max=args.gamma_max,
                               sync_every=args.sync_every,
                               key=jax.random.PRNGKey(args.seed))
+    transport = None
+    if args.link_rtt_ms is not None:
+        from ..distributed import EmulatedLinkTransport, InProcessTransport
+        from ..sim.network import LinkSpec
+        if args.link_rtt_ms <= 0:
+            transport = InProcessTransport()
+        else:
+            transport = EmulatedLinkTransport(
+                LinkSpec(rtt_ms=args.link_rtt_ms,
+                         jitter_ms=args.link_jitter_ms,
+                         bandwidth_gbps=args.link_bw_gbps),
+                seed=args.seed)
     server_cls = (SpecDecodeServer if args.server == "continuous"
                   else WaveSpecDecodeServer)
     server = server_cls(engine, build_policy(args.policy, args.gamma),
-                        ServerConfig(max_batch=args.max_batch))
+                        ServerConfig(max_batch=args.max_batch,
+                                     transport=transport,
+                                     mode_policy=args.mode_policy))
     rng = np.random.default_rng(args.seed)
     arrival = 0.0
     for i in range(args.requests):
@@ -107,6 +149,12 @@ def main(argv=None) -> int:
         "mean_e2e_ms": float(np.mean([r.e2e_ms for r in results])),
         "compiled_step_programs": engine.compiled_programs(),
     }
+    if transport is not None:
+        summary["transport"] = transport.describe()
+        summary["mode_policy"] = args.mode_policy
+        summary["link_bytes_sent"] = transport.bytes_sent
+        summary["link_messages"] = transport.messages_sent
+        summary["link_recent_rtt_ms"] = round(transport.recent_rtt_ms, 3)
     if args.json:
         print(json.dumps(summary, indent=1))
     else:

@@ -21,6 +21,12 @@ never from an assumed ``max_new_tokens``.
 model (admit a wave, drain it fully, admit the next) as the measured
 baseline: a long sequence holds every slot in its wave hostage, which is
 exactly the sim↔real gap the continuous scheduler closes.
+
+``ServerConfig.transport`` routes every speculation round through a
+:class:`repro.distributed.Transport` (draft on the edge, target in the
+cloud, window/verdict payloads paying measured link delays);
+``ServerConfig.mode_policy`` forces or frees the fused/distributed mode
+decision. The default (no transport) keeps the colocated fast path.
 """
 
 from __future__ import annotations
@@ -65,6 +71,10 @@ class ServerConfig:
     max_new_cap: Optional[int] = None      # output width (default: queue max)
     eos_id: int = -1
     sync_every: Optional[int] = None       # admission/retirement granularity
+    transport: Optional[object] = None     # repro.distributed.Transport:
+                                           # route rounds over a (emulated)
+                                           # edge-cloud link
+    mode_policy: str = "auto"              # auto | distributed | fused
 
 
 class _ArrivalClock:
@@ -128,7 +138,9 @@ class SpecDecodeServer:
                              max_new_cap=cap, max_prompt_len=mp,
                              gamma_max=gmax,
                              sync_every=self.cfg.sync_every,
-                             eos_id=self.cfg.eos_id, log_gamma=False)
+                             eos_id=self.cfg.eos_id, log_gamma=False,
+                             transport=self.cfg.transport,
+                             mode_policy=self.cfg.mode_policy)
 
     def run(self) -> list[ServeResult]:
         """Drain the submitted stream; returns per-request results.
@@ -250,10 +262,12 @@ class WaveSpecDecodeServer:
             prompts, lens = self._pad_prompts(wave)
             max_new = max(r.max_new_tokens for r in wave)
             wave_start = clock.now()
-            tokens, stats = self.engine.generate(prompts, max_new,
-                                                 window_policy=self.policy,
-                                                 prompt_lens=lens,
-                                                 eos_id=self.cfg.eos_id)
+            assert self.cfg.transport is None, \
+                "transports need the continuous server"
+            tokens, stats = self.engine.generate(
+                prompts, max_new, window_policy=self.policy,
+                prompt_lens=lens, eos_id=self.cfg.eos_id,
+                mode_policy=self.cfg.mode_policy)
             wave_end = clock.now()
             # wave-level timing attribution: the measured prefill wall time
             # IS the first-token time for every wave member (the anchor

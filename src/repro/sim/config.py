@@ -28,7 +28,7 @@ import re
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
-from .network import LinkSpec
+from .network import DEFAULT_FUSED_CHUNK, LinkSpec
 from .policies import (BATCHING, ROUTING, BatchingConfig)
 from .scheduler import ClusterSpec, PolicyStack, DSDSimulation
 from .trace import PROFILES, WorkloadGenerator
@@ -183,7 +183,7 @@ class SimSpec:
     workload_rate: float = 40.0
     num_requests: int = 200
     seed: int = 0
-    fused_chunk: int = 8
+    fused_chunk: int = DEFAULT_FUSED_CHUNK
 
 
 def _build_window_policy(w: dict[str, Any], awc_predictor=None):
@@ -246,7 +246,7 @@ def auto_topology(doc: dict[str, Any], awc_predictor=None) -> SimSpec:
         workload_rate=float(w.get("rate_per_s", 40.0)),
         num_requests=int(w.get("num_requests", 200)),
         seed=int(w.get("seed", 0)),
-        fused_chunk=int(doc.get("fused_chunk", 8)))
+        fused_chunk=int(doc.get("fused_chunk", DEFAULT_FUSED_CHUNK)))
 
 
 def build_simulation(spec: SimSpec,

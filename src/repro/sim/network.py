@@ -3,11 +3,18 @@
 Links are delay elements attached to send/receive events (paper §3.1):
 each message experiences RTT/2 one-way latency plus sampled jitter plus a
 serialization term (payload_bytes / bandwidth). Jitter is drawn from a
-truncated normal so the link never goes acausal.
+truncated normal; truncation is SYMMETRIC (±min(0.9·RTT/2, 4·jitter_ms))
+so the sampled mean one-way delay equals the analytic
+:func:`expected_one_way_ms` and the link never goes acausal.
 
 The draft→target payload of a speculation window is tiny (γ token ids +
 metadata ≈ tens of bytes), so serialization only matters when users configure
 KV-shipping modes; we still model it for completeness.
+
+The same delay model backs the REAL execution path: the
+:class:`repro.distributed.transport.EmulatedLinkTransport` samples
+:func:`sample_one_way_ms` with the same :class:`LinkSpec` and imposes the
+delay as wall-clock sleep, so DSD-Sim and the real engine see one network.
 """
 
 from __future__ import annotations
@@ -20,12 +27,82 @@ from typing import Any, Callable, Optional
 from .events import Environment
 
 
+# Tokens streamed per fused-mode control round trip: the scheduler's
+# ``fused_chunk`` default AND the real path's stream-flush quantum
+# (``repro.core.session.FUSED_FLUSH_TOKENS``) — one constant so the
+# fused-mode link charges cannot silently drift between sim and real.
+DEFAULT_FUSED_CHUNK = 8
+
+
 @dataclass
 class LinkSpec:
     rtt_ms: float = 10.0
     jitter_ms: float = 1.0
     bandwidth_gbps: float = 1.0  # edge uplink
     name: str = "edge-cloud"
+
+
+def sample_one_way_ms(spec: LinkSpec, rng: random.Random,
+                      payload_bytes: int = 64) -> float:
+    """One-way delay sample: RTT/2 + symmetric truncated jitter + serialization.
+
+    Jitter ~ N(0, (jitter_ms/2)²) truncated to ±min(0.9·RTT/2, 4·jitter_ms).
+    Symmetric truncation keeps the sample mean equal to
+    ``expected_one_way_ms`` (a one-sided cut would bias the mean upward),
+    and the 0.9·RTT/2 bound keeps the delay strictly positive.
+    """
+    half_rtt = spec.rtt_ms / 2.0
+    bound = min(0.9 * half_rtt, 4.0 * spec.jitter_ms)
+    jitter = rng.gauss(0.0, spec.jitter_ms / 2.0)
+    jitter = max(-bound, min(jitter, bound))
+    ser_ms = payload_bytes * 8 / (spec.bandwidth_gbps * 1e9) * 1e3
+    return max(0.0, half_rtt + jitter + ser_ms)
+
+
+class RttTracker:
+    """Paired round-trip estimation over a stream of one-way delays.
+
+    The exchange protocols alternate directions on one link (window out,
+    verdict back; fused: control out, stream back), so consecutive
+    recorded one-way delays are paired into full round trips — a single
+    direction's delay is never doubled (which would double-count its
+    serialization term and mix window/verdict payload sizes). Shared by
+    the simulator's :class:`Link` and the real path's
+    :class:`repro.distributed.transport.Transport` so both estimate the
+    AWC ``rtt_recent_ms`` feature identically.
+    """
+
+    __slots__ = ("_pending", "_rtts")
+
+    def __init__(self):
+        self._pending: Optional[float] = None
+        self._rtts: list[float] = []
+
+    def record(self, delay_ms: float) -> None:
+        """Record one one-way delay; consecutive calls pair into an RTT.
+        Only valid when the caller's deliveries strictly alternate
+        directions (a private transport); concurrent senders on a shared
+        link must use :meth:`record_rtt` with an explicitly paired sum."""
+        if self._pending is None:
+            self._pending = delay_ms
+            return
+        self.record_rtt(self._pending + delay_ms)
+        self._pending = None
+
+    def record_rtt(self, rtt_ms: float) -> None:
+        """Record one complete out+back round trip."""
+        self._rtts.append(rtt_ms)
+        if len(self._rtts) > 256:
+            del self._rtts[:128]
+
+    def mean_recent_ms(self, default: float) -> float:
+        """Mean of the recent complete pairs; ``default`` before the
+        first complete pair (a lone outstanding delivery contributes
+        nothing — half a pair is not an RTT)."""
+        if not self._rtts:
+            return default
+        tail = self._rtts[-32:]
+        return sum(tail) / len(tail)
 
 
 class Link:
@@ -37,42 +114,50 @@ class Link:
         self.rng = rng
         self.bytes_sent = 0
         self.messages_sent = 0
-        # Running latency stats feed the AWC feature vector (RTT_recent).
-        self._recent_delays: list[float] = []
+        # Measured RTT pairs feed the AWC feature vector (RTT_recent).
+        # A Link is SHARED by every drafter routed to its target, so
+        # consecutive deliveries do NOT alternate directions (two drafters'
+        # outbound windows can interleave) — callers that complete an
+        # exchange record the explicitly paired sum via record_rtt();
+        # transfer()/send() never auto-pair.
+        self._rtt = RttTracker()
+        self.last_delay_ms = 0.0   # most recent sampled one-way delay
 
     def one_way_ms(self, payload_bytes: int = 64) -> float:
-        half_rtt = self.spec.rtt_ms / 2.0
-        jitter = self.rng.gauss(0.0, self.spec.jitter_ms / 2.0)
-        jitter = max(-half_rtt * 0.9, min(jitter, self.spec.jitter_ms * 4))
-        ser_ms = payload_bytes * 8 / (self.spec.bandwidth_gbps * 1e9) * 1e3
-        return max(0.0, half_rtt + jitter + ser_ms)
+        return sample_one_way_ms(self.spec, self.rng, payload_bytes)
+
+    def record_rtt(self, rtt_ms: float) -> None:
+        """Record one complete exchange's out+back delay (the caller pairs
+        its own two transfers — see the sharing note above)."""
+        self._rtt.record_rtt(rtt_ms)
 
     def send(self, payload_bytes: int, deliver: Callable[[], Any]) -> None:
         """Schedule ``deliver`` after the one-way delay."""
         delay = self.one_way_ms(payload_bytes)
         self.bytes_sent += payload_bytes
         self.messages_sent += 1
-        self._recent_delays.append(delay)
-        if len(self._recent_delays) > 256:
-            del self._recent_delays[:128]
+        self.last_delay_ms = delay
         self.env._schedule(self.env.now + delay, deliver)
 
     def transfer(self, payload_bytes: int = 64):
-        """Event-style API: ``yield link.transfer(n)`` inside a process."""
+        """Event-style API: ``yield link.transfer(n)`` inside a process.
+
+        ``last_delay_ms`` exposes the sampled delay so callers can account
+        link time separately from service time (the AWC TPOT feature must
+        not re-absorb the RTT it is paired with) and pair the two halves
+        of an exchange for :meth:`record_rtt`."""
         delay = self.one_way_ms(payload_bytes)
         self.bytes_sent += payload_bytes
         self.messages_sent += 1
-        self._recent_delays.append(delay)
-        if len(self._recent_delays) > 256:
-            del self._recent_delays[:128]
+        self.last_delay_ms = delay
         return self.env.timeout(delay)
 
     @property
     def recent_rtt_ms(self) -> float:
-        if not self._recent_delays:
-            return self.spec.rtt_ms
-        tail = self._recent_delays[-32:]
-        return 2.0 * sum(tail) / len(tail)
+        """Mean of recent measured round trips (paired outbound+return
+        one-way delays). Falls back to the spec RTT before the first
+        complete pair."""
+        return self._rtt.mean_recent_ms(self.spec.rtt_ms)
 
 
 def window_payload_bytes(gamma: int) -> int:
@@ -81,9 +166,18 @@ def window_payload_bytes(gamma: int) -> int:
 
 
 def verdict_payload_bytes(gamma: int) -> int:
-    """Target→draft payload: accept count + corrected/bonus token + logprobs."""
-    return 48 + 8
+    """Target→draft payload: accept count + corrected/bonus token id (8B)
+    plus one 4B target logprob per window position (the draft consumes them
+    for distillation / acceptance diagnostics) + header."""
+    return 48 + 8 + 4 * gamma
 
 
 def expected_one_way_ms(spec: LinkSpec, payload_bytes: int = 64) -> float:
     return spec.rtt_ms / 2.0 + payload_bytes * 8 / (spec.bandwidth_gbps * 1e9) * 1e3
+
+
+def expected_rtt_ms(spec: LinkSpec, out_payload_bytes: int = 64,
+                    back_payload_bytes: int = 64) -> float:
+    """Analytic round trip for an out+back exchange on ``spec``."""
+    return (expected_one_way_ms(spec, out_payload_bytes)
+            + expected_one_way_ms(spec, back_payload_bytes))

@@ -26,8 +26,8 @@ from dataclasses import dataclass, field
 from typing import Any, Optional
 
 from .events import Environment, Store
-from .network import (Link, LinkSpec, verdict_payload_bytes,
-                      window_payload_bytes)
+from .network import (DEFAULT_FUSED_CHUNK, Link, LinkSpec,
+                      verdict_payload_bytes, window_payload_bytes)
 from .hwmodel import HardwareModel, MODELS
 from .policies import (BatchingConfig, BatchingPolicy, FIFOBatching,
                        RoutingPolicy, RandomRouting)
@@ -136,7 +136,7 @@ class DSDSimulation:
     def __init__(self, cluster: ClusterSpec, policies: PolicyStack,
                  records: list[TraceRecord],
                  hwmodel: Optional[HardwareModel] = None,
-                 seed: int = 0, fused_chunk: int = 8):
+                 seed: int = 0, fused_chunk: int = DEFAULT_FUSED_CHUNK):
         self.cluster = cluster
         self.policies = policies
         self.records = records
@@ -224,6 +224,15 @@ class DSDSimulation:
             m.gamma_sequence.append(dec.gamma)
             m.mode_sequence.append(dec.mode)
             iter_start = env.now
+            # TPOT is the TARGET's time-per-output-token (paper §4.1): the
+            # sample excludes link time (RTT is its own feature —
+            # double-counting it here would self-damp the controller), the
+            # drafter's serial proposal time (not target service), and
+            # target queue wait (featured separately as q_depth — the same
+            # double-count argument applies).
+            iter_link_ms = 0.0
+            iter_draft_ms = 0.0
+            queue_wait_0 = m.queue_wait_ms
 
             if dec.mode == "fused":
                 chunk = min(self.fused_chunk, rec.output_length - generated)
@@ -232,10 +241,17 @@ class DSDSimulation:
                           context_len=max(target_ctx, rec.prompt_length),
                           new_tokens=prefill_extra, chunk=chunk,
                           done=env.event(), sort_len=target_ctx + generated)
-                yield link.transfer(64)
+                # read last_delay_ms before yielding — the link is shared
+                # and another drafter's transfer would clobber it
+                ev = link.transfer(64)
+                iter_link_ms += link.last_delay_ms
+                yield ev
                 self._enqueue(target_id, job)
                 yield job.done
-                yield link.transfer(64)
+                ev = link.transfer(64)
+                iter_link_ms += link.last_delay_ms
+                link.record_rtt(iter_link_ms)   # explicit out+back pair
+                yield ev
                 produced = chunk
                 target_ctx = rec.prompt_length + generated + chunk
                 generated += chunk
@@ -245,15 +261,21 @@ class DSDSimulation:
                 gamma = dec.gamma
                 per_step = self.hw.decode_ms(draft_hw, draft_model,
                                              [draft_ctx])
-                yield env.timeout(gamma * per_step)
-                yield link.transfer(window_payload_bytes(gamma))
+                iter_draft_ms = gamma * per_step
+                yield env.timeout(iter_draft_ms)
+                ev = link.transfer(window_payload_bytes(gamma))
+                iter_link_ms += link.last_delay_ms
+                yield ev
                 prefill_extra = rec.prompt_length if target_ctx == 0 else 0
                 job = Job(request_id=rec.request_id, kind="verify",
                           context_len=target_ctx, new_tokens=prefill_extra + gamma,
                           done=env.event(), sort_len=target_ctx + prefill_extra)
                 self._enqueue(target_id, job)
                 yield job.done
-                yield link.transfer(verdict_payload_bytes(gamma))
+                ev = link.transfer(verdict_payload_bytes(gamma))
+                iter_link_ms += link.last_delay_ms
+                link.record_rtt(iter_link_ms)   # explicit out+back pair
+                yield ev
                 n_acc, _all = cursor.consume(gamma)
                 produced = min(n_acc + 1, rec.output_length - generated)
                 generated += produced
@@ -269,8 +291,10 @@ class DSDSimulation:
             if math.isnan(m.first_token_ms):
                 m.first_token_ms = env.now
             if produced > 0:
+                iter_queue_ms = m.queue_wait_ms - queue_wait_0
                 self.analyzer.record_tpot_sample(
-                    (env.now - iter_start) / produced)
+                    max(0.0, env.now - iter_start - iter_link_ms
+                        - iter_draft_ms - iter_queue_ms) / produced)
 
         self.analyzer.close_request(rec.request_id, env.now)
 

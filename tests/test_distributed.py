@@ -1,0 +1,327 @@
+"""Distributed draft–target execution tests.
+
+The invariants: routing speculation rounds through the zero-delay
+:class:`InProcessTransport` commits greedy tokens BIT-identical to the
+colocated ``DecodeSession`` path (dense, SSM and hybrid targets — the
+regression anchor for the worker split); the
+:class:`EmulatedLinkTransport` imposes measured wall-clock delays sampled
+from the same ``LinkSpec`` model DSD-Sim uses and feeds the MEASURED RTT
+into the window-policy features (so AWC flips to fused mode on a slow
+link); and fused-mode rounds commit exactly the target's greedy
+continuation while paying no per-window round trips.
+"""
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import SpecDecodeEngine
+from repro.core.session import DecodeSession
+from repro.core.window import AWCWindowPolicy, StaticWindowPolicy
+from repro.distributed import (EmulatedLinkTransport, InProcessTransport,
+                               VerdictMsg, WindowMsg)
+from repro.sim.network import (LinkSpec, verdict_payload_bytes,
+                               window_payload_bytes)
+
+DRAFT = ModelConfig(name="d", arch_type="dense", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                    dtype="float32", remat=False)
+TARGETS = {
+    "dense": dataclasses.replace(DRAFT, name="t", n_layers=3, n_kv_heads=4),
+    "ssm": ModelConfig(name="ts", arch_type="ssm", n_layers=2, d_model=64,
+                       n_heads=0, n_kv_heads=0, d_ff=0, vocab=128,
+                       ssm_state=16, ssm_head_dim=16, ssm_chunk=8,
+                       dtype="float32", remat=False, tie_embeddings=True),
+    "hybrid": ModelConfig(name="th", arch_type="hybrid", n_layers=4,
+                          d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                          head_dim=16, vocab=128, ssm_state=16,
+                          ssm_head_dim=16, ssm_chunk=8, attn_every=2,
+                          dtype="float32", remat=False),
+}
+GAMMA = 3
+
+
+def _engine(family):
+    return SpecDecodeEngine(DRAFT, TARGETS[family], temperature=0.0,
+                            key=jax.random.PRNGKey(7))
+
+
+def _prompts(rng, n, lo=6, hi=12):
+    return [rng.integers(0, 128, int(rng.integers(lo, hi))).astype(np.int32)
+            for _ in range(n)]
+
+
+# ------------------------------------------------------- bit-identity anchor
+
+@pytest.mark.parametrize("family", [
+    "dense",
+    pytest.param("ssm", marks=pytest.mark.slow),
+    pytest.param("hybrid", marks=pytest.mark.slow),
+])
+def test_inprocess_transport_bit_identical(family):
+    """Greedy tokens through the split-worker + InProcessTransport path ==
+    the colocated fused-step path, for attention AND recurrent targets."""
+    eng = _engine(family)
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(0, 128, (2, 9)).astype(np.int32)
+    ref, ref_stats = eng.generate(prompts, 12, StaticWindowPolicy(GAMMA))
+    got, got_stats = eng.generate(prompts, 12, StaticWindowPolicy(GAMMA),
+                                  transport=InProcessTransport())
+    np.testing.assert_array_equal(ref, got)
+    assert ref_stats.accepted == got_stats.accepted
+    assert ref_stats.proposed == got_stats.proposed
+
+
+def test_inprocess_transport_staggered_admission():
+    """In-flight admission/retirement through the transport path commits
+    the same greedy tokens as solo colocated runs."""
+    eng = _engine("dense")
+    rng = np.random.default_rng(5)
+    prompts = _prompts(rng, 3)
+    pol = StaticWindowPolicy(GAMMA)
+    sess = DecodeSession(eng, capacity=2, max_new_cap=8, max_prompt_len=16,
+                         gamma_max=GAMMA, sync_every=2,
+                         transport=InProcessTransport())
+    outs = {}
+    sess.admit(prompts[0], 8, request_id=0)
+    sess.run_chunk(pol)
+    sess.admit(prompts[1], 6, request_id=1)
+    for _ in range(64):
+        if not sess.unfinished:
+            break
+        sess.run_chunk(pol)
+        for j in sess.finished_slots():
+            toks, rec = sess.retire(j)
+            outs[rec.request_id] = toks
+            if rec.request_id == 0 and 2 not in outs:
+                sess.admit(prompts[2], 8, request_id=2)
+                outs[2] = None
+    assert not sess.unfinished
+    for j in sess.finished_slots():
+        toks, rec = sess.retire(j)
+        outs[rec.request_id] = toks
+    budgets = {0: 8, 1: 6, 2: 8}
+    for rid, p in enumerate(prompts):
+        solo, _ = eng.generate(p[None, :], budgets[rid],
+                               StaticWindowPolicy(GAMMA))
+        np.testing.assert_array_equal(outs[rid], solo[0, :budgets[rid]])
+
+
+def test_transport_zero_recompiles_across_churn():
+    """The distributed programs (propose + verify/commit + insert) compile
+    once; admissions, retirements and γ changes are data."""
+    eng = _engine("dense")
+    rng = np.random.default_rng(1)
+    pol = StaticWindowPolicy(GAMMA)
+    sess = DecodeSession(eng, capacity=2, max_new_cap=6, max_prompt_len=12,
+                         gamma_max=GAMMA, sync_every=2,
+                         transport=InProcessTransport())
+    sess.admit(rng.integers(0, 128, 7).astype(np.int32), 6, request_id=0)
+    sess.run_chunk(pol)
+    warm = eng.compiled_programs()
+    outs = {}
+    for rid in range(1, 4):
+        sess.admit(rng.integers(0, 128, int(rng.integers(2, 12)))
+                   .astype(np.int32), int(rng.integers(2, 7)),
+                   request_id=rid)
+        while not sess.free:
+            sess.run_chunk(pol)
+            for j in sess.finished_slots():
+                toks, rec = sess.retire(j)
+                outs[rec.request_id] = toks
+    while sess.unfinished:
+        sess.run_chunk(pol)
+    assert eng.compiled_programs() == warm
+
+
+# ----------------------------------------------------------- fused execution
+
+def test_fused_mode_commits_target_greedy():
+    """Forced fused mode (cloud-only) produces exactly the target's greedy
+    continuation — the same committed stream as greedy speculative
+    decoding — through the transport, with zero window/verdict messages."""
+    eng = _engine("dense")
+    rng = np.random.default_rng(2)
+    prompts = rng.integers(0, 128, (2, 8)).astype(np.int32)
+    ref, _ = eng.generate(prompts, 10, StaticWindowPolicy(GAMMA))
+    tr = InProcessTransport()
+    fus, stats = eng.generate(prompts, 10, StaticWindowPolicy(GAMMA),
+                              transport=tr, mode_policy="fused")
+    np.testing.assert_array_equal(ref, fus)
+    assert stats.proposed == 0            # no speculation in fused mode
+    # only per-chunk control flushes crossed the wire, never a window
+    assert tr.bytes_sent < 64 * stats.iterations
+
+
+def test_fused_mode_colocated_matches_greedy():
+    """The colocated path honors fused decisions too (γ=0 masked step)."""
+    eng = _engine("ssm")
+    rng = np.random.default_rng(4)
+    prompts = rng.integers(0, 128, (2, 8)).astype(np.int32)
+    ref, _ = eng.generate(prompts, 10, StaticWindowPolicy(GAMMA))
+    fus, stats = eng.generate(prompts, 10, StaticWindowPolicy(GAMMA),
+                              mode_policy="fused")
+    np.testing.assert_array_equal(ref, fus)
+    assert stats.proposed == 0
+
+
+def test_mixed_mode_switching_stays_greedy():
+    """Alternating fused/distributed decisions mid-stream (the draft cache
+    must stay coherent across fused rounds) still commits the target's
+    greedy continuation."""
+
+    class Alternator:
+        def __init__(self):
+            self.i = 0
+
+        def decide(self, pair_key, feats):
+            from repro.core.window import WindowDecision
+            self.i += 1
+            if (self.i // 3) % 2 == 1:
+                return WindowDecision(1, "fused")
+            return WindowDecision(GAMMA, "distributed")
+
+        def gamma_bound(self):
+            return GAMMA
+
+        def name(self):
+            return "alternator"
+
+    eng = _engine("dense")
+    rng = np.random.default_rng(6)
+    prompts = rng.integers(0, 128, (2, 9)).astype(np.int32)
+    ref, _ = eng.generate(prompts, 12, StaticWindowPolicy(GAMMA))
+    got, stats = eng.generate(prompts, 12, Alternator(),
+                              transport=InProcessTransport())
+    np.testing.assert_array_equal(ref, got)
+    assert stats.proposed > 0             # some distributed rounds ran
+
+
+# ------------------------------------------------------------- emulated link
+
+def test_emulated_link_imposes_measured_delay():
+    """Wall-clock delivery delay tracks the LinkSpec; paired exchanges
+    land in recent_rtt_ms."""
+    spec = LinkSpec(rtt_ms=20.0, jitter_ms=1.0)
+    tr = EmulatedLinkTransport(spec, seed=0)
+    w = WindowMsg(tokens=np.zeros((1, 4), np.int32), gamma=4, n_active=1)
+    v = VerdictMsg(n_accepted=np.zeros(1, np.int32),
+                   num_new=np.ones(1, np.int32),
+                   next_token=np.zeros(1, np.int32),
+                   last_token=np.zeros(1, np.int32),
+                   done=np.zeros(1, bool), gamma=4, n_active=1)
+    t0 = time.perf_counter()
+    for _ in range(4):
+        tr.send_window(w)
+        tr.send_verdict(v)
+    wall_ms = (time.perf_counter() - t0) * 1e3
+    assert wall_ms >= 4 * 0.8 * spec.rtt_ms          # delays really block
+    assert 0.5 * spec.rtt_ms < tr.recent_rtt_ms < 3.0 * spec.rtt_ms
+    assert tr.bytes_sent == 4 * (window_payload_bytes(4)
+                                 + verdict_payload_bytes(4))
+    assert tr.messages_sent == 8
+
+
+def test_emulated_link_rtt_feeds_policy_and_flips_fused():
+    """The AWC feature loop closes over the transport: the SAME
+    rtt-sensitive predictor keeps γ large through a zero-delay transport
+    and flips to fused over a 20 ms emulated link, because
+    ``rtt_recent_ms`` now comes from the transport's measurements."""
+    def predictor(feats):
+        return 1.0 if feats[2] > 10.0 else 6.0       # feats[2] = rtt_recent
+
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(0, 128, (2, 9)).astype(np.int32)
+    ref = None
+    for name, make_tr in [
+            ("inproc", InProcessTransport),
+            ("rtt20", lambda: EmulatedLinkTransport(
+                LinkSpec(rtt_ms=20.0, jitter_ms=1.0), seed=0))]:
+        eng = _engine("dense")
+        tr = make_tr()
+        sess = DecodeSession(eng, capacity=2, max_new_cap=10, gamma_max=6,
+                             sync_every=2, transport=tr)
+        sess.admit_batch(prompts, 10)
+        pol = AWCWindowPolicy(predictor)
+        while sess.unfinished and sess.iterations < 40:
+            sess.run_chunk(pol)
+        toks, stats = sess.snapshot()
+        if name == "inproc":
+            assert sess.fused_iterations == 0
+            assert max(stats.gamma_seq) == 6
+            ref = toks
+        else:
+            assert sess.fused_iterations > 0          # flipped to fused
+            assert tr.recent_rtt_ms > 10.0            # measured, not default
+            # greedy commits are mode-invariant: same tokens either way
+            np.testing.assert_array_equal(ref, toks)
+
+
+def test_session_link_accounting():
+    """Per-session link accounting: imposed delay accumulates in link_ms
+    and the TPOT feature excludes it."""
+    eng = _engine("dense")
+    rng = np.random.default_rng(8)
+    prompts = rng.integers(0, 128, (2, 8)).astype(np.int32)
+    tr = EmulatedLinkTransport(LinkSpec(rtt_ms=10.0, jitter_ms=0.5), seed=1)
+    sess = DecodeSession(eng, capacity=2, max_new_cap=6, gamma_max=GAMMA,
+                         sync_every=2, transport=tr)
+    sess.admit_batch(prompts, 6)
+    while sess.unfinished and sess.iterations < 24:
+        sess.run_chunk(StaticWindowPolicy(GAMMA))
+    assert sess.link_ms > 0.0
+    feats = sess._features(0.0)
+    # tpot tracks target service time; the link delay (≥ rtt_ms per round)
+    # stays out of it, so per-iteration tpot < per-iteration wall time
+    assert feats.tpot_recent_ms < \
+        sess.decode_wall_s * 1e3 / max(1, sess.iterations)
+    assert feats.rtt_recent_ms == tr.recent_rtt_ms
+
+
+def test_sampled_transport_distributed_and_fused_rounds():
+    """Temperature > 0 exercises the q_probs-carrying verify signature
+    (distributed rounds ship draft distributions; fused rounds use the
+    cached zero placeholder) — the wire path must produce valid tokens
+    and speculation stats in both modes."""
+    eng = SpecDecodeEngine(DRAFT, TARGETS["dense"], temperature=1.0,
+                           key=jax.random.PRNGKey(7))
+    rng = np.random.default_rng(11)
+    prompts = rng.integers(0, 128, (2, 8)).astype(np.int32)
+    toks, stats = eng.generate(prompts, 8, StaticWindowPolicy(GAMMA),
+                               transport=InProcessTransport())
+    assert (toks[:, :8] >= 0).all() and stats.proposed > 0
+    fus, fstats = eng.generate(prompts, 8, StaticWindowPolicy(GAMMA),
+                               transport=InProcessTransport(),
+                               mode_policy="fused")
+    assert (fus[:, :8] >= 0).all() and fstats.proposed == 0
+
+
+def test_non_sleeping_transport_keeps_tpot_honest():
+    """With sleep=False the sampled delay never entered wall time, so it
+    must NOT be subtracted from the TPOT feature (which would clamp it to
+    ~0) — it lands on the virtual clock instead."""
+    eng = _engine("dense")
+    rng = np.random.default_rng(9)
+    prompts = rng.integers(0, 128, (2, 8)).astype(np.int32)
+    # warm the split-worker programs (same buffer geometry: max_new and
+    # sync_every shape the stats buffers) so compile stays out of wall
+    eng.generate(prompts, 6, StaticWindowPolicy(GAMMA), sync_every=2,
+                 transport=InProcessTransport())
+    tr = EmulatedLinkTransport(LinkSpec(rtt_ms=80.0, jitter_ms=0.5),
+                               seed=1, sleep=False)
+    sess = DecodeSession(eng, capacity=2, max_new_cap=6, gamma_max=GAMMA,
+                         sync_every=2, transport=tr)
+    sess.admit_batch(prompts, 6)
+    t0 = time.perf_counter()
+    while sess.unfinished and sess.iterations < 24:
+        sess.run_chunk(StaticWindowPolicy(GAMMA))
+    wall_ms = (time.perf_counter() - t0) * 1e3
+    assert sess.link_ms > 80.0           # sampled delays were charged...
+    assert wall_ms < sess.link_ms        # ...but never slept
+    assert sess.virtual_ms >= sess.link_ms   # they hit the virtual clock
+    feats = sess._features(0.0)
+    assert feats.tpot_recent_ms > 0.0    # not clamped to zero by link_ms

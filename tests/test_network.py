@@ -1,0 +1,108 @@
+"""Link delay-model regression tests (sim/network.py bugfixes).
+
+Pinned behaviors: symmetric jitter truncation keeps the sampled mean
+one-way delay at the analytic ``expected_one_way_ms`` (the old one-sided
+cut biased it upward); ``recent_rtt_ms`` pairs consecutive outbound/return
+deliveries into full round trips instead of doubling a mixed mean (which
+double-counted serialization and mixed window/verdict payload sizes); and
+the verdict payload grows with γ as its contract (per-position logprobs)
+promises.
+"""
+
+import random
+
+import pytest
+
+from repro.sim.events import Environment
+from repro.sim.network import (Link, LinkSpec, expected_one_way_ms,
+                               expected_rtt_ms, sample_one_way_ms,
+                               verdict_payload_bytes, window_payload_bytes)
+
+
+def test_jitter_truncation_symmetric_mean():
+    """Sampled mean one-way delay == analytic expectation, including when
+    4·jitter_ms exceeds 0.9·RTT/2 (the regime the old asymmetric
+    truncation biased upward)."""
+    rng = random.Random(0)
+    for spec in (LinkSpec(rtt_ms=10.0, jitter_ms=1.0),
+                 LinkSpec(rtt_ms=2.0, jitter_ms=4.0),      # old bias regime
+                 LinkSpec(rtt_ms=40.0, jitter_ms=8.0)):
+        n = 20000
+        mean = sum(sample_one_way_ms(spec, rng) for _ in range(n)) / n
+        expect = expected_one_way_ms(spec)
+        # symmetric truncation preserves the mean; tolerance covers
+        # sampling noise (std ≈ jitter/2/√n)
+        assert abs(mean - expect) < 0.05 * max(1.0, expect), (spec, mean)
+
+
+def test_one_way_delay_positive_and_causal():
+    rng = random.Random(1)
+    spec = LinkSpec(rtt_ms=1.0, jitter_ms=50.0)   # jitter >> rtt
+    for _ in range(2000):
+        d = sample_one_way_ms(spec, rng)
+        assert d > 0.0
+        # bounded by half_rtt + truncation bound + serialization
+        assert d <= 0.5 * 1.0 * 1.9 + expected_one_way_ms(spec, 64) + 1e-9
+
+
+def test_recent_rtt_pairs_send_and_verdict():
+    """recent_rtt_ms reconstructs the round trip from explicitly PAIRED
+    one-way delays: with asymmetric payloads the estimate matches the
+    analytic out+back RTT, not 2× either direction."""
+    env = Environment()
+    # huge payload asymmetry on a thin pipe makes direction mixing obvious
+    spec = LinkSpec(rtt_ms=10.0, jitter_ms=0.0, bandwidth_gbps=0.001)
+    link = Link(env, spec, random.Random(0))
+    out_b, back_b = 10_000, 100
+    for _ in range(8):
+        link.transfer(out_b)       # window out
+        d_out = link.last_delay_ms
+        link.transfer(back_b)      # verdict back
+        link.record_rtt(d_out + link.last_delay_ms)
+    expect = expected_rtt_ms(spec, out_b, back_b)
+    assert link.recent_rtt_ms == pytest.approx(expect, rel=1e-6)
+    # transfers alone (no completed exchange recorded) must not contribute
+    # half-pairs — the estimate falls back to the spec RTT
+    link2 = Link(env, spec, random.Random(0))
+    link2.transfer(out_b)
+    assert link2.recent_rtt_ms == spec.rtt_ms
+
+
+def test_recent_rtt_robust_to_interleaved_drafters():
+    """A Link is shared by every drafter routed to its target: two
+    drafters' outbound windows can interleave, so pairing must come from
+    the caller's explicit exchange sums, not delivery order."""
+    env = Environment()
+    spec = LinkSpec(rtt_ms=10.0, jitter_ms=0.0, bandwidth_gbps=0.001)
+    link = Link(env, spec, random.Random(0))
+    out_b, back_b = 10_000, 100
+    for _ in range(4):
+        # drafter A and B both send windows before either verdict returns
+        link.transfer(out_b)
+        a_out = link.last_delay_ms
+        link.transfer(out_b)
+        b_out = link.last_delay_ms
+        link.transfer(back_b)
+        link.record_rtt(a_out + link.last_delay_ms)
+        link.transfer(back_b)
+        link.record_rtt(b_out + link.last_delay_ms)
+    expect = expected_rtt_ms(spec, out_b, back_b)
+    # order-based pairing would have produced out+out (two big
+    # serializations) and back+back (two small) estimates instead
+    assert link.recent_rtt_ms == pytest.approx(expect, rel=1e-6)
+
+
+def test_recent_rtt_fallback_before_any_pair():
+    env = Environment()
+    link = Link(env, LinkSpec(rtt_ms=7.5), random.Random(0))
+    assert link.recent_rtt_ms == 7.5
+
+
+def test_verdict_payload_scales_with_gamma():
+    """The verdict carries per-position logprobs: payload must grow with
+    γ, and stay smaller than the window payload (ids + probs) it answers."""
+    sizes = [verdict_payload_bytes(g) for g in (1, 4, 8, 12)]
+    assert sizes == sorted(sizes) and len(set(sizes)) == len(sizes)
+    for g in (1, 4, 8, 12):
+        assert verdict_payload_bytes(g) > verdict_payload_bytes(0)
+        assert verdict_payload_bytes(g) < window_payload_bytes(g) + 48

@@ -1,0 +1,90 @@
+"""Window-policy unit tests: per-pair state isolation, gamma_bound
+contracts, and fused-mode decisions surviving the stabilizer."""
+
+from repro.core.awc.stabilize import StabilizerConfig
+from repro.core.window import (AWCWindowPolicy, DynamicWindowPolicy,
+                               FeatureSnapshot, OracleStaticPolicy,
+                               StaticWindowPolicy)
+
+
+def _feats(alpha=0.7, rtt=10.0, q=0.2, tpot=40.0, gp=4.0):
+    return FeatureSnapshot(q_depth=q, alpha_recent=alpha, rtt_recent_ms=rtt,
+                           tpot_recent_ms=tpot, gamma_prev=gp)
+
+
+# ------------------------------------------------------ per-pair isolation
+
+def test_dynamic_policy_pairs_do_not_share_gamma():
+    """Two draft–target pairs adapt independently: driving one pair's γ up
+    (high α) and the other's down (low α) never cross-contaminates."""
+    p = DynamicWindowPolicy(hi=0.75, lo=0.25, gamma0=4, gmin=1, gmax=12)
+    for _ in range(5):
+        up = p.decide("edge0->cloud0", _feats(alpha=0.95))
+        dn = p.decide("edge1->cloud1", _feats(alpha=0.05))
+    assert up.gamma == 9          # 4 + 5
+    assert dn.gamma == 1          # 4 - 3, clamped at gmin
+    # a fresh pair still starts at gamma0, unaffected by either history
+    assert p.decide("edge2->cloud2", _feats(alpha=0.5)).gamma == 4
+
+
+def test_awc_policy_pairs_have_independent_stabilizers():
+    """AWC keeps one stabilizer per pair: pushing one pair into fused mode
+    leaves the other pair's EMA/hysteresis untouched."""
+    p = AWCWindowPolicy(lambda f: 1.0 if f[1] < 0.3 else 8.0)
+    for _ in range(4):
+        low = p.decide("low", _feats(alpha=0.1))
+    high = p.decide("high", _feats(alpha=0.9))
+    assert low.mode == "fused" and low.gamma == 1
+    assert high.mode == "distributed" and high.gamma == 8
+    assert set(p._stab) == {"low", "high"}
+    assert p._stab["low"].mode == "fused"
+    assert p._stab["high"].mode == "distributed"
+
+
+# ----------------------------------------------------- gamma_bound contract
+
+def test_awc_gamma_bound_matches_stabilizer_clamp():
+    """The policy's declared compile bound == the stabilizer's clamp_hi,
+    and no decision ever exceeds it (the engine compiles ONE step at this
+    width)."""
+    cfg = StabilizerConfig(clamp_lo=1.0, clamp_hi=7.0)
+    p = AWCWindowPolicy(lambda f: 1000.0, stab_cfg=cfg)
+    assert p.gamma_bound() == int(cfg.clamp_hi) == 7
+    for _ in range(10):
+        d = p.decide("pair", _feats())
+        assert 1 <= d.gamma <= p.gamma_bound()
+
+
+def test_policy_gamma_bounds_cover_all_decisions():
+    policies = [StaticWindowPolicy(5), DynamicWindowPolicy(gmax=9),
+                OracleStaticPolicy(6), OracleStaticPolicy(6, fused=True),
+                AWCWindowPolicy(lambda f: 99.0)]
+    for pol in policies:
+        bound = pol.gamma_bound()
+        for a in (0.05, 0.5, 0.95):
+            for _ in range(4):
+                assert pol.decide("k", _feats(alpha=a)).gamma <= bound
+
+
+# --------------------------------------------------- fused-mode stabilization
+
+def test_fused_decisions_survive_stabilizer():
+    """A predictor pinned at γ≤1 must reach fused mode through the
+    clamp/EMA/hysteresis stack (not be smoothed or clamped away), and the
+    resulting decisions carry γ=1."""
+    p = AWCWindowPolicy(lambda f: 0.25)       # below clamp_lo
+    modes = [p.decide("pair", _feats()).mode for _ in range(6)]
+    assert modes[-1] == "fused"
+    assert "distributed" in modes             # hysteresis delayed the flip
+    d = p.decide("pair", _feats())
+    assert d.mode == "fused" and d.gamma == 1
+
+
+def test_fused_flip_requires_consecutive_low_predictions():
+    """One transient γ=1 prediction between large ones never flips the
+    mode (hysteresis_k=2 default)."""
+    vals = iter([8.0, 1.0, 8.0, 8.0, 8.0, 8.0])
+    p = AWCWindowPolicy(lambda f: next(vals),
+                        stab_cfg=StabilizerConfig(ema_alpha=1.0))
+    modes = [p.decide("pair", _feats()).mode for _ in range(6)]
+    assert all(m == "distributed" for m in modes)
