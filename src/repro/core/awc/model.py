@@ -27,13 +27,14 @@ import jax.numpy as jnp
 import numpy as np
 
 
-FEATURE_DIM = 5  # [q_depth, alpha_recent, rtt_ms, tpot_ms, gamma_prev]
+# [q_depth, alpha_recent, rtt_ms, tpot_ms, gamma_prev, pipe_hit_recent]
+FEATURE_DIM = 6
 
 
 class WCDNNParams(NamedTuple):
-    feat_mean: jax.Array   # (5,)
-    feat_std: jax.Array    # (5,)
-    w_in: jax.Array        # (5, H)
+    feat_mean: jax.Array   # (FEATURE_DIM,)
+    feat_std: jax.Array    # (FEATURE_DIM,)
+    w_in: jax.Array        # (FEATURE_DIM, H)
     b_in: jax.Array        # (H,)
     blocks: tuple          # ((w1,b1,w2,b2), ...) residual blocks
     w_out: jax.Array       # (H, 1)
@@ -70,7 +71,7 @@ def set_normalization(params: WCDNNParams, x: jax.Array) -> WCDNNParams:
 
 
 def forward(params: WCDNNParams, x: jax.Array) -> jax.Array:
-    """x: (..., 5) → (...,) continuous γ prediction."""
+    """x: (..., FEATURE_DIM) → (...,) continuous γ prediction."""
     h = (x - params.feat_mean) / params.feat_std
     h = jax.nn.silu(h @ params.w_in + params.b_in)
     for (w1, b1, w2, b2) in params.blocks:
@@ -126,6 +127,13 @@ def save(params: WCDNNParams, path: str) -> None:
 
 def load(path: str) -> WCDNNParams:
     z = np.load(path)
+    got = int(z["w_in"].shape[0])
+    if got != FEATURE_DIM:
+        raise ValueError(
+            f"{path} was trained on {got}-dim features but this build "
+            f"expects FEATURE_DIM={FEATURE_DIM} (the pipeline-hit-rate "
+            f"signal was appended); re-train or delete the stale "
+            f"checkpoint")
     n = int(z["n_blocks"])
     blocks = tuple(
         (jnp.asarray(z[f"blk{i}_w1"]), jnp.asarray(z[f"blk{i}_b1"]),
@@ -151,19 +159,26 @@ def bootstrap_gamma(feats: list[float], cost_ratio: float = 0.12,
                     gmax: int = 12,
                     fused_chunk: int = _FUSED_CHUNK_DEFAULT,
                     mode_aware: bool = True) -> float:
-    """γ* maximizing tokens/second from Eq. (1) with network- and
-    queue-aware iteration cost:
+    """γ* maximizing tokens/second from Eq. (1) with network-, queue- and
+    pipeline-aware iteration cost:
 
-        rate(γ) = E[τ](α, γ) / (γ·c + 1 + (RTT + queue·TPOT) / t_verify)
+        rate(γ) = E[τ](α, γ) / (γ·c + 1 + ((1−h)·RTT + queue·TPOT) / t_verify)
 
-    where t_verify ≈ TPOT is the per-iteration verification service time.
-    High queue depth or RTT pushes γ up (amortize round trips); low α pushes
-    γ down (rollback waste). Mirrors the objective the sweep labels encode.
+    where t_verify ≈ TPOT is the per-iteration verification service time
+    and h is the recent pipeline hit rate (``pipe_hit_recent``, the 6th
+    feature; 0 when feats has only the classic 5). Cross-round pipelining
+    overlaps a hit round's RTT with the next window's drafting, so the
+    expected per-round stall shrinks by the hit fraction — the
+    overlapped-RTT term. High queue depth or RTT pushes γ up (amortize
+    round trips); low α pushes γ down (rollback waste); a high hit rate
+    keeps γ in distributed mode on links where the unpipelined controller
+    would already have fled to fused.
 
     The controller is MODE-aware (paper Fig. 6 / §3.3): the best
     distributed rate is compared against the fused (cloud-only)
-    alternative, which produces one token per target step and pays the
-    round trip only once per ``fused_chunk``-token chunk:
+    alternative, which produces one token per target step, pays the round
+    trip only once per ``fused_chunk``-token chunk, and — having no
+    speculation to overlap — never benefits from pipelining:
 
         rate_fused = 1 / (1 + (RTT + queue·TPOT) / (chunk · t_verify))
 
@@ -176,11 +191,14 @@ def bootstrap_gamma(feats: list[float], cost_ratio: float = 0.12,
     runs its OWN fused-vs-distributed objective comparison) must not
     receive the mode sentinel.
     """
-    q_depth, alpha, rtt_ms, tpot_ms, _ = feats
+    q_depth, alpha, rtt_ms, tpot_ms = feats[0], feats[1], feats[2], feats[3]
+    pipe_hit = min(1.0, max(0.0, float(feats[5]))) if len(feats) > 5 else 0.0
     alpha = min(0.98, max(0.02, alpha))
     t_verify = max(1.0, tpot_ms)
-    stall_ms = rtt_ms + max(0.0, q_depth) * tpot_ms
-    overhead = stall_ms / t_verify
+    queue_ms = max(0.0, q_depth) * tpot_ms
+    stall_ms = rtt_ms + queue_ms
+    # overlapped-RTT term: a hit round's RTT hides behind the next draft
+    overhead = ((1.0 - pipe_hit) * rtt_ms + queue_ms) / t_verify
     best_g, best_rate = 1, -1.0
     for g in range(1, gmax + 1):
         e_tau = (1.0 - alpha ** (g + 1)) / (1.0 - alpha)

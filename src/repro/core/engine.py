@@ -176,6 +176,8 @@ class GenerationStats:
     produced: Any = None             # (B,) per-sequence tokens produced
                                      # (anchor included; ≤ max_new; < only
                                      # on EOS stop)
+    pipeline_hits: int = 0           # optimistic cross-round windows kept
+    pipeline_misses: int = 0         # optimistic windows rolled back
 
     @property
     def acceptance_rate(self) -> float:

@@ -90,7 +90,15 @@ class DecodeSession:
                        TargetWorker over this transport (colocated fused
                        step otherwise),
     ``mode_policy``    ``"auto"`` honors ``WindowDecision.mode``,
-                       ``"distributed"``/``"fused"`` force one mode.
+                       ``"distributed"``/``"fused"`` force one mode,
+                       ``"pipeline"`` honors the decision like ``auto`` but
+                       overlaps rounds: while the target verifies window k
+                       the draft optimistically drafts window k+1 from its
+                       own proposed continuation, rolling back on partial
+                       accepts (requires a transport; γ is capped at
+                       ``gamma_max − 1`` because one proposal slot is
+                       reserved as the bonus-token guess the next window
+                       anchors on).
     """
 
     def __init__(self, engine, capacity: int, max_new_cap: int,
@@ -114,7 +122,15 @@ class DecodeSession:
         self.sync_every = max(1, int(sync_every or engine.sync_every))
         self.eos_id = -1 if eos_id is None else int(eos_id)
         self._key = key if key is not None else jax.random.PRNGKey(0)
-        assert mode_policy in ("auto", "distributed", "fused"), mode_policy
+        assert mode_policy in ("auto", "distributed", "fused",
+                               "pipeline"), mode_policy
+        if mode_policy == "pipeline":
+            assert transport is not None, \
+                "pipeline mode overlaps rounds across a transport; " \
+                "colocated sessions have nothing to overlap"
+            assert self.gamma_max >= 2, \
+                "pipeline mode reserves one proposal slot as the bonus " \
+                "guess; gamma_max must be ≥ 2"
         self.transport = transport
         self.mode_policy = mode_policy
 
@@ -142,17 +158,26 @@ class DecodeSession:
         self.log_gamma = bool(log_gamma)
         self.gamma_seq: list[int] = []
         self.fused_iterations = 0
-        self.link_ms = 0.0               # transport delay imposed so far
+        self.link_ms = 0.0               # unhidden transport delay so far
+        self.pipeline_hits = 0           # optimistic windows kept
+        self.pipeline_misses = 0         # optimistic windows rolled back
         self._fused_pending = 0          # fused tokens since last flush
         self._q_zero = None              # cached fused-round q placeholder
         self._alpha_recent: list[float] = []
         self._tpot_recent: list[float] = []
+        self._pipe_recent: list[float] = []
+        self._round_seq = 0              # wire round ids (RTT pairing)
         self._gamma_prev = 4.0
 
     # ------------------------------------------------------------- geometry
 
     def _cache_len(self, prompt_len: int) -> int:
-        return prompt_len + self.max_new_cap + self.gamma_max + 17
+        # 2× the window bound: a pipelined round's optimistic propose can
+        # write up to gamma_max positions beyond the half-duplex high-water
+        # mark. Applied to every mode so sessions that differ only in
+        # mode_policy share one cache geometry (state-comparison tests and
+        # jit keys line up; pos_map masking makes the headroom free).
+        return prompt_len + self.max_new_cap + 2 * self.gamma_max + 18
 
     def _init_buffers(self) -> None:
         B = self.capacity
@@ -303,9 +328,14 @@ class DecodeSession:
             fused = True
         elif self.mode_policy == "distributed":
             fused = False
-        else:
+        else:                     # auto and pipeline honor the decision
             fused = dec.mode == "fused"
-        gamma_eff = 0 if fused else min(self.gamma_max, max(1, int(dec.gamma)))
+        # pipeline mode reserves the (γ+1)-th proposal as the bonus guess
+        # the optimistic next window anchors on, so γ caps one below the
+        # compiled width
+        cap = (self.gamma_max - 1 if self.mode_policy == "pipeline"
+               else self.gamma_max)
+        gamma_eff = 0 if fused else min(cap, max(1, int(dec.gamma)))
         if self.log_gamma:
             self.gamma_seq.append(1 if fused else gamma_eff)
         if fused:
@@ -328,8 +358,13 @@ class DecodeSession:
         Both paths honor ``WindowDecision.mode`` — a fused decision
         commits target-only tokens (the colocated step still pays the
         draft proposal compute, which is masked dead weight there; the
-        transport path skips the draft and the round trip entirely)."""
+        transport path skips the draft and the round trip entirely).
+        ``mode_policy="pipeline"`` overlaps consecutive distributed rounds
+        over the full-duplex transport (:meth:`_run_chunk_pipeline`); the
+        half-duplex exchange stays the default."""
         if self.transport is not None:
+            if self.mode_policy == "pipeline":
+                return self._run_chunk_pipeline(policy, max_iters, q_depth)
             return self._run_chunk_transport(policy, max_iters, q_depth)
         n = self.sync_every
         if max_iters is not None:
@@ -357,23 +392,75 @@ class DecodeSession:
                                  colocated_rtt_ms=eng.rtt_ms)
         return n
 
+    def _verify_commit_round(self, tw, window_np: np.ndarray, gamma: int,
+                             row_idx: int, q_probs, sampled: bool, key):
+        """Run the TargetWorker's verify/commit program on one window
+        against the session's ground-truth target-side buffers (cache,
+        output buffer, cursors, lifecycle flags — all updated in place).
+        Shared by the half-duplex and pipelined transport paths."""
+        eng = self.engine
+        state = self._state
+        args = [tw.params, state.target_cache, jnp.asarray(window_np),
+                state.pos, jnp.asarray(gamma, jnp.int32), key]
+        if sampled:
+            if q_probs is None:       # fused round: q is never read
+                if self._q_zero is None:
+                    self._q_zero = jnp.zeros(
+                        (self.capacity, self.gamma_max, eng.draft_cfg.vocab),
+                        jnp.float32)
+                q_probs = self._q_zero
+            args.append(q_probs)
+        (tcache, new_pos, new_last, self._out_buf, self._cursor,
+         self._nacc, self._nn, self._done, num_new_dev, nacc_dev,
+         next_raw) = tw.verify_commit(self.gamma_max)(
+            *args, self._out_buf, self._cursor, self._nacc, self._nn,
+            self._max_new, self._done,
+            jnp.asarray(row_idx, jnp.int32), jnp.asarray(self.eos_id,
+                                                         jnp.int32))
+        return tcache, new_pos, new_last, num_new_dev, nacc_dev, next_raw
+
+    def _fused_round(self, dw, tw, row_idx: int, sampled: bool, key) -> float:
+        """One fused (cloud-only) round over the transport: γ = 0 verify
+        commits the target's own next token, the draft ingests it so its
+        cache stays coherent for a later distributed round, and tokens
+        stream edge-ward one control round trip per ``FUSED_FLUSH_TOKENS``
+        committed tokens — the same per-chunk amortization DSD-Sim charges
+        (``fused_chunk``; per-request streams overlap on the link in the
+        sim, so batch-level amortization approximates their wall-clock
+        cost). Returns the unhidden link delay imposed by stream flushes."""
+        state = self._state
+        window_np = np.zeros((self.capacity, self.gamma_max + 1), np.int32)
+        window_np[:, 0] = np.asarray(state.last_token)
+        (tcache, new_pos, new_last, num_new_dev, _nacc, _next) = \
+            self._verify_commit_round(tw, window_np, 0, row_idx, None,
+                                      sampled, key)
+        dcache = dw.ingest()(dw.params, state.draft_cache, state.last_token,
+                             state.pos, num_new_dev)
+        link_ms = 0.0
+        self._fused_pending += int(np.asarray(num_new_dev).sum())
+        while self._fused_pending >= FUSED_FLUSH_TOKENS:
+            link_ms += self.transport.control_roundtrip()
+            self._fused_pending -= FUSED_FLUSH_TOKENS
+        self._state = SpecDecodeState(draft_cache=dcache, target_cache=tcache,
+                                      last_token=new_last, pos=new_pos)
+        return link_ms
+
     def _run_chunk_transport(self, policy, max_iters: Optional[int],
                              q_depth: float) -> int:
-        """Up to ``sync_every`` speculation rounds over the transport.
+        """Up to ``sync_every`` HALF-DUPLEX speculation rounds over the
+        transport (the default exchange; ``mode_policy="pipeline"`` routes
+        to :meth:`_run_chunk_pipeline` instead).
 
         Per distributed round: the DraftWorker proposes γ_max tokens, the
         token ids materialize on the host and cross the transport as a
         :class:`~repro.distributed.wire.WindowMsg` (paying the link's
-        measured delay), the TargetWorker verifies/commits, and the
+        imposed delay), the TargetWorker verifies/commits, and the
         :class:`~repro.distributed.wire.VerdictMsg` pays the return delay.
-        A fused round skips the draft and both hops; fused-mode tokens
-        stream back in one small control round trip per
-        ``FUSED_FLUSH_TOKENS`` committed tokens — the same per-chunk
-        amortization DSD-Sim charges (``fused_chunk``), which is what
-        makes fused mode comparatively RTT-insensitive. The per-round host
-        sync is inherent — tokens must exist as bytes to cross a wire —
-        so this path trades the colocated loop's in-flight pipelining for
-        a real network boundary."""
+        A fused round skips the draft and both hops
+        (:meth:`_fused_round`). The per-round host sync is inherent —
+        tokens must exist as bytes to cross a wire — so this path pays a
+        full RTT of dead time per committed window; hiding it is exactly
+        what the pipelined mode is for."""
         from ..distributed.wire import VerdictMsg, WindowMsg
         n = self.sync_every
         if max_iters is not None:
@@ -400,11 +487,9 @@ class DecodeSession:
             self._key, ks = jax.random.split(self._key)
             kd, kv = jax.random.split(ks)
             state = self._state
-            last_host = np.asarray(state.last_token)
-            q_probs = None
             if fused:
-                window_np = np.zeros((B, G + 1), np.int32)
-                window_np[:, 0] = last_host
+                link_ms += self._fused_round(dw, tw, r, sampled, kv)
+                done_host = np.asarray(self._done)
             else:
                 # timing the propose dispatch through the host materialize
                 # isolates the draft's serial scan — excluded from the
@@ -415,52 +500,28 @@ class DecodeSession:
                     state.pos, kd)
                 toks_np = np.asarray(toks)
                 draft_ms += (time.perf_counter() - t_draft) * 1e3
+                rid = self._round_seq
+                self._round_seq += 1
                 msg = WindowMsg(tokens=toks_np, gamma=gamma,
                                 n_active=n_active,
-                                q_probs=q_probs if sampled else None)
+                                q_probs=q_probs if sampled else None,
+                                round_id=rid)
                 link_ms += tr.send_window(msg)
-                window_np = np.concatenate([last_host[:, None], msg.tokens],
-                                           axis=1)
-            args = [tw.params, state.target_cache, jnp.asarray(window_np),
-                    state.pos, jnp.asarray(gamma, jnp.int32), kv]
-            if sampled:
-                if q_probs is None:       # fused round: q is never read
-                    if self._q_zero is None:
-                        self._q_zero = jnp.zeros(
-                            (B, G, eng.draft_cfg.vocab), jnp.float32)
-                    q_probs = self._q_zero
-                args.append(q_probs)
-            (tcache, new_pos, new_last, self._out_buf, self._cursor,
-             self._nacc, self._nn, self._done, num_new_dev, nacc_dev,
-             next_raw) = tw.verify_commit(G)(
-                *args, self._out_buf, self._cursor, self._nacc, self._nn,
-                self._max_new, self._done,
-                jnp.asarray(r, jnp.int32), jnp.asarray(self.eos_id,
-                                                       jnp.int32))
-            done_host = np.asarray(self._done)
-            if fused:
-                # the draft shadows the committed token so its cache stays
-                # coherent for a later distributed round
-                dcache = dw.ingest()(dw.params, state.draft_cache,
-                                     state.last_token, state.pos,
-                                     num_new_dev)
-                # cloud-side tokens stream to the edge one control round
-                # trip per FUSED_FLUSH_TOKENS, amortized over the BATCH's
-                # committed tokens: per-request streams overlap on the
-                # link in the sim, so batch-level amortization approximates
-                # their wall-clock cost (per-request stream modeling is a
-                # ROADMAP item)
-                self._fused_pending += int(np.asarray(num_new_dev).sum())
-                while self._fused_pending >= FUSED_FLUSH_TOKENS:
-                    link_ms += tr.control_roundtrip()
-                    self._fused_pending -= FUSED_FLUSH_TOKENS
-            else:
+                window_np = np.concatenate(
+                    [np.asarray(state.last_token)[:, None], msg.tokens],
+                    axis=1)
+                (tcache, new_pos, new_last, num_new_dev, nacc_dev,
+                 next_raw) = self._verify_commit_round(
+                    tw, window_np, gamma, r,
+                    q_probs if sampled else None, sampled, kv)
+                done_host = np.asarray(self._done)
                 verdict = VerdictMsg(
                     n_accepted=np.asarray(nacc_dev),
                     num_new=np.asarray(num_new_dev),
                     next_token=np.asarray(next_raw),
                     last_token=np.asarray(new_last),
-                    done=done_host, gamma=gamma, n_active=n_active)
+                    done=done_host, gamma=gamma, n_active=n_active,
+                    round_id=rid)
                 link_ms += tr.send_verdict(verdict)
                 if dw.attention:
                     dcache = dcache_prop   # pos_map masks the stale tail
@@ -473,9 +534,9 @@ class DecodeSession:
                     dcache = dw.advance(G)(dw.params, state.draft_cache,
                                            jnp.asarray(window_np),
                                            state.pos, num_new_dev)
-            self._state = SpecDecodeState(
-                draft_cache=dcache, target_cache=tcache,
-                last_token=new_last, pos=new_pos)
+                self._state = SpecDecodeState(
+                    draft_cache=dcache, target_cache=tcache,
+                    last_token=new_last, pos=new_pos)
             chunk_gammas.append(gamma)
             self.iterations += 1
             it_run += 1
@@ -492,6 +553,251 @@ class DecodeSession:
         # measured draft proposal time and the link delay (only when the
         # transport really slept it into wall time — a non-sleeping
         # transport's delay goes to the virtual clock instead)
+        self._sync_and_attribute(
+            it_run, chunk_gammas, chunk_t0,
+            non_target_ms=draft_ms + (link_ms if tr.wall_clock else 0.0),
+            virtual_extra_ms=0.0 if tr.wall_clock else link_ms)
+        return it_run
+
+    # ----------------------------------------------------- pipelined decode
+
+    def _make_window(self, dw, state: SpecDecodeState, gamma: int,
+                     done_host: np.ndarray, cursor_host: np.ndarray,
+                     speculative: bool) -> dict:
+        """Propose one speculation window from ``state``, post it on the
+        transport, and precompute BOTH resolutions of its verdict:
+
+        - the OPTIMISTIC post-round state (all ``gamma`` proposals
+          accepted, bonus token = the reserved (γ+1)-th proposal the draft
+          would anchor its next window on), including a host mirror of
+          :func:`repro.core.specdec.slot_stop_mask` so budget/EOS clamps
+          are predicted exactly — a verdict matching the predicted
+          ``(num_new, last_token, done)`` triple implies the optimistic
+          draft state is bitwise the committed one (the draft's cache
+          advance only ever consumes the anchor + accepted window prefix,
+          all of which the triple pins down);
+        - the ROLLBACK materials (pre-window checkpoint + window) that
+          reconstruct the exact half-duplex post-verdict state on a miss.
+        """
+        from ..distributed.wire import WindowMsg
+        eng = self.engine
+        G = self.gamma_max
+        B = self.capacity
+        sampled = eng.temperature > 0.0
+        max_new_host = np.asarray(self._max_new)
+        t0 = time.perf_counter()
+        self._key, kd = jax.random.split(self._key)
+        toks, q_probs, dcache_prop = dw.propose(G)(
+            dw.params, state.draft_cache, state.last_token, state.pos, kd)
+        toks_np = np.asarray(toks)
+        last_host = np.asarray(state.last_token)
+        window_np = np.concatenate([last_host[:, None], toks_np], axis=1)
+
+        # -- optimistic post-round prediction (slot_stop_mask mirror) ------
+        active = ~done_host
+        bonus = toks_np[:, gamma]
+        committed = np.full((B, G + 1), -1, np.int32)
+        committed[:, :gamma] = toks_np[:, :gamma]
+        committed[:, gamma] = bonus
+        num_eff = np.where(
+            active,
+            np.minimum(gamma + 1, np.maximum(0, max_new_host - cursor_host)),
+            0).astype(np.int32)
+        eos = self.eos_id
+        ar = np.arange(G + 1)[None, :]
+        is_eos = (committed == eos) & (ar < num_eff[:, None]) & (eos >= 0)
+        has_eos = is_eos.any(axis=1)
+        eos_pos = is_eos.argmax(axis=1).astype(np.int32)
+        num_eff = np.where(has_eos, np.minimum(num_eff, eos_pos + 1),
+                           num_eff).astype(np.int32)
+        done_opt = done_host | (cursor_host + num_eff >= max_new_host) \
+            | has_eos
+        last_opt = np.where(done_host, last_host, bonus).astype(np.int32)
+        num_eff_dev = jnp.asarray(num_eff)
+        if dw.attention:
+            opt_cache = dcache_prop    # pos_map masks the stale tail
+        else:
+            # recurrent draft: optimistic re-advance of the pre-window
+            # checkpoint over the assumed-committed prefix — the same
+            # jitted program a miss's rollback runs (zero recompiles)
+            opt_cache = dw.advance(G)(dw.params, state.draft_cache,
+                                      jnp.asarray(window_np), state.pos,
+                                      num_eff_dev)
+        draft_ms = (time.perf_counter() - t0) * 1e3
+
+        rid = self._round_seq
+        self._round_seq += 1
+        msg = WindowMsg(tokens=toks_np, gamma=gamma,
+                        n_active=int(B - done_host.sum()),
+                        q_probs=q_probs if sampled else None,
+                        round_id=rid, speculative=speculative)
+        self.transport.post_window(msg)
+        return dict(
+            msg=msg, gamma=gamma, round_id=rid, draft_ms=draft_ms,
+            q_probs=q_probs if sampled else None,
+            window_dev=jnp.asarray(window_np),
+            base_pos=state.pos,              # pre-window position (rollback)
+            ckpt_cache=state.draft_cache,    # recurrent rollback checkpoint
+            prop_cache=dcache_prop,          # attention rollback basis
+            opt_state=SpecDecodeState(
+                draft_cache=opt_cache, target_cache=None,
+                last_token=jnp.asarray(last_opt),
+                pos=state.pos + num_eff_dev),
+            opt_num_new=num_eff, opt_done=done_opt, opt_last=last_opt)
+
+    def _run_chunk_pipeline(self, policy, max_iters: Optional[int],
+                            q_depth: float) -> int:
+        """Up to ``sync_every`` CROSS-ROUND PIPELINED speculation rounds:
+        while the target verifies window k, the draft optimistically
+        drafts window k+1 from its own proposed continuation and posts it
+        speculatively on the full-duplex transport, so the draft scan and
+        the window's outbound hop overlap window k's verification and
+        verdict flight instead of serializing after them.
+
+        On verdict arrival the optimistic prediction is checked against
+        the actual ``(num_new, last_token, done)`` triple: a HIT keeps the
+        pipelined window (it becomes the in-flight exchange — its verify
+        starts without waiting a draft scan + upload); a MISS (partial or
+        zero accept, bonus-token mismatch, or a mispredicted budget/EOS
+        stop) discards the in-flight window unverified and rolls the
+        draft's recurrent/KV state back to the commit point — attention
+        drafts reuse the kept pre-speculation propose cache, recurrent
+        drafts re-advance the pre-window checkpoint, both bitwise equal to
+        the half-duplex state (at temperature 0 committed tokens are
+        bit-identical to the half-duplex path by construction: the target
+        only ever verifies windows whose anchor matches its committed
+        prefix). In-flight speculation never crosses a chunk boundary, so
+        admissions/retirements at ``sync_every`` granularity can never
+        invalidate a window the transport still carries."""
+        n = self.sync_every
+        if max_iters is not None:
+            n = min(n, max_iters - self.iterations)
+        if n <= 0 or not self.occupied:
+            return 0
+        from ..distributed.wire import VerdictMsg
+        eng = self.engine
+        dw, tw = eng.split_workers()
+        G = self.gamma_max
+        tr = self.transport
+        sampled = eng.temperature > 0.0
+        chunk_t0 = time.perf_counter()
+        chunk_gammas: list[int] = []
+        link_ms = 0.0
+        draft_ms = 0.0
+        done_host = np.asarray(self._done)
+        cursor_host = np.asarray(self._cursor).copy()
+        it_run = 0
+        pending = None   # posted window whose verdict is outstanding
+        carry = None     # (γ, fused) decided during the previous flight
+        while it_run < n and not done_host.all():
+            if pending is None:
+                gamma, fused = (carry if carry is not None
+                                else self._decide(policy, q_depth))
+                carry = None
+                if fused:
+                    self._key, kf = jax.random.split(self._key)
+                    link_ms += self._fused_round(dw, tw, it_run, sampled, kf)
+                    done_host = np.asarray(self._done)
+                    # the fused round advanced the device cursors: refresh
+                    # the host mirror or later optimistic budget/EOS
+                    # predictions in this chunk would run understated and
+                    # force spurious rollbacks near the budget edge
+                    cursor_host = np.asarray(self._cursor).copy()
+                    chunk_gammas.append(0)
+                    self.iterations += 1
+                    it_run += 1
+                    continue
+                pending = self._make_window(dw, self._state, gamma,
+                                            done_host, cursor_host,
+                                            speculative=False)
+                draft_ms += pending["draft_ms"]
+
+            # -- target: receive + verify the in-flight window ------------
+            wmsg, waited = tr.recv_window()
+            link_ms += waited
+            window_np = np.concatenate(
+                [np.asarray(self._state.last_token)[:, None], wmsg.tokens],
+                axis=1)
+            self._key, kv = jax.random.split(self._key)
+            (tcache, new_pos, new_last, num_new_dev, nacc_dev, next_raw) = \
+                self._verify_commit_round(tw, window_np, wmsg.gamma, it_run,
+                                          pending["q_probs"], sampled, kv)
+            verdict = VerdictMsg(
+                n_accepted=np.asarray(nacc_dev),
+                num_new=np.asarray(num_new_dev),
+                next_token=np.asarray(next_raw),
+                last_token=np.asarray(new_last),
+                done=np.asarray(self._done), gamma=wmsg.gamma,
+                n_active=wmsg.n_active, round_id=wmsg.round_id)
+            tr.post_verdict(verdict)
+
+            # -- draft: speculate window k+1 while the verdict flies -------
+            spec = None
+            if it_run + 1 < n and not pending["opt_done"].all():
+                gamma2, fused2 = self._decide(policy, q_depth)
+                if fused2:
+                    carry = (gamma2, fused2)   # fused runs unpipelined
+                else:
+                    spec = self._make_window(
+                        dw, pending["opt_state"], gamma2,
+                        pending["opt_done"],
+                        cursor_host + pending["opt_num_new"],
+                        speculative=True)
+                    draft_ms += spec["draft_ms"]
+
+            # -- resolve the verdict --------------------------------------
+            _vmsg, waited = tr.recv_verdict()
+            link_ms += waited
+            hit = (np.array_equal(verdict.num_new, pending["opt_num_new"])
+                   and np.array_equal(verdict.done, pending["opt_done"])
+                   and np.array_equal(verdict.last_token,
+                                      pending["opt_last"]))
+            if hit:
+                self.pipeline_hits += 1
+                self._pipe_recent.append(1.0)
+                dcache = pending["opt_state"].draft_cache
+            else:
+                self.pipeline_misses += 1
+                self._pipe_recent.append(0.0)
+                if dw.attention:
+                    dcache = pending["prop_cache"]
+                else:
+                    dcache = dw.advance(G)(dw.params, pending["ckpt_cache"],
+                                           pending["window_dev"],
+                                           pending["base_pos"], num_new_dev)
+            self._state = SpecDecodeState(
+                draft_cache=dcache, target_cache=tcache,
+                last_token=new_last, pos=new_pos)
+            done_host = verdict.done
+            cursor_host = cursor_host + verdict.num_new
+            chunk_gammas.append(wmsg.gamma)
+            self.iterations += 1
+            it_run += 1
+            if hit and spec is not None:
+                pending = spec            # the pipelined window is live
+            else:
+                if spec is not None:      # late verdict invalidates it
+                    tr.discard_window()
+                    # the re-draft reuses the invalidated window's γ
+                    # decision (it was made pre-verdict — that is what
+                    # pipelining means), keeping policy calls and
+                    # gamma_seq 1:1 with committed rounds
+                    carry = (spec["gamma"], False)
+                pending = None
+        if carry is not None:
+            # a decision was made for a round that never ran (the batch
+            # drained or the chunk ended first): unwind its bookkeeping
+            if carry[1]:
+                self.fused_iterations -= 1
+            if self.log_gamma and self.gamma_seq:
+                self.gamma_seq.pop()
+        if it_run == 0:
+            return 0
+        if self._fused_pending and done_host.all():
+            link_ms += tr.control_roundtrip()
+            self._fused_pending = 0
+        self.link_ms += link_ms
+        del self._pipe_recent[:-16]
         self._sync_and_attribute(
             it_run, chunk_gammas, chunk_t0,
             non_target_ms=draft_ms + (link_ms if tr.wall_clock else 0.0),
@@ -574,6 +880,7 @@ class DecodeSession:
     def _features(self, q_depth: float) -> FeatureSnapshot:
         a = self._alpha_recent[-16:]
         t = self._tpot_recent[-16:]
+        p = self._pipe_recent[-16:]
         if self.transport is not None:
             rtt = self.transport.recent_rtt_ms
         else:
@@ -583,7 +890,11 @@ class DecodeSession:
             alpha_recent=(sum(a) / len(a)) if a else 0.7,
             rtt_recent_ms=rtt,
             tpot_recent_ms=(sum(t) / len(t)) if t else 50.0,
-            gamma_prev=self._gamma_prev)
+            gamma_prev=self._gamma_prev,
+            # outside pipeline mode no RTT is ever overlapped: report 0 so
+            # bootstrap_gamma's overlapped-RTT term stays inert
+            pipe_hit_recent=((sum(p) / len(p)) if p else 0.0)
+            if self.mode_policy == "pipeline" else 0.0)
 
     # ------------------------------------------------------------ retirement
 
@@ -626,5 +937,7 @@ class DecodeSession:
             tokens=int(produced.sum()) - n_occ,
             prefill_s=self.prefill_s, virtual_ms=self.virtual_ms,
             acceptance_seqs=[r.bits for r in self._slots if r is not None],
-            gamma_seq=list(self.gamma_seq), produced=produced)
+            gamma_seq=list(self.gamma_seq), produced=produced,
+            pipeline_hits=self.pipeline_hits,
+            pipeline_misses=self.pipeline_misses)
         return tokens, stats

@@ -22,16 +22,23 @@ from .awc.stabilize import StabilizerConfig, WindowStabilizer
 
 @dataclass(frozen=True)
 class FeatureSnapshot:
-    """The 5-dimensional AWC feature vector (paper §4.1)."""
+    """The AWC feature vector (paper §4.1, plus the pipeline-hit signal).
+
+    ``pipe_hit_recent`` is the recent fraction of cross-round speculative
+    windows that survived their verdict (pipelined execution overlaps
+    window k+1's draft with window k's verification; a hit means the
+    overlapped RTT was genuinely hidden). 0.0 whenever pipelining is off —
+    the controller's overlapped-RTT discount must stay inert there."""
     q_depth: float        # recent target-queue depth utilization in [0, ~]
     alpha_recent: float   # recent token acceptance rate in [0,1]
     rtt_recent_ms: float  # recent link round-trip time
     tpot_recent_ms: float # recent time-per-output-token of the target
     gamma_prev: float     # previous window size
+    pipe_hit_recent: float = 0.0  # recent pipeline hit rate in [0,1]
 
     def as_list(self) -> list[float]:
         return [self.q_depth, self.alpha_recent, self.rtt_recent_ms,
-                self.tpot_recent_ms, self.gamma_prev]
+                self.tpot_recent_ms, self.gamma_prev, self.pipe_hit_recent]
 
 
 @dataclass(frozen=True)

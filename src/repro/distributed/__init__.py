@@ -6,15 +6,19 @@ edge-side :class:`DraftWorker` proposes speculation windows, a cloud-side
 carries the :class:`WindowMsg`/:class:`VerdictMsg` wire messages between
 them — zero-delay in process (the bit-identity regression anchor) or over
 an emulated edge–cloud link whose measured delays feed the AWC window
-policy's ``rtt_recent_ms`` feature.
+policy's ``rtt_recent_ms`` feature. The transport is full-duplex: the
+pipelined session keeps a speculative window for round k+1 in flight
+while round k's verdict travels the other way.
 """
 
 from .transport import (CONTROL_PAYLOAD_BYTES, EmulatedLinkTransport,
                         InProcessTransport, Transport)
-from .wire import VerdictMsg, WindowMsg
+from .wire import (VerdictMsg, WindowMsg, decode_verdict, decode_window,
+                   encode_verdict, encode_window)
 from .workers import DraftWorker, TargetWorker
 
 __all__ = [
     "CONTROL_PAYLOAD_BYTES", "EmulatedLinkTransport", "InProcessTransport",
     "Transport", "VerdictMsg", "WindowMsg", "DraftWorker", "TargetWorker",
+    "decode_verdict", "decode_window", "encode_verdict", "encode_window",
 ]

@@ -10,6 +10,19 @@ Payload sizes come from the same models DSD-Sim charges
 slots actively decoding — so a transport imposes exactly the bytes the
 simulator predicts for the same exchange.
 
+Cross-round pipelining additions:
+
+- ``round_id`` orders the exchange stream: a window and its verdict carry
+  the same id, which is what lets a full-duplex transport pair the two
+  one-way delays of one exchange into a measured RTT even when deliveries
+  interleave out of order (a speculative window for round k+1 can be in
+  flight before round k's verdict lands).
+- ``speculative`` marks a window the draft proposed OPTIMISTICALLY from
+  its own continuation while the previous window was still being
+  verified. A late verdict showing a partial accept invalidates it: the
+  receiver discards the message unverified (its bytes were already spent
+  on the wire) and the draft rolls back and re-drafts.
+
 ``q_probs`` (needed by the stochastic accept/resample rule at
 temperature > 0) is carried as a device-array pass-through: the paper's
 wire format ships only the per-token draft probability q(t_i) (8B/token,
@@ -18,12 +31,20 @@ distribution is reconstructed target-side; this in-process reproduction
 skips the reconstruction and hands the full distribution over, without
 charging extra bytes. Greedy decoding (temperature 0 — the bit-identity
 anchor) does not use it.
+
+:func:`encode_window` / :func:`decode_window` (and the verdict pair) give
+the messages an actual byte representation — the seam a future
+multi-process transport serializes through. The encoded size is the
+implementation's framing (int32 ids, no q_probs); the ``payload_bytes``
+properties keep charging the PAPER's modeled wire format so sim and real
+link costs stay comparable.
 """
 
 from __future__ import annotations
 
+import struct
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Any
 
 import numpy as np
 
@@ -37,6 +58,8 @@ class WindowMsg:
     gamma: int                    # active window size this round (≤ gamma_max)
     n_active: int                 # slots actually decoding (payload scaling)
     q_probs: Any = None           # (B, gamma_max, V) draft dists (temp > 0)
+    round_id: int = 0             # exchange ordinal (pairs with its verdict)
+    speculative: bool = False     # optimistic pipeline window (invalidatable)
 
     @property
     def payload_bytes(self) -> int:
@@ -58,7 +81,63 @@ class VerdictMsg:
     done: np.ndarray              # (B,) bool
     gamma: int
     n_active: int
+    round_id: int = 0             # id of the window this verdict answers
 
     @property
     def payload_bytes(self) -> int:
         return max(1, self.n_active) * verdict_payload_bytes(self.gamma)
+
+
+# --------------------------------------------------------------------------
+# Byte serialization (the multi-process-transport seam)
+# --------------------------------------------------------------------------
+
+_WINDOW_HDR = struct.Struct("<4sqiiiiB")    # magic, round, γ, n_active, B, Γ, spec
+_VERDICT_HDR = struct.Struct("<4sqiii")     # magic, round, γ, n_active, B
+_WINDOW_MAGIC = b"DSDW"
+_VERDICT_MAGIC = b"DSDV"
+
+
+def encode_window(msg: WindowMsg) -> bytes:
+    """Serialize a window to bytes (token ids only — ``q_probs`` is the
+    documented device pass-through and does not cross this seam)."""
+    tokens = np.ascontiguousarray(msg.tokens, np.int32)
+    B, G = tokens.shape
+    head = _WINDOW_HDR.pack(_WINDOW_MAGIC, msg.round_id, msg.gamma,
+                            msg.n_active, B, G, 1 if msg.speculative else 0)
+    return head + tokens.tobytes()
+
+
+def decode_window(blob: bytes) -> WindowMsg:
+    magic, round_id, gamma, n_active, B, G, spec = _WINDOW_HDR.unpack_from(blob)
+    if magic != _WINDOW_MAGIC:
+        raise ValueError(f"bad window magic {magic!r}")
+    tokens = np.frombuffer(blob, np.int32, count=B * G,
+                           offset=_WINDOW_HDR.size).reshape(B, G).copy()
+    return WindowMsg(tokens=tokens, gamma=gamma, n_active=n_active,
+                     round_id=round_id, speculative=bool(spec))
+
+
+def encode_verdict(msg: VerdictMsg) -> bytes:
+    arrs = [np.ascontiguousarray(a, np.int32) for a in
+            (msg.n_accepted, msg.num_new, msg.next_token, msg.last_token)]
+    done = np.ascontiguousarray(msg.done, np.uint8)
+    B = arrs[0].shape[0]
+    head = _VERDICT_HDR.pack(_VERDICT_MAGIC, msg.round_id, msg.gamma,
+                             msg.n_active, B)
+    return head + b"".join(a.tobytes() for a in arrs) + done.tobytes()
+
+
+def decode_verdict(blob: bytes) -> VerdictMsg:
+    magic, round_id, gamma, n_active, B = _VERDICT_HDR.unpack_from(blob)
+    if magic != _VERDICT_MAGIC:
+        raise ValueError(f"bad verdict magic {magic!r}")
+    off = _VERDICT_HDR.size
+    arrs = []
+    for _ in range(4):
+        arrs.append(np.frombuffer(blob, np.int32, count=B, offset=off).copy())
+        off += 4 * B
+    done = np.frombuffer(blob, np.uint8, count=B, offset=off).astype(bool)
+    return VerdictMsg(n_accepted=arrs[0], num_new=arrs[1], next_token=arrs[2],
+                      last_token=arrs[3], done=done, gamma=gamma,
+                      n_active=n_active, round_id=round_id)

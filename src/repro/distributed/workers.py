@@ -26,7 +26,14 @@ The workers do not donate their cache operands: the draft's pre-window
 cache doubles as the recurrent-family rollback checkpoint, and the
 round-trip through the transport keeps a host sync per iteration anyway —
 simplicity wins over the colocated path's in-place-update optimization
-here.
+here. Cross-round pipelining leans on exactly this: the session's
+optimistic draft of window k+1 reuses ``advance`` (recurrent drafts: the
+same re-advance program runs once under the all-accept assumption and
+again from the kept checkpoint on a rollback) and the undonated
+``propose`` output (attention drafts: the pre-speculation propose cache
+IS the rollback state — the speculative window's extra KV writes live
+only in the discarded cache), so hits, rollbacks and mode switches add
+zero XLA programs.
 """
 
 from __future__ import annotations

@@ -80,9 +80,13 @@ def main(argv=None) -> int:
     ap.add_argument("--link-bw-gbps", type=float, default=1.0,
                     help="emulated link bandwidth (with --link-rtt-ms > 0)")
     ap.add_argument("--mode-policy", default="auto",
-                    choices=["auto", "distributed", "fused"],
+                    choices=["auto", "distributed", "fused", "pipeline"],
                     help="honor the window policy's fused/distributed "
-                         "decision (auto) or force one mode")
+                         "decision (auto) or force one mode; 'pipeline' "
+                         "honors the decision AND overlaps window k+1's "
+                         "draft with window k's verification (needs "
+                         "--link-rtt-ms; pays off when RTT is at least "
+                         "the target step time)")
     ap.add_argument("--gamma-max", type=int, default=12,
                     help="compile-once window bound; any policy γ ≤ this "
                          "runs without recompiling")
@@ -94,6 +98,9 @@ def main(argv=None) -> int:
     if args.link_rtt_ms is not None and args.server == "wave":
         raise SystemExit("--link-rtt-ms needs the continuous server "
                          "(the wave baseline is colocated-only)")
+    if args.mode_policy == "pipeline" and args.link_rtt_ms is None:
+        raise SystemExit("--mode-policy pipeline overlaps rounds across a "
+                         "transport; pass --link-rtt-ms (0 = in-process)")
 
     tcfg = get_config(args.target).reduced()
     dcfg = get_config(args.draft).reduced()

@@ -75,6 +75,7 @@ class ServerConfig:
                                            # route rounds over a (emulated)
                                            # edge-cloud link
     mode_policy: str = "auto"              # auto | distributed | fused
+                                           # | pipeline (overlap rounds)
 
 
 class _ArrivalClock:

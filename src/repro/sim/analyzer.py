@@ -93,6 +93,9 @@ class Analyzer:
         self.queue_capacity_hint = queue_capacity_hint
         # rolling state for features
         self.alpha_recent: dict[str, RollingWindow] = {}
+        self.pipe_recent: dict[str, RollingWindow] = {}
+        self.pipeline_hits = 0
+        self.pipeline_misses = 0
         self.tpot_recent = RollingWindow(size=128, default=50.0)
         self.queue_depth: list[int] = [0] * num_targets
         self.busy_ms: list[float] = [0.0] * num_targets
@@ -116,6 +119,19 @@ class Analyzer:
         if proposed > 0:
             win.push(accepted / proposed)
 
+    def record_pipeline(self, pair_key: str, hit: bool) -> None:
+        """One resolved cross-round speculation: the optimistic window was
+        kept (hit — its RTT was hidden) or rolled back (miss)."""
+        win = self.pipe_recent.get(pair_key)
+        if win is None:
+            win = self.pipe_recent[pair_key] = RollingWindow(size=32,
+                                                             default=0.0)
+        win.push(1.0 if hit else 0.0)
+        if hit:
+            self.pipeline_hits += 1
+        else:
+            self.pipeline_misses += 1
+
     def record_batch(self, target_id: int, size: int, busy_ms: float) -> None:
         self.busy_ms[target_id] += busy_ms
         self.batch_sizes.append(size)
@@ -136,12 +152,14 @@ class Analyzer:
         from ..core.window import FeatureSnapshot
         depth = self.queue_depth[target_id] / max(1, self.queue_capacity_hint)
         alpha = self.alpha_recent.get(pair_key)
+        pipe = self.pipe_recent.get(pair_key)
         return FeatureSnapshot(
             q_depth=depth,
             alpha_recent=alpha.mean() if alpha else 0.7,
             rtt_recent_ms=rtt_recent_ms,
             tpot_recent_ms=self.tpot_recent.mean(),
             gamma_prev=gamma_prev,
+            pipe_hit_recent=pipe.mean() if pipe else 0.0,
         )
 
     # -- summary --------------------------------------------------------------
@@ -175,6 +193,8 @@ class Analyzer:
                 sum(self.batch_sizes) / len(self.batch_sizes)
                 if self.batch_sizes else 0.0,
             "net_queue_delay_ms": self.net_queue_delay_ms,
+            "pipeline_hits": self.pipeline_hits,
+            "pipeline_misses": self.pipeline_misses,
             "mean_gamma":
                 (sum(sum(m.gamma_sequence) for m in done)
                  / max(1, sum(len(m.gamma_sequence) for m in done))),

@@ -22,7 +22,7 @@ from __future__ import annotations
 import math
 import random
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 from .events import Environment
 
@@ -60,34 +60,24 @@ def sample_one_way_ms(spec: LinkSpec, rng: random.Random,
 
 
 class RttTracker:
-    """Paired round-trip estimation over a stream of one-way delays.
+    """Round-trip estimation over explicitly paired one-way delays.
 
-    The exchange protocols alternate directions on one link (window out,
-    verdict back; fused: control out, stream back), so consecutive
-    recorded one-way delays are paired into full round trips — a single
-    direction's delay is never doubled (which would double-count its
-    serialization term and mix window/verdict payload sizes). Shared by
-    the simulator's :class:`Link` and the real path's
+    Callers complete an exchange (window out + verdict back, or control
+    out + stream back) and record the paired sum via :meth:`record_rtt`
+    — a single direction's delay is never doubled (which would
+    double-count its serialization term and mix window/verdict payload
+    sizes), and pairing never depends on delivery order (pipelined
+    speculation interleaves directions, so the transport matches the two
+    halves by wire ``round_id`` before recording). Shared by the
+    simulator's :class:`Link` and the real path's
     :class:`repro.distributed.transport.Transport` so both estimate the
     AWC ``rtt_recent_ms`` feature identically.
     """
 
-    __slots__ = ("_pending", "_rtts")
+    __slots__ = ("_rtts",)
 
     def __init__(self):
-        self._pending: Optional[float] = None
         self._rtts: list[float] = []
-
-    def record(self, delay_ms: float) -> None:
-        """Record one one-way delay; consecutive calls pair into an RTT.
-        Only valid when the caller's deliveries strictly alternate
-        directions (a private transport); concurrent senders on a shared
-        link must use :meth:`record_rtt` with an explicitly paired sum."""
-        if self._pending is None:
-            self._pending = delay_ms
-            return
-        self.record_rtt(self._pending + delay_ms)
-        self._pending = None
 
     def record_rtt(self, rtt_ms: float) -> None:
         """Record one complete out+back round trip."""
@@ -96,9 +86,9 @@ class RttTracker:
             del self._rtts[:128]
 
     def mean_recent_ms(self, default: float) -> float:
-        """Mean of the recent complete pairs; ``default`` before the
-        first complete pair (a lone outstanding delivery contributes
-        nothing — half a pair is not an RTT)."""
+        """Mean of the recently recorded round trips; ``default`` before
+        the first completed exchange (an unanswered outbound delivery
+        contributes nothing — half a pair is not an RTT)."""
         if not self._rtts:
             return default
         tail = self._rtts[-32:]
@@ -138,6 +128,17 @@ class Link:
         self.messages_sent += 1
         self.last_delay_ms = delay
         self.env._schedule(self.env.now + delay, deliver)
+
+    def charge(self, payload_bytes: int = 64) -> float:
+        """Account a delivery whose flight is fully HIDDEN behind other
+        work (cross-round pipelining): the bytes cross the wire and the
+        sampled delay is returned for RTT bookkeeping, but no simulation
+        time elapses at the caller."""
+        delay = self.one_way_ms(payload_bytes)
+        self.bytes_sent += payload_bytes
+        self.messages_sent += 1
+        self.last_delay_ms = delay
+        return delay
 
     def transfer(self, payload_bytes: int = 64):
         """Event-style API: ``yield link.transfer(n)`` inside a process.

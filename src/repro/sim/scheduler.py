@@ -136,12 +136,17 @@ class DSDSimulation:
     def __init__(self, cluster: ClusterSpec, policies: PolicyStack,
                  records: list[TraceRecord],
                  hwmodel: Optional[HardwareModel] = None,
-                 seed: int = 0, fused_chunk: int = DEFAULT_FUSED_CHUNK):
+                 seed: int = 0, fused_chunk: int = DEFAULT_FUSED_CHUNK,
+                 pipeline: bool = False):
         self.cluster = cluster
         self.policies = policies
         self.records = records
         self.hw = hwmodel or HardwareModel()
         self.fused_chunk = fused_chunk
+        # cross-round pipelining: the drafter speculatively drafts window
+        # k+1 (and ships it) while window k is being verified, mirroring
+        # the real path's mode_policy="pipeline" overlap model
+        self.pipeline = bool(pipeline)
         self.env = Environment()
         self.rng = random.Random(seed)
         self.analyzer = Analyzer(cluster.num_targets,
@@ -217,6 +222,11 @@ class DSDSimulation:
         target_ctx = 0            # KV tokens cached on the target
         draft_ctx = rec.prompt_length
         gamma_prev = 4.0
+        # cross-round pipelining: True when the previous window was fully
+        # accepted, so this round's window was already drafted and shipped
+        # during the previous verification (its draft scan + outbound hop
+        # are hidden)
+        pipelined_credit = False
         while generated < rec.output_length:
             feats = self.analyzer.features(pair_key, target_id,
                                            link.recent_rtt_ms, gamma_prev)
@@ -257,27 +267,61 @@ class DSDSimulation:
                 generated += chunk
                 draft_ctx = rec.prompt_length + generated
                 gamma_prev = 1.0
+                pipelined_credit = False   # fused rounds speculate nothing
             else:
                 gamma = dec.gamma
                 per_step = self.hw.decode_ms(draft_hw, draft_model,
                                              [draft_ctx])
-                iter_draft_ms = gamma * per_step
-                yield env.timeout(iter_draft_ms)
-                ev = link.transfer(window_payload_bytes(gamma))
-                iter_link_ms += link.last_delay_ms
-                yield ev
+                draft_scan_ms = gamma * per_step
+                if self.pipeline and pipelined_credit:
+                    # this window was drafted AND shipped while the
+                    # previous window was being verified: neither the
+                    # draft scan nor the outbound hop costs time here —
+                    # the bytes still crossed the wire
+                    d_out = link.charge(window_payload_bytes(gamma))
+                else:
+                    iter_draft_ms = draft_scan_ms
+                    yield env.timeout(draft_scan_ms)
+                    ev = link.transfer(window_payload_bytes(gamma))
+                    d_out = link.last_delay_ms
+                    iter_link_ms += d_out
+                    yield ev
                 prefill_extra = rec.prompt_length if target_ctx == 0 else 0
                 job = Job(request_id=rec.request_id, kind="verify",
                           context_len=target_ctx, new_tokens=prefill_extra + gamma,
                           done=env.event(), sort_len=target_ctx + prefill_extra)
                 self._enqueue(target_id, job)
                 yield job.done
-                ev = link.transfer(verdict_payload_bytes(gamma))
-                iter_link_ms += link.last_delay_ms
-                link.record_rtt(iter_link_ms)   # explicit out+back pair
-                yield ev
-                n_acc, _all = cursor.consume(gamma)
-                produced = min(n_acc + 1, rec.output_length - generated)
+                if self.pipeline:
+                    n_acc, all_acc = cursor.consume(gamma)
+                    # the NEXT window's speculative draft scan overlaps the
+                    # verdict's return flight; on a full accept (hit) the
+                    # round's residual exposure is max(draft, return hop),
+                    # on a partial accept (miss) the optimistic draft is
+                    # wasted work the flight already hid and the fresh
+                    # re-draft is paid by the next (unpipelined) round
+                    d_back = link.charge(verdict_payload_bytes(gamma))
+                    link.record_rtt(d_out + d_back)
+                    produced = min(n_acc + 1, rec.output_length - generated)
+                    continuing = generated + produced < rec.output_length
+                    # the speculative draft only happens when another
+                    # window will follow (the real path's opt_done guard):
+                    # a terminal all-accept pays just the return hop
+                    hit = all_acc and continuing
+                    pay_ms = max(draft_scan_ms, d_back) if hit else d_back
+                    iter_link_ms += d_back
+                    iter_draft_ms += pay_ms - d_back
+                    yield env.timeout(pay_ms)
+                    if continuing:
+                        self.analyzer.record_pipeline(pair_key, all_acc)
+                    pipelined_credit = hit
+                else:
+                    ev = link.transfer(verdict_payload_bytes(gamma))
+                    iter_link_ms += link.last_delay_ms
+                    link.record_rtt(d_out + link.last_delay_ms)
+                    yield ev
+                    n_acc, _all = cursor.consume(gamma)
+                    produced = min(n_acc + 1, rec.output_length - generated)
                 generated += produced
                 target_ctx = rec.prompt_length + generated
                 draft_ctx = rec.prompt_length + generated

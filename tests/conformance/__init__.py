@@ -1,0 +1,11 @@
+"""Sim↔real↔wire conformance harness.
+
+One shared scenario table (:mod:`conformance.scenarios`) drives the same
+decode workloads through DSD-Sim, the zero-delay ``InProcessTransport``
+and the ``EmulatedLinkTransport``, asserting bit-identity of greedy
+tokens real-vs-real (across transports AND mode policies, including the
+cross-round pipelined mode) and qualitative agreement (γ trend, fused
+fraction) sim-vs-real. The fixture definitions here replace the per-test
+model-config/engine setups that used to be duplicated across
+``test_distributed.py`` and ``test_session.py``.
+"""

@@ -1,0 +1,190 @@
+"""Shared scenario table + builders for the conformance harness.
+
+This is the ONE fixture module for the distributed/session test files:
+tiny model-pair configs (dense / ssm / hybrid), engine builders (random
+pair for bit-identity anchors, noised-copy pair for controlled acceptance
+rates), transport builders, window-policy factories and the scenario
+grid the conformance tests sweep. ``test_distributed.py`` and
+``test_session.py`` import their fixtures from here instead of redefining
+them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import SpecDecodeEngine
+from repro.core.session import DecodeSession
+from repro.core.window import (AWCWindowPolicy, DynamicWindowPolicy,
+                               StaticWindowPolicy)
+from repro.distributed import EmulatedLinkTransport, InProcessTransport
+from repro.sim.network import LinkSpec
+
+# ----------------------------------------------------------- model configs
+
+DRAFT = ModelConfig(name="d", arch_type="dense", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                    dtype="float32", remat=False)
+TARGETS = {
+    "dense": dataclasses.replace(DRAFT, name="t", n_layers=3, n_kv_heads=4),
+    "ssm": ModelConfig(name="ts", arch_type="ssm", n_layers=2, d_model=64,
+                       n_heads=0, n_kv_heads=0, d_ff=0, vocab=128,
+                       ssm_state=16, ssm_head_dim=16, ssm_chunk=8,
+                       dtype="float32", remat=False, tie_embeddings=True),
+    "hybrid": ModelConfig(name="th", arch_type="hybrid", n_layers=4,
+                          d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                          head_dim=16, vocab=128, ssm_state=16,
+                          ssm_head_dim=16, ssm_chunk=8, attn_every=2,
+                          dtype="float32", remat=False),
+}
+GAMMA = 3
+
+
+def make_engine(family: str = "dense", temperature: float = 0.0,
+                seed: int = 7, **kw) -> SpecDecodeEngine:
+    """Random independent draft/target pair (low acceptance — the
+    bit-identity anchor: greedy commits are draft-invariant)."""
+    return SpecDecodeEngine(DRAFT, TARGETS[family], temperature=temperature,
+                            key=jax.random.PRNGKey(seed), **kw)
+
+
+def noised_draft_params(target_params, scale: float, seed: int = 42):
+    """Draft = target + N(0, (scale·std)²) per tensor: same architecture,
+    controllably-degraded predictions → tunable acceptance rate."""
+    leaves, treedef = jax.tree.flatten(target_params)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    out = []
+    for leaf, k in zip(leaves, keys):
+        if isinstance(leaf, jax.Array) and leaf.ndim > 0:
+            leaf = leaf + scale * jnp.std(leaf) * jax.random.normal(
+                k, leaf.shape, leaf.dtype)
+        out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+def make_noised_engine(family: str = "dense", noise: float = 0.01,
+                       seed: int = 0, **kw) -> SpecDecodeEngine:
+    """Same-architecture draft/target where the draft is a noised copy of
+    the target (acceptance ≈ 0.8 at noise 0.01) — high enough that
+    pipeline hits and partial-accept rollbacks both occur. The draft
+    family equals the target family, so recurrent-draft rollback paths
+    get exercised for ssm/hybrid."""
+    from repro.models.model import build_model
+    cfg = TARGETS[family]
+    tparams = build_model(cfg).init_params(jax.random.PRNGKey(seed))
+    return SpecDecodeEngine(cfg, cfg, draft_params=noised_draft_params(
+        tparams, noise), target_params=tparams, temperature=0.0,
+        key=jax.random.PRNGKey(seed), **kw)
+
+
+# -------------------------------------------------------------- transports
+
+def make_transport(kind: str, rtt_ms: float = 20.0, seed: int = 0):
+    """'inproc' (zero delay), 'link' (emulated, virtual clock — fast and
+    deterministic) or 'link-sleep' (emulated, real wall-clock sleeps)."""
+    if kind == "inproc":
+        return InProcessTransport()
+    spec = LinkSpec(rtt_ms=rtt_ms, jitter_ms=max(0.5, rtt_ms * 0.08))
+    if kind == "link":
+        return EmulatedLinkTransport(spec, seed=seed, sleep=False)
+    if kind == "link-sleep":
+        return EmulatedLinkTransport(spec, seed=seed, sleep=True)
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------------- policies
+
+def rtt_predictor(feats):
+    """RTT-sensitive stand-in for the WC-DNN: γ large on a fast link,
+    fused (γ ≤ 1) past 10 ms — the closed-loop fixture both the real and
+    sim conformance runs share."""
+    return 1.0 if feats[2] > 10.0 else 6.0
+
+
+def make_policy(name: str):
+    if name == "static":
+        return StaticWindowPolicy(GAMMA)
+    if name == "dynamic":
+        return DynamicWindowPolicy(gamma0=GAMMA, gmax=6)
+    if name == "awc-rtt":
+        return AWCWindowPolicy(rtt_predictor)
+    raise ValueError(name)
+
+
+# ------------------------------------------------------------ scenario grid
+
+@dataclass(frozen=True)
+class Scenario:
+    """One cell of the conformance grid: a model pair decoding a fixed
+    prompt set over (transport RTT × γ policy × mode policy)."""
+    family: str = "dense"
+    rtt_ms: float = 0.0
+    policy: str = "static"
+    mode_policy: str = "auto"
+    gamma_max: int = 6
+    max_new: int = 10
+    batch: int = 2
+    seed: int = 3
+
+    @property
+    def id(self) -> str:
+        return (f"{self.family}-rtt{self.rtt_ms:g}-{self.policy}-"
+                f"{self.mode_policy}")
+
+
+# RTT × γ-policy × mode-policy × model-pair. Half-duplex vs pipelined vs
+# fused cells share (family, policy, rtt) so their committed tokens are
+# directly comparable; the awc-rtt rows close the feature loop over the
+# transport's measured RTT.
+SCENARIOS = [
+    Scenario(family="dense", rtt_ms=0.0, policy="static",
+             mode_policy="auto"),
+    Scenario(family="dense", rtt_ms=0.0, policy="static",
+             mode_policy="pipeline"),
+    Scenario(family="dense", rtt_ms=20.0, policy="static",
+             mode_policy="pipeline"),
+    Scenario(family="dense", rtt_ms=20.0, policy="static",
+             mode_policy="fused"),
+    Scenario(family="dense", rtt_ms=20.0, policy="dynamic",
+             mode_policy="auto"),
+    Scenario(family="dense", rtt_ms=0.0, policy="awc-rtt",
+             mode_policy="auto"),
+    Scenario(family="dense", rtt_ms=20.0, policy="awc-rtt",
+             mode_policy="auto"),
+    Scenario(family="dense", rtt_ms=20.0, policy="awc-rtt",
+             mode_policy="pipeline"),
+    Scenario(family="ssm", rtt_ms=20.0, policy="static",
+             mode_policy="pipeline"),
+    Scenario(family="hybrid", rtt_ms=20.0, policy="static",
+             mode_policy="pipeline"),
+]
+
+
+def scenario_prompts(scn: Scenario) -> np.ndarray:
+    rng = np.random.default_rng(scn.seed)
+    return rng.integers(0, 128, (scn.batch, 9)).astype(np.int32)
+
+
+def run_real(engine: SpecDecodeEngine, scn: Scenario, transport_kind: str):
+    """Drive one scenario through a DecodeSession over the given
+    transport; returns (tokens, stats, session)."""
+    tr = (None if transport_kind == "none"
+          else make_transport(transport_kind, scn.rtt_ms, seed=scn.seed))
+    mode = "auto" if tr is None and scn.mode_policy == "pipeline" \
+        else scn.mode_policy
+    sess = DecodeSession(engine, capacity=scn.batch, max_new_cap=scn.max_new,
+                         gamma_max=scn.gamma_max, sync_every=2, transport=tr,
+                         mode_policy=mode, key=jax.random.PRNGKey(scn.seed))
+    sess.admit_batch(scenario_prompts(scn), scn.max_new)
+    policy = make_policy(scn.policy)
+    max_iters = 2 * scn.max_new + 4          # fused tail: 1 token/iter
+    while sess.unfinished and sess.iterations < max_iters:
+        sess.run_chunk(policy)
+    tokens, stats = sess.snapshot()
+    return tokens, stats, sess

@@ -21,16 +21,17 @@ def _feats(alpha=0.7, rtt=10.0, q=0.2, tpot=40.0, gp=4.0):
 
 def test_wcdnn_forward_shapes():
     p = wcdnn.init(jax.random.PRNGKey(0))
-    x = jnp.ones((7, 5))
+    x = jnp.ones((7, wcdnn.FEATURE_DIM))
     out = wcdnn.forward(p, x)
     assert out.shape == (7,)
-    assert wcdnn.forward(p, jnp.ones(5)).shape == ()
+    assert wcdnn.forward(p, jnp.ones(wcdnn.FEATURE_DIM)).shape == ()
 
 
 def test_wcdnn_numpy_predictor_matches_jax():
     p = wcdnn.init(jax.random.PRNGKey(1))
     pred = wcdnn.numpy_predictor(p)
-    x = np.random.default_rng(0).normal(size=(10, 5)).astype(np.float32)
+    x = np.random.default_rng(0).normal(
+        size=(10, wcdnn.FEATURE_DIM)).astype(np.float32)
     jx = np.asarray(wcdnn.forward(p, jnp.asarray(x)))
     nx = np.array([pred(list(row)) for row in x])
     np.testing.assert_allclose(jx, nx, atol=1e-5)
@@ -39,7 +40,7 @@ def test_wcdnn_numpy_predictor_matches_jax():
 def test_wcdnn_learns_synthetic_mapping():
     """Supervised regression (L1+AdamW) fits a nonlinear γ(features) map."""
     rng = np.random.default_rng(0)
-    X = rng.normal(size=(2000, 5)).astype(np.float32)
+    X = rng.normal(size=(2000, wcdnn.FEATURE_DIM)).astype(np.float32)
     y = (4 + 3 * np.tanh(X[:, 1]) - 2 * np.tanh(X[:, 2]) +
          np.clip(X[:, 0], -1, 1)).astype(np.float32)
     params, info = train(X, y, TrainConfig(epochs=40, lr=3e-3, seed=0))
@@ -51,7 +52,7 @@ def test_wcdnn_save_load_roundtrip(tmp_path):
     path = str(tmp_path / "wc.npz")
     wcdnn.save(p, path)
     q = wcdnn.load(path)
-    x = jnp.ones((3, 5))
+    x = jnp.ones((3, wcdnn.FEATURE_DIM))
     np.testing.assert_allclose(np.asarray(wcdnn.forward(p, x)),
                                np.asarray(wcdnn.forward(q, x)))
 
@@ -130,3 +131,23 @@ def test_bootstrap_gamma_sane():
     lo = wcdnn.bootstrap_gamma([0.1, 0.2, 5.0, 40.0, 4.0])
     assert hi >= 6
     assert lo <= 3
+
+
+def test_bootstrap_gamma_overlapped_rtt_term():
+    """The 6th feature (pipeline hit rate) discounts the RTT stall: a
+    fully-hit pipeline on a slow link behaves like a fast link (no flight
+    to fused mode), while 5-feature callers keep the legacy behavior."""
+    slow = [0.1, 0.6, 120.0, 10.0, 4.0]
+    assert wcdnn.bootstrap_gamma(slow) == 1.0            # fused sentinel
+    assert wcdnn.bootstrap_gamma(slow + [0.0]) == 1.0    # pipe never hits
+    piped = wcdnn.bootstrap_gamma(slow + [1.0])
+    fast = wcdnn.bootstrap_gamma([0.1, 0.6, 0.0, 10.0, 4.0])
+    assert piped > 1.0                                   # stays distributed
+    assert piped == fast                                 # RTT fully hidden
+    # higher hit rates leave less stall to amortize, so the pure
+    # distributed-mode γ* shrinks monotonically toward the zero-RTT optimum
+    gammas = [wcdnn.bootstrap_gamma(slow + [h], mode_aware=False)
+              for h in (0.0, 0.5, 1.0)]
+    assert gammas == sorted(gammas, reverse=True)
+    assert gammas[-1] == wcdnn.bootstrap_gamma(
+        [0.1, 0.6, 0.0, 10.0, 4.0], mode_aware=False)

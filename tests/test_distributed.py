@@ -11,14 +11,12 @@ link); and fused-mode rounds commit exactly the target's greedy
 continuation while paying no per-window round trips.
 """
 
-import dataclasses
 import time
 
 import jax
 import numpy as np
 import pytest
 
-from repro.configs.base import ModelConfig
 from repro.core.engine import SpecDecodeEngine
 from repro.core.session import DecodeSession
 from repro.core.window import AWCWindowPolicy, StaticWindowPolicy
@@ -27,27 +25,11 @@ from repro.distributed import (EmulatedLinkTransport, InProcessTransport,
 from repro.sim.network import (LinkSpec, verdict_payload_bytes,
                                window_payload_bytes)
 
-DRAFT = ModelConfig(name="d", arch_type="dense", n_layers=2, d_model=64,
-                    n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
-                    dtype="float32", remat=False)
-TARGETS = {
-    "dense": dataclasses.replace(DRAFT, name="t", n_layers=3, n_kv_heads=4),
-    "ssm": ModelConfig(name="ts", arch_type="ssm", n_layers=2, d_model=64,
-                       n_heads=0, n_kv_heads=0, d_ff=0, vocab=128,
-                       ssm_state=16, ssm_head_dim=16, ssm_chunk=8,
-                       dtype="float32", remat=False, tie_embeddings=True),
-    "hybrid": ModelConfig(name="th", arch_type="hybrid", n_layers=4,
-                          d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
-                          head_dim=16, vocab=128, ssm_state=16,
-                          ssm_head_dim=16, ssm_chunk=8, attn_every=2,
-                          dtype="float32", remat=False),
-}
-GAMMA = 3
+# model pairs / γ / engine builder come from the shared conformance
+# fixture module (one definition for every distributed/session test)
+from conformance.scenarios import DRAFT, GAMMA, TARGETS, make_engine
 
-
-def _engine(family):
-    return SpecDecodeEngine(DRAFT, TARGETS[family], temperature=0.0,
-                            key=jax.random.PRNGKey(7))
+_engine = make_engine
 
 
 def _prompts(rng, n, lo=6, hi=12):
@@ -203,27 +185,89 @@ def test_mixed_mode_switching_stays_greedy():
 
 # ------------------------------------------------------------- emulated link
 
-def test_emulated_link_imposes_measured_delay():
-    """Wall-clock delivery delay tracks the LinkSpec; paired exchanges
-    land in recent_rtt_ms."""
-    spec = LinkSpec(rtt_ms=20.0, jitter_ms=1.0)
-    tr = EmulatedLinkTransport(spec, seed=0)
-    w = WindowMsg(tokens=np.zeros((1, 4), np.int32), gamma=4, n_active=1)
+def _msgs(rid=0, gamma=4, speculative=False):
+    w = WindowMsg(tokens=np.zeros((1, gamma), np.int32), gamma=gamma,
+                  n_active=1, round_id=rid, speculative=speculative)
     v = VerdictMsg(n_accepted=np.zeros(1, np.int32),
                    num_new=np.ones(1, np.int32),
                    next_token=np.zeros(1, np.int32),
                    last_token=np.zeros(1, np.int32),
-                   done=np.zeros(1, bool), gamma=4, n_active=1)
-    t0 = time.perf_counter()
-    for _ in range(4):
+                   done=np.zeros(1, bool), gamma=gamma, n_active=1,
+                   round_id=rid)
+    return w, v
+
+
+def test_emulated_link_records_sampled_delays():
+    """The transport's RECORDED delay samples (not wall-clock sleeps — the
+    deflaked contract) follow the LinkSpec model: per-direction logs, RTT
+    pairs reconstructed from the sampled out+back sums, byte accounting
+    per the paper's payload model. Seeded jitter makes this exact."""
+    spec = LinkSpec(rtt_ms=20.0, jitter_ms=1.0)
+    tr = EmulatedLinkTransport(spec, seed=0, sleep=False)
+    for i in range(4):
+        w, v = _msgs(rid=i)
         tr.send_window(w)
         tr.send_verdict(v)
-    wall_ms = (time.perf_counter() - t0) * 1e3
-    assert wall_ms >= 4 * 0.8 * spec.rtt_ms          # delays really block
-    assert 0.5 * spec.rtt_ms < tr.recent_rtt_ms < 3.0 * spec.rtt_ms
+    assert len(tr.delay_log["window"]) == 4
+    assert len(tr.delay_log["verdict"]) == 4
+    # sampled one-way delays respect the truncated-jitter bounds
+    for d in tr.delay_log["window"] + tr.delay_log["verdict"]:
+        assert 0.0 < d <= 0.5 * spec.rtt_ms + 4.0 * spec.jitter_ms + 1.0
+    pairs = [o + b for o, b in zip(tr.delay_log["window"],
+                                   tr.delay_log["verdict"])]
+    assert tr.recent_rtt_ms == pytest.approx(sum(pairs) / len(pairs))
     assert tr.bytes_sent == 4 * (window_payload_bytes(4)
                                  + verdict_payload_bytes(4))
     assert tr.messages_sent == 8
+
+
+def test_emulated_link_sleep_blocks_at_least_the_samples():
+    """The sleeping transport really blocks: elapsed wall time is bounded
+    below by the recorded samples (sleeps can only overshoot, so this
+    direction is robust under scheduler noise)."""
+    tr = EmulatedLinkTransport(LinkSpec(rtt_ms=20.0, jitter_ms=1.0), seed=0)
+    w, v = _msgs(rid=0)
+    t0 = time.perf_counter()
+    tr.send_window(w)
+    tr.send_verdict(v)
+    wall_ms = (time.perf_counter() - t0) * 1e3
+    sampled = tr.delay_log["window"][0] + tr.delay_log["verdict"][0]
+    assert wall_ms >= 0.9 * sampled
+
+
+def test_rtt_pairing_by_round_id_out_of_order():
+    """Pipelined completion scrambles delivery order: a speculative window
+    for round k+1 is posted before round k's verdict. RTT pairs must match
+    by round id, and a discarded (invalidated) window must never pair."""
+    spec = LinkSpec(rtt_ms=10.0, jitter_ms=0.5)
+    tr = EmulatedLinkTransport(spec, seed=3, sleep=False)
+    w1, v1 = _msgs(rid=1)
+    w2, v2 = _msgs(rid=2, speculative=True)
+    tr.post_window(w1)
+    tr.post_window(w2)                 # in flight before verdict 1
+    tr.recv_window()
+    tr.post_verdict(v1)
+    tr.recv_verdict()
+    tr.post_verdict(v2)
+    tr.recv_window()
+    tr.recv_verdict()
+    d = tr.delay_log
+    expect = [(d["window"][0] + d["verdict"][0]),
+              (d["window"][1] + d["verdict"][1])]
+    assert tr.recent_rtt_ms == pytest.approx(sum(expect) / 2)
+    # a discarded speculative window clears its half-pair: the next
+    # verdict carrying a NEW round id cannot mismatch it
+    w3, _ = _msgs(rid=3, speculative=True)
+    tr.post_window(w3)
+    dropped = tr.discard_window()
+    assert dropped.round_id == 3 and tr.discarded_messages == 1
+    w4, v4 = _msgs(rid=4)
+    tr.post_window(w4)
+    tr.recv_window()
+    tr.post_verdict(v4)
+    tr.recv_verdict()
+    assert tr.recent_rtt_ms == pytest.approx(
+        (expect[0] + expect[1] + d["window"][3] + d["verdict"][2]) / 3)
 
 
 def test_emulated_link_rtt_feeds_policy_and_flips_fused():

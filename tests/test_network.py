@@ -2,10 +2,12 @@
 
 Pinned behaviors: symmetric jitter truncation keeps the sampled mean
 one-way delay at the analytic ``expected_one_way_ms`` (the old one-sided
-cut biased it upward); ``recent_rtt_ms`` pairs consecutive outbound/return
-deliveries into full round trips instead of doubling a mixed mean (which
-double-counted serialization and mixed window/verdict payload sizes); and
-the verdict payload grows with γ as its contract (per-position logprobs)
+cut biased it upward); ``recent_rtt_ms`` is built from EXPLICITLY paired
+outbound/return delays (``record_rtt`` with the caller's exchange sum)
+instead of doubling a mixed mean (which double-counted serialization and
+mixed window/verdict payload sizes) — delivery-order pairing is gone
+entirely, since pipelined speculation interleaves directions; and the
+verdict payload grows with γ as its contract (per-position logprobs)
 promises.
 """
 

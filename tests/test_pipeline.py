@@ -1,0 +1,224 @@
+"""Cross-round pipelined speculation tests: rollback exactness, hit
+promotion, compile-once invariance, and chunk-boundary hygiene.
+
+The contract under test: after ANY verdict — partial accept, zero accept,
+or a kept optimistic window — the pipelined ``DraftWorker`` state
+(recurrent/SSM caches, attention KV, anchor token, position) is BITWISE
+the state a freshly re-advanced half-duplex worker holds, so committed
+greedy tokens are identical and no speculation artifact can leak forward.
+Rollback reuses the same jitted ingest/re-advance programs the
+half-duplex path compiles, so hits, rollbacks and fused/distributed mode
+switches never add an XLA program after warmup.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.session import DecodeSession
+from repro.core.window import StaticWindowPolicy, WindowDecision
+from repro.distributed import EmulatedLinkTransport, InProcessTransport
+from repro.sim.network import LinkSpec
+
+from conformance.scenarios import GAMMA, make_engine, make_noised_engine
+
+FAMILIES = ["dense",
+            pytest.param("ssm", marks=pytest.mark.slow),
+            pytest.param("hybrid", marks=pytest.mark.slow)]
+
+
+def _session(eng, mode, max_new=12, sync_every=3, capacity=2, gamma_max=4,
+             seed=1):
+    return DecodeSession(eng, capacity=capacity, max_new_cap=max_new,
+                         gamma_max=gamma_max, sync_every=sync_every,
+                         transport=InProcessTransport(), mode_policy=mode,
+                         key=jax.random.PRNGKey(seed))
+
+
+def _trees_equal(a, b):
+    la = [x for x in jax.tree.leaves(a) if hasattr(x, "shape")]
+    lb = [x for x in jax.tree.leaves(b) if hasattr(x, "shape")]
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+def _run_lockstep(eng, prompts, chunks=3, policy=None, **kw):
+    """Run a half-duplex and a pipelined session in lockstep and return
+    both (same engine, same prompts, same chunk count)."""
+    policy = policy or StaticWindowPolicy(GAMMA)
+    out = {}
+    for mode in ("distributed", "pipeline"):
+        sess = _session(eng, mode, **kw)
+        sess.admit_batch(prompts, sess.max_new_cap)
+        for _ in range(chunks):
+            sess.run_chunk(policy)
+        out[mode] = sess
+    return out["distributed"], out["pipeline"]
+
+
+# -------------------------------------------------------- rollback exactness
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_zero_accept_rollback_state_bitwise(family):
+    """Independent random draft/target (α ≈ 0): every optimistic window
+    is rolled back, and after each chunk the pipelined draft's
+    recurrent/SSM/KV state equals a freshly re-advanced half-duplex
+    worker bit for bit."""
+    eng = make_engine(family, gamma_max=4)
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(0, 128, (2, 9)).astype(np.int32)
+    hd, pl = _run_lockstep(eng, prompts)
+    assert pl.pipeline_misses > 0 and pl.pipeline_hits == 0
+    ta, _ = hd.snapshot()
+    tb, _ = pl.snapshot()
+    np.testing.assert_array_equal(ta, tb)
+    assert _trees_equal(hd._state.draft_cache, pl._state.draft_cache)
+    np.testing.assert_array_equal(np.asarray(hd._state.last_token),
+                                  np.asarray(pl._state.last_token))
+    np.testing.assert_array_equal(np.asarray(hd._state.pos),
+                                  np.asarray(pl._state.pos))
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_partial_accept_rollback_and_hits_state_bitwise(family):
+    """Noised-copy draft (α ≈ 0.8): the pipelined run takes both the hit
+    (kept window) and miss (partial-accept rollback) branches; state and
+    tokens still track the half-duplex worker exactly."""
+    eng = make_noised_engine(family, gamma_max=4)
+    rng = np.random.default_rng(5)
+    prompts = rng.integers(0, 128, (2, 12)).astype(np.int32)
+    hd, pl = _run_lockstep(eng, prompts, chunks=4, max_new=16, sync_every=4)
+    assert pl.pipeline_hits > 0, "noised pair should keep some windows"
+    assert pl.pipeline_misses > 0, "and roll back some"
+    ta, sa = hd.snapshot()
+    tb, sb = pl.snapshot()
+    np.testing.assert_array_equal(ta, tb)
+    # acceptance bookkeeping is identical round by round, not just tokens
+    assert sa.accepted == sb.accepted and sa.proposed == sb.proposed
+    assert _trees_equal(hd._state.draft_cache, pl._state.draft_cache)
+    assert _trees_equal(hd._state.target_cache, pl._state.target_cache)
+
+
+def test_budget_clamp_predicted_as_hit():
+    """A request ending exactly on an all-accepted window is PREDICTED by
+    the optimistic slot_stop_mask mirror (budget clamp + done flip), so
+    the final window still counts as a hit, not a spurious rollback."""
+    eng = make_noised_engine("dense", gamma_max=4)
+    rng = np.random.default_rng(11)
+    prompts = rng.integers(0, 128, (2, 12)).astype(np.int32)
+    pol = StaticWindowPolicy(GAMMA)
+    sess = _session(eng, "pipeline", max_new=9, sync_every=8)
+    sess.admit_batch(prompts, 9)
+    while sess.unfinished and sess.iterations < 32:
+        sess.run_chunk(pol)
+    ref, _ = eng.generate(prompts, 9, StaticWindowPolicy(GAMMA), gamma_max=4,
+                          key=jax.random.PRNGKey(1))
+    toks, _ = sess.snapshot()
+    np.testing.assert_array_equal(ref, toks)
+
+
+# ---------------------------------------------------------- compile hygiene
+
+def test_zero_recompiles_across_hits_rollbacks_and_mode_switches():
+    """After one warmup chunk, pipeline hits, rollbacks and fused ↔
+    distributed mode switches add no XLA programs."""
+
+    class Alternator:
+        def __init__(self):
+            self.i = 0
+
+        def decide(self, pair_key, feats):
+            self.i += 1
+            if (self.i // 4) % 2 == 1:
+                return WindowDecision(1, "fused")
+            return WindowDecision(GAMMA, "distributed")
+
+        def gamma_bound(self):
+            return GAMMA + 1
+
+        def name(self):
+            return "alternator"
+
+    eng = make_noised_engine("dense", gamma_max=4)
+    rng = np.random.default_rng(7)
+    prompts = rng.integers(0, 128, (2, 10)).astype(np.int32)
+    pol = Alternator()
+    sess = _session(eng, "pipeline", max_new=24, sync_every=4)
+    sess.admit_batch(prompts, 24)
+    sess.run_chunk(pol)                  # warmup: all programs compiled
+    warm = eng.compiled_programs()
+    while sess.unfinished and sess.iterations < 64:
+        sess.run_chunk(pol)
+    assert sess.pipeline_hits + sess.pipeline_misses > 0
+    assert sess.fused_iterations > 0     # mode switches really happened
+    assert eng.compiled_programs() == warm
+    ref, _ = eng.generate(prompts, 24, StaticWindowPolicy(GAMMA), gamma_max=4,
+                          key=jax.random.PRNGKey(1))
+    toks, _ = sess.snapshot()
+    np.testing.assert_array_equal(ref, toks)
+
+
+# -------------------------------------------------------- transport hygiene
+
+def test_no_inflight_messages_across_chunk_boundaries():
+    """In-flight speculation never crosses a run_chunk boundary: after any
+    chunk the transport queues are drained (admissions/retirements at the
+    sync boundary can therefore never race a stale window), and invalidated
+    windows are accounted as discarded."""
+    eng = make_noised_engine("dense", gamma_max=4)
+    rng = np.random.default_rng(9)
+    prompts = rng.integers(0, 128, (2, 10)).astype(np.int32)
+    tr = EmulatedLinkTransport(LinkSpec(rtt_ms=15.0, jitter_ms=1.0),
+                               seed=2, sleep=False)
+    sess = DecodeSession(eng, capacity=2, max_new_cap=16, gamma_max=4,
+                         sync_every=3, transport=tr, mode_policy="pipeline",
+                         key=jax.random.PRNGKey(1))
+    sess.admit_batch(prompts, 16)
+    pol = StaticWindowPolicy(GAMMA)
+    while sess.unfinished and sess.iterations < 48:
+        sess.run_chunk(pol)
+        assert tr.in_flight == 0
+    # every discard is a miss whose speculative window was already posted
+    # (misses on a chunk's last round had nothing in flight to discard)
+    assert 0 < tr.discarded_messages <= sess.pipeline_misses
+
+
+def test_staggered_admission_under_pipeline_bit_identical():
+    """In-flight admission/retirement + pipelining: the optimistic
+    lifecycle mirror re-reads the device cursors/flags at each chunk
+    start, so requests admitted into freed slots mid-stream still commit
+    exactly their solo tokens."""
+    eng = make_noised_engine("dense", gamma_max=4)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, 128, int(rng.integers(6, 12)))
+               .astype(np.int32) for _ in range(3)]
+    pol = StaticWindowPolicy(GAMMA)
+    sess = DecodeSession(eng, capacity=2, max_new_cap=8, max_prompt_len=16,
+                         gamma_max=4, sync_every=2,
+                         transport=InProcessTransport(),
+                         mode_policy="pipeline")
+    outs = {}
+    sess.admit(prompts[0], 8, request_id=0)
+    sess.run_chunk(pol)
+    sess.admit(prompts[1], 6, request_id=1)
+    for _ in range(64):
+        if not sess.unfinished:
+            break
+        sess.run_chunk(pol)
+        for j in sess.finished_slots():
+            toks, rec = sess.retire(j)
+            outs[rec.request_id] = toks
+            if rec.request_id == 0 and 2 not in outs:
+                sess.admit(prompts[2], 8, request_id=2)
+                outs[2] = None
+    assert not sess.unfinished
+    for j in sess.finished_slots():
+        toks, rec = sess.retire(j)
+        outs[rec.request_id] = toks
+    assert sess.pipeline_hits > 0
+    budgets = {0: 8, 1: 6, 2: 8}
+    for rid, p in enumerate(prompts):
+        solo, _ = eng.generate(p[None, :], budgets[rid],
+                               StaticWindowPolicy(GAMMA), gamma_max=4)
+        np.testing.assert_array_equal(outs[rid], solo[0, :budgets[rid]])

@@ -118,3 +118,55 @@ def test_miniyaml_roundtrip_flat_dicts(d):
         return
     for k, v in d.items():
         assert parsed[k] == v
+
+
+# ----------------------------------------------------------- wire round trip
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 12),
+       st.integers(0, 2 ** 31 - 1), st.integers(0, 2 ** 40),
+       st.integers(0, 64), st.booleans())
+def test_wire_window_roundtrip(B, G, seed, round_id, n_active, speculative):
+    """Arbitrary WindowMsg payloads survive encode→decode bit for bit
+    (q_probs excluded — the documented device pass-through)."""
+    from repro.distributed import WindowMsg, decode_window, encode_window
+    rng = np.random.default_rng(seed)
+    msg = WindowMsg(tokens=rng.integers(0, 2 ** 31 - 1, (B, G),
+                                        dtype=np.int32),
+                    gamma=min(G, 4), n_active=n_active, round_id=round_id,
+                    speculative=speculative)
+    out = decode_window(encode_window(msg))
+    np.testing.assert_array_equal(out.tokens, msg.tokens)
+    assert (out.gamma, out.n_active, out.round_id, out.speculative) == \
+        (msg.gamma, msg.n_active, msg.round_id, msg.speculative)
+    assert out.payload_bytes == msg.payload_bytes
+    assert out.q_probs is None
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 2 ** 31 - 1),
+       st.integers(0, 2 ** 40), st.integers(1, 12), st.integers(0, 64))
+def test_wire_verdict_roundtrip(B, seed, round_id, gamma, n_active):
+    from repro.distributed import VerdictMsg, decode_verdict, encode_verdict
+    rng = np.random.default_rng(seed)
+    i32 = lambda: rng.integers(0, 2 ** 31 - 1, (B,), dtype=np.int32)
+    msg = VerdictMsg(n_accepted=i32(), num_new=i32(), next_token=i32(),
+                     last_token=i32(), done=rng.integers(0, 2, (B,)) > 0,
+                     gamma=gamma, n_active=n_active, round_id=round_id)
+    out = decode_verdict(encode_verdict(msg))
+    for f in ("n_accepted", "num_new", "next_token", "last_token", "done"):
+        np.testing.assert_array_equal(getattr(out, f), getattr(msg, f))
+    assert (out.gamma, out.n_active, out.round_id) == \
+        (msg.gamma, msg.n_active, msg.round_id)
+    assert out.payload_bytes == msg.payload_bytes
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 64), st.integers(1, 64))
+def test_payload_bytes_monotone_in_gamma(g, dg):
+    """The modeled wire costs grow strictly with γ (ids + per-token probs
+    out, per-position logprobs back) — the LinkSpec serialization term
+    must never shrink when the window widens."""
+    from repro.sim.network import verdict_payload_bytes, window_payload_bytes
+    assert window_payload_bytes(g + dg) > window_payload_bytes(g) > 0
+    assert verdict_payload_bytes(g + dg) > verdict_payload_bytes(g) > 0

@@ -8,14 +8,10 @@ any admission/retirement pattern reuses the same two XLA programs (one
 masked step + one prefill-insert) — continuous batching never recompiles.
 """
 
-import dataclasses
-
 import jax
 import numpy as np
 import pytest
 
-from repro.configs.base import ModelConfig
-from repro.core.engine import SpecDecodeEngine
 from repro.core.session import DecodeSession
 from repro.core.window import StaticWindowPolicy
 from repro.models import build_model
@@ -23,27 +19,11 @@ from repro.models.kvcache import init_attn_cache, insert_slot, reset_slot
 from repro.serving import (ServeRequest, ServerConfig, SpecDecodeServer,
                            WaveSpecDecodeServer)
 
-DRAFT = ModelConfig(name="d", arch_type="dense", n_layers=2, d_model=64,
-                    n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
-                    dtype="float32", remat=False)
-TARGETS = {
-    "dense": dataclasses.replace(DRAFT, name="t", n_layers=3, n_kv_heads=4),
-    "ssm": ModelConfig(name="ts", arch_type="ssm", n_layers=2, d_model=64,
-                       n_heads=0, n_kv_heads=0, d_ff=0, vocab=128,
-                       ssm_state=16, ssm_head_dim=16, ssm_chunk=8,
-                       dtype="float32", remat=False, tie_embeddings=True),
-    "hybrid": ModelConfig(name="th", arch_type="hybrid", n_layers=4,
-                          d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
-                          head_dim=16, vocab=128, ssm_state=16,
-                          ssm_head_dim=16, ssm_chunk=8, attn_every=2,
-                          dtype="float32", remat=False),
-}
-GAMMA = 3
+# model pairs / γ / engine builder come from the shared conformance
+# fixture module (one definition for every distributed/session test)
+from conformance.scenarios import DRAFT, GAMMA, TARGETS, make_engine
 
-
-def _engine(family):
-    return SpecDecodeEngine(DRAFT, TARGETS[family], temperature=0.0,
-                            key=jax.random.PRNGKey(7))
+_engine = make_engine
 
 
 def _drain(session, policy, outs, max_chunks=64):
