@@ -1,63 +1,108 @@
-"""End-to-end serving driver (deliverable b): serve a stream of requests
-through the continuous slot-based SpecDecodeServer on real JAX models,
-comparing the paper's window policies, and validate the fused-verification
-Pallas kernel against the engine's jnp path on the same inputs.
+"""End-to-end serving driver (deliverable b), topology-first: ONE
+declarative ClusterSpec — 2 edge drafts behind heterogeneous links (fast
+LAN, slow WAN) sharing 1 cloud target — builds BOTH the real multi-pair
+deployment (`build_deployment` → SpecDecodeServer with per-pair
+transports and per-pair AWC stabilizers) and the matching DSD-Sim run
+(`build_simulation`), then validates the fused-verification Pallas kernel
+against the engine's jnp path on the same inputs.
 
-    PYTHONPATH=src python examples/edge_cloud_serving.py [--requests 12]
+    PYTHONPATH=src python examples/edge_cloud_serving.py [--requests 8]
+    PYTHONPATH=src python examples/edge_cloud_serving.py \
+        --topology examples/cluster_2pair.json
 """
 
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.engine import SpecDecodeEngine
-from repro.core.window import AWCWindowPolicy, StaticWindowPolicy
-from repro.core.awc.model import default_predictor
 from repro.kernels.verify import verify_reference, verify_window_fused
-from repro.serving import ServeRequest, ServerConfig, SpecDecodeServer
+from repro.serving import ServeRequest
+from repro.sim.network import LinkSpec
+from repro.topology import (ClusterSpec, NodeSpec, PairSpec, ServingSpec,
+                            WindowSpec, WorkloadSpec, build_deployment,
+                            build_simulation)
+
+
+def default_spec() -> ClusterSpec:
+    """2 edge drafts → 1 cloud target over heterogeneous links, AWC window
+    control per pair (the worked example of README §Deployment topology)."""
+    return ClusterSpec(
+        nodes=[
+            NodeSpec("edge-lan", "draft", "qwen2.5-3b", device="edge-nic"),
+            NodeSpec("edge-wan", "draft", "qwen2.5-3b", device="edge-lte"),
+            NodeSpec("cloud", "target", "deepseek-7b", device="cloud-pool"),
+        ],
+        pairs=[
+            PairSpec("lan", "edge-lan", "cloud",
+                     link=LinkSpec(rtt_ms=2.0, jitter_ms=0.3,
+                                   name="campus-lan"),
+                     window=WindowSpec("awc")),
+            PairSpec("wan", "edge-wan", "cloud",
+                     link=LinkSpec(rtt_ms=40.0, jitter_ms=3.0,
+                                   bandwidth_gbps=0.1, name="metro-wan"),
+                     window=WindowSpec("awc")),
+        ],
+        serving=ServingSpec(max_batch=2, gamma_max=8, sync_every=4),
+        workload=WorkloadSpec(num_requests=8, max_new=16))
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--topology", default=None,
+                    help="ClusterSpec JSON (default: the built-in 2-pair "
+                         "edge-cloud example)")
+    ap.add_argument("--requests", type=int, default=None)
     args = ap.parse_args()
 
-    target_cfg = get_config("deepseek-7b").reduced()
-    draft_cfg = dataclasses.replace(get_config("qwen2.5-3b").reduced(),
-                                    vocab=target_cfg.vocab)
-    # gamma_max bounds every policy's window; the engine compiles one
-    # masked-window step per wave shape and reuses it across policies
-    engine = SpecDecodeEngine(draft_cfg, target_cfg, temperature=1.0,
-                              rtt_ms=10.0, gamma_max=12, sync_every=8,
-                              key=jax.random.PRNGKey(0))
+    spec = (ClusterSpec.load(args.topology) if args.topology
+            else default_spec())
+    if args.requests is not None:
+        spec.workload.num_requests = args.requests
+    spec.validate()
 
-    rng = np.random.default_rng(1)
-    for policy_name, policy in [("static-4", StaticWindowPolicy(4)),
-                                ("awc", AWCWindowPolicy(default_predictor()))]:
-        server = SpecDecodeServer(engine, policy,
-                                  ServerConfig(max_batch=4, length_aware=True))
-        for i in range(args.requests):
-            plen = int(rng.integers(8, 40))
-            server.submit(ServeRequest(
-                i, rng.integers(0, target_cfg.vocab, plen).astype(np.int32),
-                args.max_new))
-        results = server.run()
-        acc = np.mean([r.acceptance_rate for r in results])
-        ttft = np.mean([r.ttft_ms for r in results])
-        tpot = np.mean([r.tpot_ms for r in results])
-        print(f"policy={policy_name:9s} served={len(results):3d} "
-              f"acceptance={acc:.3f} ttft={ttft:.1f}ms tpot={tpot:.1f}ms")
+    # -- real path: one spec -> engines, transports, policies, server -----
+    deployment = build_deployment(spec)
+    server = deployment.build_server()
+    wl = spec.workload
+    rng = np.random.default_rng(spec.seed)
+    for i in range(wl.num_requests):
+        plen = int(rng.integers(wl.prompt_lo, wl.prompt_hi))
+        server.submit(ServeRequest(
+            i, rng.integers(0, deployment.vocab, plen).astype(np.int32),
+            wl.max_new))
+    results = server.run()
+    ttft = np.mean([r.ttft_ms for r in results])
+    tpot = np.mean([r.tpot_ms for r in results])
+    print(f"served={len(results)} pairs={len(deployment.pairs)} "
+          f"ttft={ttft:.1f}ms tpot={tpot:.1f}ms")
+    for pid, d in server.pair_summaries().items():
+        print(f"  pair={pid:4s} requests={d['requests']} "
+              f"mean_gamma={d['mean_gamma']:.2f} "
+              f"fused_fraction={d['fused_fraction']:.2f} "
+              f"measured_rtt={d.get('recent_rtt_ms', 0.0):.1f}ms")
+
+    # -- sim path: the IDENTICAL spec drives DSD-Sim ----------------------
+    analyzer = build_simulation(spec).run()
+    per_pair: dict[int, list[int]] = {}
+    for m in analyzer.requests.values():
+        per_pair.setdefault(m.drafter_id, []).extend(m.gamma_sequence)
+    for i, p in enumerate(spec.pairs):
+        g = per_pair.get(i, [])
+        mean_g = float(np.mean(g)) if g else 0.0
+        print(f"  sim pair={p.id:4s} mean_gamma={mean_g:.2f}")
 
     # fused Pallas verification kernel == engine verification semantics
-    B, G, V = 4, 4, target_cfg.vocab
-    p = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(2), (B, G + 1, V)), -1)
-    q = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(3), (B, G, V)), -1)
-    toks = jax.random.categorical(jax.random.PRNGKey(4), jnp.log(q), -1).astype(jnp.int32)
+    V = get_config("deepseek-7b").reduced().vocab
+    B, G = 4, 4
+    p = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(2),
+                                         (B, G + 1, V)), -1)
+    q = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(3),
+                                         (B, G, V)), -1)
+    toks = jax.random.categorical(jax.random.PRNGKey(4), jnp.log(q),
+                                  -1).astype(jnp.int32)
     u = jax.random.uniform(jax.random.PRNGKey(5), (B, G))
     r = jax.random.uniform(jax.random.PRNGKey(6), (B,))
     ref = verify_reference(toks, q, p, u, r)

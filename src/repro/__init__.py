@@ -3,6 +3,9 @@
 Reproduction + beyond-paper TPU framework. Public API surface:
 
 - ``repro.core``     — speculative decoding algorithm, AWC window control
+- ``repro.topology`` — declarative ClusterSpec: one spec builds the real
+  deployment (multi-pair serving) AND the matching DSD-Sim run
+- ``repro.serving``  — continuous multi-pair server with pair routing
 - ``repro.sim``      — DSD-Sim discrete-event simulator
 - ``repro.models``   — model zoo (dense / MoE / SSM / hybrid / enc-dec / VLM)
 - ``repro.configs``  — assigned architecture configs

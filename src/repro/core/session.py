@@ -107,7 +107,7 @@ class DecodeSession:
                  sync_every: Optional[int] = None,
                  eos_id: int = -1, key: Optional[jax.Array] = None,
                  log_gamma: bool = True, transport=None,
-                 mode_policy: str = "auto"):
+                 mode_policy: str = "auto", pair_key: str = "engine"):
         self.engine = engine
         self.capacity = int(capacity)
         self.max_new_cap = int(max_new_cap)
@@ -133,6 +133,11 @@ class DecodeSession:
                 "guess; gamma_max must be ≥ 2"
         self.transport = transport
         self.mode_policy = mode_policy
+        # the key this session presents to the window policy: adaptive
+        # policies (Dynamic, AWC) keep per-key state, so a multi-pair
+        # deployment sharing one policy object still gets one stabilizer
+        # per draft–target pair
+        self.pair_key = str(pair_key)
 
         self.slots_len = (None if self.max_prompt_len is None
                           else self._cache_len(self.max_prompt_len))
@@ -157,6 +162,9 @@ class DecodeSession:
         self.virtual_ms = 0.0
         self.log_gamma = bool(log_gamma)
         self.gamma_seq: list[int] = []
+        self.gamma_sum = 0           # Σ effective γ over distributed rounds
+        self.gamma_rounds = 0        # distributed rounds decided (O(1) mean
+                                     # γ even with log_gamma off)
         self.fused_iterations = 0
         self.link_ms = 0.0               # unhidden transport delay so far
         self.pipeline_hits = 0           # optimistic windows kept
@@ -226,6 +234,13 @@ class DecodeSession:
 
     def record(self, slot: int) -> Optional[SlotRecord]:
         return self._slots[slot]
+
+    @property
+    def mean_gamma(self) -> float:
+        """Mean effective γ over distributed rounds — O(1) accumulators,
+        so it is available even with ``log_gamma`` off (serving sessions)."""
+        return (self.gamma_sum / self.gamma_rounds if self.gamma_rounds
+                else 0.0)
 
     # ------------------------------------------------------------- admission
 
@@ -323,7 +338,7 @@ class DecodeSession:
         window, so nothing is accepted and the target's own next token is
         committed (a pure cloud-side autoregressive step). γ = 0 is data,
         not shape: fused/distributed switching never recompiles."""
-        dec = policy.decide("engine", self._features(q_depth))
+        dec = policy.decide(self.pair_key, self._features(q_depth))
         if self.mode_policy == "fused":
             fused = True
         elif self.mode_policy == "distributed":
@@ -340,6 +355,9 @@ class DecodeSession:
             self.gamma_seq.append(1 if fused else gamma_eff)
         if fused:
             self.fused_iterations += 1
+        else:
+            self.gamma_sum += gamma_eff
+            self.gamma_rounds += 1
         self._gamma_prev = 1.0 if fused else float(gamma_eff)
         return gamma_eff, fused
 
@@ -789,6 +807,9 @@ class DecodeSession:
             # drained or the chunk ended first): unwind its bookkeeping
             if carry[1]:
                 self.fused_iterations -= 1
+            else:
+                self.gamma_sum -= carry[0]
+                self.gamma_rounds -= 1
             if self.log_gamma and self.gamma_seq:
                 self.gamma_seq.pop()
         if it_run == 0:

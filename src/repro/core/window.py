@@ -123,6 +123,28 @@ class AWCWindowPolicy:
         return "awc"
 
 
+def make_window_policy(kind: str, *, gamma: int = 4, hi: float = 0.75,
+                       lo: float = 0.25, gmax: int = 12, predictor=None,
+                       stab_cfg: StabilizerConfig | None = None):
+    """One window-policy factory for every config surface (the topology
+    spec layer, ``launch.serve`` flags, DSD-Sim's YAML reader): a policy
+    *kind* plus its knobs → a fresh policy instance. Fresh matters — each
+    call returns its own adaptation state, so two deployment surfaces can
+    never accidentally share a stabilizer."""
+    if kind == "static":
+        return StaticWindowPolicy(int(gamma))
+    if kind == "dynamic":
+        return DynamicWindowPolicy(hi=float(hi), lo=float(lo),
+                                   gamma0=int(gamma), gmax=int(gmax))
+    if kind == "awc":
+        if predictor is None:
+            from .awc.model import default_predictor
+            predictor = default_predictor()
+        return AWCWindowPolicy(predictor, stab_cfg=stab_cfg)
+    raise ValueError(f"unknown window policy kind {kind!r}; "
+                     "expected static | dynamic | awc")
+
+
 class OracleStaticPolicy:
     """Upper-bound helper used for AWC dataset labeling sweeps: behaves like
     StaticWindowPolicy but records nothing; separate class only so sweep code

@@ -12,7 +12,7 @@ while round k's verdict travels the other way.
 """
 
 from .transport import (CONTROL_PAYLOAD_BYTES, EmulatedLinkTransport,
-                        InProcessTransport, Transport)
+                        InProcessTransport, Transport, make_transport)
 from .wire import (VerdictMsg, WindowMsg, decode_verdict, decode_window,
                    encode_verdict, encode_window)
 from .workers import DraftWorker, TargetWorker
@@ -21,4 +21,5 @@ __all__ = [
     "CONTROL_PAYLOAD_BYTES", "EmulatedLinkTransport", "InProcessTransport",
     "Transport", "VerdictMsg", "WindowMsg", "DraftWorker", "TargetWorker",
     "decode_verdict", "decode_window", "encode_verdict", "encode_window",
+    "make_transport",
 ]

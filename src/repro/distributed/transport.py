@@ -238,3 +238,25 @@ class EmulatedLinkTransport(Transport):
         return (f"emulated-link(rtt={self.spec.rtt_ms}ms, "
                 f"jitter={self.spec.jitter_ms}ms, "
                 f"bw={self.spec.bandwidth_gbps}Gbps, sleep={self.sleep})")
+
+
+def make_transport(link: LinkSpec | None, seed: int = 0,
+                   sleep: bool = True) -> Transport | None:
+    """Transport for one draft–target pair from its declarative
+    :class:`LinkSpec` — the single construction rule every deployment
+    surface (``launch.serve`` flags, ``repro.topology`` specs, benches)
+    shares:
+
+    - ``link is None``      → ``None`` (colocated pair: no transport, the
+      engine's virtual ``rtt_ms`` accounting applies);
+    - ``link.rtt_ms <= 0``  → :class:`InProcessTransport` (zero delay,
+      bit-identical to the colocated path at temperature 0);
+    - otherwise             → :class:`EmulatedLinkTransport` on ``link``
+      (``sleep=False`` routes imposed delays to the virtual clock for
+      fast deterministic tests).
+    """
+    if link is None:
+        return None
+    if link.rtt_ms <= 0:
+        return InProcessTransport()
+    return EmulatedLinkTransport(link, seed=seed, sleep=sleep)

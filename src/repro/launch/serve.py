@@ -2,12 +2,24 @@
 JAX models with the paper's window policies, on the continuous slot-based
 scheduler (default) or the wave-batched baseline.
 
+TOPOLOGY-FIRST: the launcher's real input is a declarative
+:class:`repro.topology.ClusterSpec` — nodes, draft→target pairs with
+per-pair links/window/mode policies, serving knobs, workload:
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --topology examples/cluster_2pair.json [--requests 8] [--json]
+
+The legacy flag surface still works and compiles down to an equivalent
+ONE-PAIR spec through :func:`repro.topology.one_pair_spec` and the same
+:func:`repro.topology.build_deployment` factory (old invocations stay
+behaviorally identical):
+
     PYTHONPATH=src python -m repro.launch.serve \
         --target qwen3-14b --draft qwen2.5-3b --policy awc \
         --requests 16 --max-new 48 [--server continuous|wave] \
         [--arrival-rate 8] [--temperature 0.0] [--rtt-ms 10] \
         [--link-rtt-ms 20 --link-jitter-ms 2 --link-bw-gbps 1] \
-        [--mode-policy auto|distributed|fused]
+        [--mode-policy auto|distributed|fused|pipeline]
 
 ``--arrival-rate`` draws Poisson arrivals (requests/s); TTFT and e2e are
 measured from each request's arrival, so they include queue wait. Reduced-
@@ -22,50 +34,71 @@ wall-clock delays; ``--link-jitter-ms``/``--link-bw-gbps`` shape it, and
 the measured RTT feeds the AWC feature vector). ``--mode-policy`` forces
 or frees the fused/distributed mode decision (``fused`` = cloud-only
 autoregressive steps, no draft round trips).
+
+Multi-pair topologies report link stats PER PAIR (``pairs`` in the JSON
+summary, keyed by pair id); the one-pair case additionally keeps the old
+flat ``link_*`` keys.
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 
-import jax
 import numpy as np
 
-from ..configs import ARCHS, get_config
-from ..core.engine import SpecDecodeEngine
-from ..core.window import (AWCWindowPolicy, DynamicWindowPolicy,
-                           StaticWindowPolicy)
-from ..core.awc.model import default_predictor
-from ..serving import (ServeRequest, ServerConfig, SpecDecodeServer,
-                       WaveSpecDecodeServer)
+from ..configs import ARCHS
+from ..serving import ServeRequest, WaveSpecDecodeServer
+from ..topology import ClusterSpec, build_deployment, one_pair_spec
 
 
-def build_policy(name: str, gamma: int):
-    if name == "static":
-        return StaticWindowPolicy(gamma)
-    if name == "dynamic":
-        return DynamicWindowPolicy(gamma0=gamma)
-    if name == "awc":
-        return AWCWindowPolicy(default_predictor())
-    raise ValueError(name)
+def spec_from_args(args) -> ClusterSpec:
+    """Compile the parsed CLI namespace to a ClusterSpec: ``--topology``
+    loads the file (CLI workload flags override its workload section when
+    explicitly passed); otherwise the legacy flags map to a one-pair
+    spec."""
+    if args.topology:
+        spec = ClusterSpec.load(args.topology)
+    else:
+        spec = one_pair_spec(
+            target=args.target, draft=args.draft, policy=args.policy,
+            gamma=args.gamma, gamma_max=args.gamma_max,
+            max_batch=args.max_batch, sync_every=args.sync_every,
+            temperature=args.temperature, rtt_ms=args.rtt_ms,
+            link_rtt_ms=args.link_rtt_ms,
+            link_jitter_ms=args.link_jitter_ms,
+            link_bw_gbps=args.link_bw_gbps, mode_policy=args.mode_policy,
+            server=args.server, seed=args.seed)
+    if args.requests is not None:
+        spec.workload.num_requests = args.requests
+    if args.max_new is not None:
+        spec.workload.max_new = args.max_new
+    if args.arrival_rate is not None:
+        spec.workload.rate_per_s = args.arrival_rate
+    return spec.validate()
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--topology", default=None, metavar="cluster.json",
+                    help="declarative ClusterSpec (nodes + draft→target "
+                         "pairs with per-pair links/policies); replaces "
+                         "the one-pair flag surface below")
     ap.add_argument("--target", default="qwen3-14b", choices=sorted(ARCHS))
     ap.add_argument("--draft", default="qwen2.5-3b", choices=sorted(ARCHS))
     ap.add_argument("--policy", default="static",
                     choices=["static", "dynamic", "awc"])
     ap.add_argument("--gamma", type=int, default=4)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="request count (default: topology workload, or 8)")
+    ap.add_argument("--max-new", type=int, default=None,
+                    help="tokens per request (default: topology workload, "
+                         "or 32)")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--server", default="continuous",
                     choices=["continuous", "wave"],
                     help="continuous slot scheduler vs wave-batched baseline")
-    ap.add_argument("--arrival-rate", type=float, default=0.0,
+    ap.add_argument("--arrival-rate", type=float, default=None,
                     help="Poisson arrivals per second (0 = all at t=0)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--rtt-ms", type=float, default=10.0,
@@ -98,80 +131,83 @@ def main(argv=None) -> int:
     if args.link_rtt_ms is not None and args.server == "wave":
         raise SystemExit("--link-rtt-ms needs the continuous server "
                          "(the wave baseline is colocated-only)")
-    if args.mode_policy == "pipeline" and args.link_rtt_ms is None:
+    if args.mode_policy == "pipeline" and args.link_rtt_ms is None \
+            and not args.topology:
         raise SystemExit("--mode-policy pipeline overlaps rounds across a "
                          "transport; pass --link-rtt-ms (0 = in-process)")
 
-    tcfg = get_config(args.target).reduced()
-    dcfg = get_config(args.draft).reduced()
-    # draft and target must share a vocab (one tokenizer)
-    vocab = min(tcfg.vocab, dcfg.vocab)
-    tcfg = dataclasses.replace(tcfg, vocab=vocab)
-    dcfg = dataclasses.replace(dcfg, vocab=vocab)
+    spec = spec_from_args(args)
+    deployment = build_deployment(spec)
+    wl = spec.workload
 
-    engine = SpecDecodeEngine(dcfg, tcfg, temperature=args.temperature,
-                              rtt_ms=args.rtt_ms,
-                              gamma_max=args.gamma_max,
-                              sync_every=args.sync_every,
-                              key=jax.random.PRNGKey(args.seed))
-    transport = None
-    if args.link_rtt_ms is not None:
-        from ..distributed import EmulatedLinkTransport, InProcessTransport
-        from ..sim.network import LinkSpec
-        if args.link_rtt_ms <= 0:
-            transport = InProcessTransport()
-        else:
-            transport = EmulatedLinkTransport(
-                LinkSpec(rtt_ms=args.link_rtt_ms,
-                         jitter_ms=args.link_jitter_ms,
-                         bandwidth_gbps=args.link_bw_gbps),
-                seed=args.seed)
-    server_cls = (SpecDecodeServer if args.server == "continuous"
-                  else WaveSpecDecodeServer)
-    server = server_cls(engine, build_policy(args.policy, args.gamma),
-                        ServerConfig(max_batch=args.max_batch,
-                                     transport=transport,
-                                     mode_policy=args.mode_policy))
-    rng = np.random.default_rng(args.seed)
+    if spec.serving.server == "wave":
+        pair0 = deployment.pairs[0]
+        cfg = deployment.server_config()
+        # the wave baseline reads mode_policy off its ServerConfig (it has
+        # no pair objects); forward the single pair's declared mode
+        cfg.mode_policy = pair0.mode_policy
+        server = WaveSpecDecodeServer(pair0.engine, pair0.policy, cfg)
+    else:
+        server = deployment.build_server()
+
+    rng = np.random.default_rng(spec.seed)
     arrival = 0.0
-    for i in range(args.requests):
-        plen = int(rng.integers(8, 48))
-        if args.arrival_rate > 0:
-            arrival += float(rng.exponential(1.0 / args.arrival_rate))
+    for i in range(wl.num_requests):
+        plen = int(rng.integers(wl.prompt_lo, wl.prompt_hi))
+        if wl.rate_per_s > 0:
+            arrival += float(rng.exponential(1.0 / wl.rate_per_s))
         server.submit(ServeRequest(
-            i, rng.integers(0, vocab, plen).astype(np.int32), args.max_new,
-            arrival_s=arrival))
+            i, rng.integers(0, deployment.vocab, plen).astype(np.int32),
+            wl.max_new, arrival_s=arrival))
     results = server.run()
 
     accs = [r.acceptance_rate for r in results]
     tpots = [r.tpot_ms for r in results]
     summary = {
-        "server": args.server,
-        "policy": args.policy,
+        "server": spec.serving.server,
+        "topology": args.topology or "one-pair(flags)",
+        "pairs_deployed": len(deployment.pairs),
         "requests": len(results),
         "mean_acceptance": float(np.mean(accs)),
         "mean_ttft_ms": float(np.mean([r.ttft_ms for r in results])),
         "mean_queue_ms": float(np.mean([r.queue_ms for r in results])),
         "mean_tpot_ms": float(np.mean(tpots)),
         "mean_e2e_ms": float(np.mean([r.e2e_ms for r in results])),
-        "compiled_step_programs": engine.compiled_programs(),
+        "compiled_step_programs": sum(
+            p.engine.compiled_programs()
+            for p in {id(p.engine): p for p in deployment.pairs}.values()),
     }
-    if transport is not None:
-        summary["transport"] = transport.describe()
-        summary["mode_policy"] = args.mode_policy
-        summary["link_bytes_sent"] = transport.bytes_sent
-        summary["link_messages"] = transport.messages_sent
-        summary["link_recent_rtt_ms"] = round(transport.recent_rtt_ms, 3)
+    if not args.topology:
+        summary["policy"] = args.policy
+    if hasattr(server, "pair_summaries"):
+        summary["pairs"] = server.pair_summaries()
+    # one-pair backcompat: the flat link keys the pre-topology launcher
+    # emitted, read off the single pair's transport
+    if len(deployment.pairs) == 1:
+        tr = deployment.pairs[0].transport
+        if tr is not None:
+            summary["transport"] = tr.describe()
+            summary["mode_policy"] = deployment.pairs[0].mode_policy
+            summary["link_bytes_sent"] = tr.bytes_sent
+            summary["link_messages"] = tr.messages_sent
+            summary["link_recent_rtt_ms"] = round(tr.recent_rtt_ms, 3)
     if args.json:
         print(json.dumps(summary, indent=1))
     else:
+        per_pair = ""
+        if len(deployment.pairs) > 1 and "pairs" in summary:
+            per_pair = "  " + "  ".join(
+                f"[{pid}: γ={d['mean_gamma']:.2f} "
+                f"fused={d['fused_fraction']:.2f} n={d['requests']}]"
+                for pid, d in summary["pairs"].items())
         print(f"served {summary['requests']} requests  "
-              f"server={args.server}  policy={args.policy}  "
+              f"server={summary['server']}  "
+              f"pairs={summary['pairs_deployed']}  "
               f"acceptance={summary['mean_acceptance']:.3f}  "
               f"ttft={summary['mean_ttft_ms']:.1f}ms  "
               f"tpot={summary['mean_tpot_ms']:.1f}ms  "
               f"e2e={summary['mean_e2e_ms']:.0f}ms  "
-              f"programs={summary['compiled_step_programs']}")
+              f"programs={summary['compiled_step_programs']}" + per_pair)
     return 0
 
 

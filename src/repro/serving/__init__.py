@@ -1,5 +1,8 @@
-"""Serving substrate: continuous slot-based request serving over a
-persistent DecodeSession (plus the wave-batched baseline)."""
+"""Serving substrate: continuous slot-based request serving over
+per-pair persistent DecodeSessions with pluggable pair routing (plus the
+wave-batched baseline)."""
 
-from .server import (ServeRequest, ServeResult, ServerConfig,
-                     SpecDecodeServer, WaveSpecDecodeServer)
+from .server import (PAIR_ROUTERS, LeastLoadedPairRouter, PairRouter,
+                     RoundRobinPairRouter, ServeRequest, ServeResult,
+                     ServerConfig, ServingPair, SpecDecodeServer,
+                     WaveSpecDecodeServer)

@@ -1,39 +1,49 @@
 """In-process serving on real JAX models — continuous (iteration-level)
-batching over a persistent :class:`repro.core.session.DecodeSession`.
+batching over persistent :class:`repro.core.session.DecodeSession` pools,
+with TOPOLOGY-FIRST multi-pair routing.
 
-:class:`SpecDecodeServer` is a slot-based continuous scheduler: requests
-are admitted into free slots of a live decode session the moment they have
-arrived and a slot is open (admission policy mirroring
-``sim/policies.py`` — FIFO or length-aware LAB), decode proceeds in
-``sync_every``-iteration chunks shared by all co-resident requests, and
-finished requests retire at chunk boundaries, freeing their slot for the
-next arrival without stalling neighbours. This is the execution model
-DSD-Sim assumes (``BatchingConfig.continuous=True``), so simulator
-predictions and real execution are directly comparable — that comparison
-is ``benchmarks/bench_serving.py``'s sim↔real delta.
+:class:`SpecDecodeServer` serves one deployment of **draft–target pairs**
+(:class:`ServingPair`): each pair owns an engine, a window policy, an
+optional transport (its edge–cloud link) and a mode policy, and runs its
+own slot-based decode session. Requests are admitted into free slots the
+moment they have arrived and a slot is open (admission policy mirroring
+``sim/policies.py`` — FIFO or length-aware LAB within the chosen pair),
+routed across pairs by a pluggable :class:`PairRouter` (least-loaded by
+default; routing is STICKY — a request never migrates off the pair that
+admitted it). Decode proceeds in ``sync_every``-iteration chunks per pair
+(pairs interleave chunk-by-chunk in one process), and finished requests
+retire at chunk boundaries, freeing their slot for the next arrival
+without stalling neighbours. This is the execution model DSD-Sim assumes
+(``BatchingConfig.continuous=True`` plus per-pair links), so simulator
+predictions and real execution are directly comparable — build both from
+ONE :class:`repro.topology.ClusterSpec` and the comparison is a property
+of the spec, not of per-benchmark plumbing.
+
+The legacy single-pair surface is unchanged:
+``SpecDecodeServer(engine, policy, cfg)`` wraps its arguments in a
+one-pair deployment (``cfg.transport``/``cfg.mode_policy`` become the
+pair's link and mode), and every admission/retirement decision is
+bit-identical to the pre-topology server.
 
 Per-request metrics include queue wait: TTFT runs from the request's own
 ``arrival_s`` to the end of its own prefill-insert (its anchor token), and
 e2e to its retirement; token payloads come from the per-sequence cursor,
-never from an assumed ``max_new_tokens``.
+never from an assumed ``max_new_tokens``. Per-pair operating points
+(mean γ, fused fraction, link bytes, measured RTT) are surfaced by
+:meth:`SpecDecodeServer.pair_summaries` — heterogeneous links under one
+server show per-pair AWC converging to different γ/fused mixes there.
 
 :class:`WaveSpecDecodeServer` keeps the previous wave-batched execution
 model (admit a wave, drain it fully, admit the next) as the measured
 baseline: a long sequence holds every slot in its wave hostage, which is
 exactly the sim↔real gap the continuous scheduler closes.
-
-``ServerConfig.transport`` routes every speculation round through a
-:class:`repro.distributed.Transport` (draft on the edge, target in the
-cloud, window/verdict payloads paying measured link delays);
-``ServerConfig.mode_policy`` forces or frees the fused/distributed mode
-decision. The default (no transport) keeps the colocated fast path.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Protocol, Sequence
 
 import numpy as np
 
@@ -59,11 +69,28 @@ class ServeResult:
     e2e_ms: float                # arrival → retirement
     acceptance_rate: float
     queue_ms: float = 0.0        # arrival → admission start
+    pair_id: str = ""            # draft–target pair that served the request
+
+
+@dataclass
+class ServingPair:
+    """One deployed draft→target lane: engine + policy + link + mode.
+
+    The runtime unit :func:`repro.topology.build_deployment` emits one of
+    per :class:`repro.topology.PairSpec`; constructible directly for
+    tests/benchmarks. ``pair_id`` doubles as the window policy's pair key,
+    so adaptive policies (Dynamic/AWC) shared across pairs still keep one
+    stabilizer per pair."""
+    pair_id: str
+    engine: SpecDecodeEngine
+    policy: WindowPolicy
+    transport: Optional[object] = None   # repro.distributed.Transport
+    mode_policy: str = "auto"            # auto | distributed | fused | pipeline
 
 
 @dataclass
 class ServerConfig:
-    max_batch: int = 8           # slot-pool capacity
+    max_batch: int = 8           # slot-pool capacity PER PAIR
     length_aware: bool = True    # LAB admission (vs FIFO), as in sim
     pad_to: int = 16             # prompt padding quantum
     max_prompt_len: Optional[int] = None   # continuous pad bound
@@ -71,11 +98,57 @@ class ServerConfig:
     max_new_cap: Optional[int] = None      # output width (default: queue max)
     eos_id: int = -1
     sync_every: Optional[int] = None       # admission/retirement granularity
-    transport: Optional[object] = None     # repro.distributed.Transport:
-                                           # route rounds over a (emulated)
-                                           # edge-cloud link
-    mode_policy: str = "auto"              # auto | distributed | fused
-                                           # | pipeline (overlap rounds)
+    transport: Optional[object] = None     # legacy one-pair surface: the
+                                           # implicit pair's Transport
+    mode_policy: str = "auto"              # legacy one-pair surface: the
+                                           # implicit pair's mode policy
+
+
+# -- pair routing ------------------------------------------------------------
+
+class PairRouter(Protocol):
+    """Chooses the draft–target pair that admits a request.
+
+    ``free_slots[i]`` is pair i's current free-slot count; the router must
+    return an index with ``free_slots[i] > 0`` (the server only consults it
+    while capacity exists somewhere). Routing is sticky by construction:
+    the server never migrates an admitted request."""
+
+    def route(self, req: ServeRequest, pairs: Sequence[ServingPair],
+              free_slots: Sequence[int]) -> int: ...
+
+
+class LeastLoadedPairRouter:
+    """Default router: the pair with the most free slots (ties break to
+    the lowest pair index, which keeps the one-pair case trivially exact
+    and multi-pair admission deterministic)."""
+
+    def route(self, req: ServeRequest, pairs: Sequence[ServingPair],
+              free_slots: Sequence[int]) -> int:
+        return int(max(range(len(free_slots)), key=lambda i: free_slots[i]))
+
+
+class RoundRobinPairRouter:
+    """Cycle over pairs, skipping the ones with no free slot."""
+
+    def __init__(self):
+        self._next = 0
+
+    def route(self, req: ServeRequest, pairs: Sequence[ServingPair],
+              free_slots: Sequence[int]) -> int:
+        n = len(free_slots)
+        for k in range(n):
+            i = (self._next + k) % n
+            if free_slots[i] > 0:
+                self._next = i + 1
+                return i
+        return self._next % n
+
+
+PAIR_ROUTERS = {
+    "least-loaded": LeastLoadedPairRouter,
+    "round-robin": RoundRobinPairRouter,
+}
 
 
 class _ArrivalClock:
@@ -94,16 +167,38 @@ class _ArrivalClock:
 
 
 class SpecDecodeServer:
-    """Continuous slot-based scheduler over one decode session."""
+    """Continuous slot-based scheduler over a deployment of draft–target
+    pairs (one decode session per pair)."""
 
-    def __init__(self, engine: SpecDecodeEngine,
+    def __init__(self, engine: Optional[SpecDecodeEngine] = None,
                  window_policy: Optional[WindowPolicy] = None,
-                 cfg: Optional[ServerConfig] = None):
-        self.engine = engine
-        self.policy = window_policy or StaticWindowPolicy(4)
+                 cfg: Optional[ServerConfig] = None, *,
+                 pairs: Optional[Sequence[ServingPair]] = None,
+                 router: Optional[PairRouter] = None):
         self.cfg = cfg or ServerConfig()
+        if pairs is None:
+            assert engine is not None, \
+                "pass either an engine (one-pair surface) or pairs="
+            pairs = [ServingPair(
+                pair_id="pair0", engine=engine,
+                policy=window_policy or StaticWindowPolicy(4),
+                transport=self.cfg.transport,
+                mode_policy=self.cfg.mode_policy)]
+        else:
+            assert engine is None and window_policy is None, \
+                "pairs= replaces the engine/window_policy surface"
+            assert len(pairs) >= 1, "a deployment needs at least one pair"
+            ids = [p.pair_id for p in pairs]
+            assert len(set(ids)) == len(ids), f"duplicate pair ids: {ids}"
+        self.pairs = list(pairs)
+        self.router = router or LeastLoadedPairRouter()
+        # legacy attribute surface (bench/test introspection)
+        self.engine = self.pairs[0].engine
+        self.policy = self.pairs[0].policy
         self.queue: list[ServeRequest] = []
         self.results: list[ServeResult] = []
+        self._sessions: list[DecodeSession] = []
+        self._served = [0] * len(self.pairs)
 
     def submit(self, req: ServeRequest) -> None:
         self.queue.append(req)
@@ -112,11 +207,11 @@ class SpecDecodeServer:
 
     def _select_admissions(self, arrived: list[ServeRequest],
                            k: int) -> list[ServeRequest]:
-        """Pick ≤ k arrived requests: head-of-line always goes; LAB fills
-        the remaining free slots with the requests whose prompt lengths are
-        closest to the head's (minimum intra-pool padding waste), FIFO in
-        arrival order — the same rule ``sim.policies.LengthAwareBatching``
-        applies to a wave."""
+        """Pick ≤ k arrived requests for ONE pair: head-of-line always
+        goes; LAB fills the remaining free slots with the requests whose
+        prompt lengths are closest to the head's (minimum intra-pool
+        padding waste), FIFO in arrival order — the same rule
+        ``sim.policies.LengthAwareBatching`` applies to a wave."""
         if not arrived or k <= 0:
             return []
         head = arrived[0]
@@ -128,71 +223,123 @@ class SpecDecodeServer:
 
     # -- serve loop ----------------------------------------------------------
 
-    def _make_session(self, pending: list[ServeRequest]) -> DecodeSession:
+    def _make_session(self, pair: ServingPair,
+                      pending: list[ServeRequest]) -> DecodeSession:
         q = self.cfg.pad_to
         mp = self.cfg.max_prompt_len or max(len(r.prompt) for r in pending)
         mp = ((mp + q - 1) // q) * q
         cap = self.cfg.max_new_cap or max(r.max_new_tokens for r in pending)
-        gmax = (self.engine.gamma_max or
-                self.engine._policy_gamma_bound(self.policy))
-        return DecodeSession(self.engine, capacity=self.cfg.max_batch,
+        eng = pair.engine
+        gmax = eng.gamma_max or eng._policy_gamma_bound(pair.policy)
+        return DecodeSession(eng, capacity=self.cfg.max_batch,
                              max_new_cap=cap, max_prompt_len=mp,
                              gamma_max=gmax,
                              sync_every=self.cfg.sync_every,
                              eos_id=self.cfg.eos_id, log_gamma=False,
-                             transport=self.cfg.transport,
-                             mode_policy=self.cfg.mode_policy)
+                             transport=pair.transport,
+                             mode_policy=pair.mode_policy,
+                             pair_key=pair.pair_id)
 
     def run(self) -> list[ServeResult]:
         """Drain the submitted stream; returns per-request results.
 
-        Loop invariant per cycle: admit arrived requests into free slots →
-        run one decode chunk → retire finished slots. When no request is
-        in flight the loop idles to the next arrival instead of spinning.
+        Loop invariant per cycle: route + admit arrived requests into free
+        slots (head-of-line request picks its pair via the router, LAB/FIFO
+        co-admission fills that pair's remaining slots) → run one decode
+        chunk per occupied pair → retire finished slots. When no request
+        is in flight the loop idles to the next arrival instead of
+        spinning.
         """
         if not self.queue:
             return self.results
         pending = sorted(self.queue, key=lambda r: r.arrival_s)
         self.queue = []
-        session = self._make_session(pending)
+        sessions = [self._make_session(p, pending) for p in self.pairs]
+        self._sessions = sessions
+        self._served = [0] * len(self.pairs)
         clock = _ArrivalClock()
-        in_flight: dict[int, tuple[ServeRequest, float, float]] = {}
+        # request_id -> (request, admit_start_s, first_token_s, pair_idx)
+        in_flight: dict[int, tuple[ServeRequest, float, float, int]] = {}
 
-        while pending or session.occupied:
+        while pending or any(s.occupied for s in sessions):
             now = clock.now()
             arrived = [r for r in pending if r.arrival_s <= now]
-            free = session.free
-            if free and arrived:
-                for r in self._select_admissions(arrived, len(free)):
+            while arrived:
+                frees = [len(s.free) for s in sessions]
+                if not any(frees):
+                    break
+                idx = self.router.route(arrived[0], self.pairs, frees)
+                if frees[idx] <= 0:
+                    break
+                for r in self._select_admissions(arrived, frees[idx]):
                     admit_start = clock.now()
-                    session.admit(r.prompt, r.max_new_tokens,
-                                  request_id=r.request_id)
-                    in_flight[r.request_id] = (r, admit_start, clock.now())
+                    sessions[idx].admit(r.prompt, r.max_new_tokens,
+                                        request_id=r.request_id)
+                    in_flight[r.request_id] = (r, admit_start, clock.now(),
+                                               idx)
                     pending.remove(r)
                     arrived.remove(r)
-            if not session.occupied:
+                    self._served[idx] += 1
+            if not any(s.occupied for s in sessions):
                 clock.wait_until(min(r.arrival_s for r in pending))
                 continue
             # q_depth: requests that have ARRIVED and wait for a slot —
             # future arrivals must not leak into policy features
-            session.run_chunk(
-                self.policy,
-                q_depth=len(arrived) / max(1, 4 * self.cfg.max_batch))
-            for j in session.finished_slots():
-                tokens, rec = session.retire(j)
-                r, admit_s, first_tok_s = in_flight.pop(rec.request_id)
-                end_s = clock.now()
-                n = len(tokens)
-                bits = rec.bits
-                self.results.append(ServeResult(
-                    request_id=r.request_id,
-                    tokens=tokens,
-                    ttft_ms=(first_tok_s - r.arrival_s) * 1e3,
-                    tpot_ms=(end_s - first_tok_s) * 1e3 / max(1, n - 1),
-                    e2e_ms=(end_s - r.arrival_s) * 1e3,
-                    acceptance_rate=(sum(bits) / len(bits)) if bits else 0.0,
-                    queue_ms=(admit_s - r.arrival_s) * 1e3))
+            q_depth = len(arrived) / max(1, 4 * self.cfg.max_batch)
+            for idx, sess in enumerate(sessions):
+                if not sess.occupied:
+                    continue
+                sess.run_chunk(self.pairs[idx].policy, q_depth=q_depth)
+                for j in sess.finished_slots():
+                    tokens, rec = sess.retire(j)
+                    r, admit_s, first_tok_s, _ = in_flight.pop(rec.request_id)
+                    end_s = clock.now()
+                    n = len(tokens)
+                    bits = rec.bits
+                    self.results.append(ServeResult(
+                        request_id=r.request_id,
+                        tokens=tokens,
+                        ttft_ms=(first_tok_s - r.arrival_s) * 1e3,
+                        tpot_ms=(end_s - first_tok_s) * 1e3 / max(1, n - 1),
+                        e2e_ms=(end_s - r.arrival_s) * 1e3,
+                        acceptance_rate=(sum(bits) / len(bits)) if bits
+                        else 0.0,
+                        queue_ms=(admit_s - r.arrival_s) * 1e3,
+                        pair_id=self.pairs[idx].pair_id))
         return self.results
+
+    # -- per-pair observability ----------------------------------------------
+
+    def pair_summaries(self) -> dict[str, dict]:
+        """Per-pair operating point after :meth:`run`, keyed by pair id:
+        request/iteration counts, mean effective γ, fused fraction,
+        acceptance, pipeline hit counters, and — when the pair has a
+        transport — its link stats (bytes, messages, measured RTT)."""
+        out: dict[str, dict] = {}
+        for pair, sess, served in zip(self.pairs, self._sessions,
+                                      self._served):
+            d = {
+                "requests": served,
+                "iterations": sess.iterations,
+                "mean_gamma": round(sess.mean_gamma, 3),
+                "fused_fraction": round(
+                    sess.fused_iterations / max(1, sess.iterations), 4),
+                "acceptance_rate": round(
+                    sess.accepted / max(1, sess.proposed), 4),
+                "pipeline_hits": sess.pipeline_hits,
+                "pipeline_misses": sess.pipeline_misses,
+                "link_ms": round(sess.link_ms, 2),
+                "mode_policy": pair.mode_policy,
+            }
+            tr = pair.transport
+            if tr is not None:
+                d.update(
+                    transport=tr.describe(),
+                    bytes_sent=tr.bytes_sent,
+                    messages=tr.messages_sent,
+                    recent_rtt_ms=round(tr.recent_rtt_ms, 3))
+            out[pair.pair_id] = d
+        return out
 
 
 class WaveSpecDecodeServer:
@@ -201,7 +348,7 @@ class WaveSpecDecodeServer:
     ``engine.generate`` to the wave-max token budget, and the next wave
     starts only when the whole wave has drained. Kept as the measured
     baseline for ``benchmarks/bench_serving.py``; new code should use the
-    continuous :class:`SpecDecodeServer`."""
+    continuous :class:`SpecDecodeServer`. Single-pair colocated only."""
 
     def __init__(self, engine: SpecDecodeEngine,
                  window_policy: Optional[WindowPolicy] = None,

@@ -33,8 +33,7 @@ from .policies import (BATCHING, ROUTING, BatchingConfig)
 from .scheduler import ClusterSpec, PolicyStack, DSDSimulation
 from .trace import PROFILES, WorkloadGenerator
 from .hwmodel import HardwareModel
-from ..core.window import (AWCWindowPolicy, DynamicWindowPolicy,
-                           StaticWindowPolicy)
+from ..core.window import make_window_policy
 
 
 # --------------------------------------------------------------------------
@@ -187,19 +186,17 @@ class SimSpec:
 
 
 def _build_window_policy(w: dict[str, Any], awc_predictor=None):
-    kind = (w or {}).get("kind", "static")
-    if kind == "static":
-        return StaticWindowPolicy(gamma=int(w.get("gamma", 4)))
-    if kind == "dynamic":
-        return DynamicWindowPolicy(hi=float(w.get("hi", 0.75)),
-                                   lo=float(w.get("lo", 0.25)),
-                                   gamma0=int(w.get("gamma", 4)))
-    if kind == "awc":
-        if awc_predictor is None:
-            from ..core.awc.model import default_predictor
-            awc_predictor = default_predictor()
-        return AWCWindowPolicy(awc_predictor)
-    raise ValueError(f"unknown window policy {kind!r}")
+    """YAML window mapping → policy instance, via the shared factory
+    (:func:`repro.core.window.make_window_policy`) so the YAML reader,
+    the topology spec layer and the launcher flags construct policies
+    through one code path."""
+    w = w or {}
+    return make_window_policy(str(w.get("kind", "static")),
+                              gamma=int(w.get("gamma", 4)),
+                              hi=float(w.get("hi", 0.75)),
+                              lo=float(w.get("lo", 0.25)),
+                              gmax=int(w.get("gmax", 12)),
+                              predictor=awc_predictor)
 
 
 def auto_topology(doc: dict[str, Any], awc_predictor=None) -> SimSpec:

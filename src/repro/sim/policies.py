@@ -59,6 +59,25 @@ class JSQRouting:
         return "jsq"
 
 
+class PinnedRouting:
+    """Fixed drafter→target map: request ``r`` on drafter ``d`` always
+    verifies on ``target_of_drafter[d]``. This is how a declarative
+    topology's draft–target PAIRS materialize in the simulator
+    (:func:`repro.topology.build_simulation`): drafter i is pair i, and
+    its routing is part of the spec, not a load-balancing decision."""
+
+    def __init__(self, target_of_drafter: Sequence[int]):
+        assert len(target_of_drafter) >= 1, "need at least one pair"
+        self.target_of_drafter = list(target_of_drafter)
+
+    def route(self, request: Any, queue_depths: Sequence[int]) -> int:
+        did = getattr(request, "drafter_id", 0)
+        return self.target_of_drafter[did % len(self.target_of_drafter)]
+
+    def name(self) -> str:
+        return "pinned"
+
+
 ROUTING: dict[str, Callable[..., Any]] = {
     "random": RandomRouting,
     "round_robin": RoundRobinRouting,

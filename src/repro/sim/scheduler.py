@@ -62,6 +62,12 @@ class ClusterSpec:
     link: LinkSpec = field(default_factory=LinkSpec)
     target_pool: Optional[list] = None    # [(hw, model, tp), ...]
     draft_pool: Optional[list] = None     # [(hw, model), ...]
+    # Heterogeneous PER-PAIR links (multi-link topologies): when set,
+    # drafter ``d`` always transfers over ``drafter_link_pool[d]``
+    # regardless of routed target — the lane model
+    # ``repro.topology.build_simulation`` maps PairSpecs onto (drafter i
+    # ⇔ pair i). When None, the per-target ``link`` applies to everyone.
+    drafter_link_pool: Optional[list] = None   # [LinkSpec per drafter]
 
     def target_at(self, tid: int) -> tuple:
         if self.target_pool:
@@ -153,6 +159,14 @@ class DSDSimulation:
                                  queue_capacity_hint=policies.batching_cfg.max_batch * 4)
         self.links = [Link(self.env, cluster.link, random.Random(seed + 1 + t))
                       for t in range(cluster.num_targets)]
+        # per-drafter links (heterogeneous pair topologies) override the
+        # per-target links; each keeps its own RTT tracker so pair-local
+        # rtt_recent_ms features stay isolated
+        self.drafter_links = None
+        if cluster.drafter_link_pool:
+            self.drafter_links = [
+                Link(self.env, spec, random.Random(seed + 101 + d))
+                for d, spec in enumerate(cluster.drafter_link_pool)]
         self.target_queues: list[Store] = [Store(self.env)
                                            for _ in range(cluster.num_targets)]
         self.target_busy = [False] * cluster.num_targets
@@ -200,7 +214,10 @@ class DSDSimulation:
         cl, pol, env = self.cluster, self.policies, self.env
         target_id = pol.routing.route(rec, self._queue_depths())
         pair_key = f"{drafter_id}->{target_id}"
-        link = self.links[target_id]
+        if self.drafter_links is not None:
+            link = self.drafter_links[drafter_id % len(self.drafter_links)]
+        else:
+            link = self.links[target_id]
         draft_hw, draft_model = cl.draft_at(drafter_id)
         quality = DRAFT_QUALITY.get(draft_model, 1.0)
         pair_rng = random.Random((rec.request_id << 16) ^ drafter_id)

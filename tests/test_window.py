@@ -88,3 +88,76 @@ def test_fused_flip_requires_consecutive_low_predictions():
                         stab_cfg=StabilizerConfig(ema_alpha=1.0))
     modes = [p.decide("pair", _feats()).mode for _ in range(6)]
     assert all(m == "distributed" for m in modes)
+
+
+# -------------------------------------------- factory (one construction path)
+
+def test_make_window_policy_kinds_and_freshness():
+    from repro.core.window import make_window_policy
+    import pytest
+    s = make_window_policy("static", gamma=6)
+    assert isinstance(s, StaticWindowPolicy) and s.gamma == 6
+    d = make_window_policy("dynamic", gamma=5, hi=0.8, lo=0.1, gmax=9)
+    assert isinstance(d, DynamicWindowPolicy)
+    assert (d.gamma0, d.hi, d.lo, d.gmax) == (5, 0.8, 0.1, 9)
+    a1 = make_window_policy("awc", predictor=lambda f: 4.0)
+    a2 = make_window_policy("awc", predictor=lambda f: 4.0)
+    assert isinstance(a1, AWCWindowPolicy) and a1 is not a2
+    a1.decide("k", _feats())
+    assert not a2._stab, "factory instances must not share stabilizers"
+    with pytest.raises(ValueError):
+        make_window_policy("prophet")
+
+
+# -------------------- per-pair stabilizer isolation under multi-pair routing
+
+def test_pair_stabilizers_stay_isolated_under_routed_serving():
+    """Two draft–target pairs with different LinkSpecs served CONCURRENTLY
+    by one SpecDecodeServer must not share γ hysteresis state: a shared
+    AWC policy whose predictor keys on the measured-RTT feature converges
+    the fast pair to a large γ and the slow pair into fused mode, with one
+    WindowStabilizer per pair id."""
+    import numpy as np
+    import jax
+    from repro.configs.base import ModelConfig
+    from repro.core.engine import SpecDecodeEngine
+    from repro.distributed import EmulatedLinkTransport, InProcessTransport
+    from repro.serving import (ServeRequest, ServerConfig, ServingPair,
+                               SpecDecodeServer)
+    from repro.sim.network import LinkSpec
+
+    tiny = ModelConfig(name="wt", arch_type="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                       dtype="float32", remat=False)
+    engine = SpecDecodeEngine(tiny, tiny, temperature=0.0, gamma_max=8,
+                              sync_every=2, key=jax.random.PRNGKey(0))
+    # ONE shared policy object across both pairs — isolation must come
+    # from per-pair-key stabilizers, not from separate policy instances
+    policy = AWCWindowPolicy(lambda f: 8.0 if f[2] < 10.0 else 0.5)
+    pairs = [
+        ServingPair("fast", engine, policy,
+                    transport=InProcessTransport()),
+        ServingPair("slow", engine, policy,
+                    transport=EmulatedLinkTransport(
+                        LinkSpec(rtt_ms=40.0, jitter_ms=1.0), seed=0,
+                        sleep=False)),
+    ]
+    srv = SpecDecodeServer(cfg=ServerConfig(max_batch=2), pairs=pairs)
+    rng = np.random.default_rng(0)
+    for i in range(8):
+        srv.submit(ServeRequest(
+            i, rng.integers(0, tiny.vocab, 8).astype(np.int32), 16))
+    results = srv.run()
+    assert len(results) == 8
+    assert {r.pair_id for r in results} == {"fast", "slow"}
+    # one stabilizer per PAIR, keyed by pair id, with distinct converged
+    # operating points: large-γ distributed on the fast link, fused on
+    # the slow one
+    assert set(policy._stab) == {"fast", "slow"}
+    fast, slow = policy._stab["fast"], policy._stab["slow"]
+    assert fast.mode == "distributed"
+    assert slow.mode == "fused"
+    assert fast._ema > slow._ema
+    ps = srv.pair_summaries()
+    assert ps["fast"]["mean_gamma"] > ps["slow"]["mean_gamma"]
+    assert ps["slow"]["fused_fraction"] > ps["fast"]["fused_fraction"]
