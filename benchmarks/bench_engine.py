@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.engine import SpecDecodeEngine
+from repro.core.session import DecodeSession
 from repro.core.window import FeatureSnapshot, StaticWindowPolicy, WindowDecision
 
 DRAFT = ModelConfig(name="bench-draft", arch_type="dense", n_layers=2,
@@ -88,6 +89,46 @@ def run_workload(engine: SpecDecodeEngine, prompts, max_new: int,
     }
 
 
+def run_session_workload(engine: SpecDecodeEngine, prompts, max_new: int,
+                         gamma: int, repeats: int, paged: bool) -> dict:
+    """Static-γ decode through a DecodeSession slot pool — dense per-slot
+    rows vs the paged KV block pool at identical occupancy, so the paged
+    arm's tokens/s is directly comparable to the dense arm's."""
+    B, P = prompts.shape
+
+    def one_pass():
+        sess = DecodeSession(engine, capacity=B, max_new_cap=max_new,
+                             max_prompt_len=P, gamma_max=gamma,
+                             key=jax.random.PRNGKey(0), log_gamma=False,
+                             paged=paged)
+        pol = StaticWindowPolicy(gamma)
+        for i in range(B):
+            sess.admit(prompts[i], max_new, request_id=i)
+        while sess.unfinished:
+            sess.run_chunk(pol)
+        tokens, _ = sess.snapshot()
+        produced = sum(len(t[t >= 0]) for t in tokens) - B
+        return produced, sess.decode_wall_s
+
+    c0 = engine.compiled_programs()
+    one_pass()                               # warmup: pays the compiles
+    compiles = engine.compiled_programs() - c0
+    tokens = 0
+    decode_s = 0.0
+    for _ in range(repeats):
+        t, d = one_pass()
+        tokens += t
+        decode_s += d
+    return {
+        "compiles": compiles,
+        "recompiles_after_warmup": engine.compiled_programs() - c0 - compiles,
+        "repeats": repeats,
+        "decode_s": round(decode_s, 4),
+        "tokens": tokens,
+        "tokens_per_s": round(tokens / max(1e-9, decode_s), 2),
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=4)
@@ -117,9 +158,17 @@ def main(argv=None) -> int:
             engine, prompts, args.max_new,
             lambda: CyclingWindowPolicy(args.gamma_max),
             args.gamma_max, args.repeats),
+        "session_dense": run_session_workload(
+            engine, prompts, args.max_new, args.static_gamma, args.repeats,
+            paged=False),
+        "paged": run_session_workload(
+            engine, prompts, args.max_new, args.static_gamma, args.repeats,
+            paged=True),
     }
     ratio = (results["adaptive"]["tokens_per_s"] /
              max(1e-9, results["static"]["tokens_per_s"]))
+    paged_ratio = (results["paged"]["tokens_per_s"] /
+                   max(1e-9, results["session_dense"]["tokens_per_s"]))
     out = {
         "bench": "engine_decode_loop",
         "config": {"batch": args.batch, "prompt_len": args.prompt_len,
@@ -131,8 +180,11 @@ def main(argv=None) -> int:
                    "platform": platform.platform()},
         "workloads": results,
         "adaptive_over_static_tokens_per_s": round(ratio, 4),
+        "paged_over_dense_tokens_per_s": round(paged_ratio, 4),
         "compile_once": (results["adaptive"]["compiles"] <= 1 and
-                         results["adaptive"]["recompiles_after_warmup"] == 0),
+                         results["adaptive"]["recompiles_after_warmup"] == 0
+                         and results["paged"]["recompiles_after_warmup"]
+                         == 0),
     }
     Path(args.out).write_text(json.dumps(out, indent=2) + "\n")
     print(json.dumps(out, indent=2))
@@ -140,6 +192,7 @@ def main(argv=None) -> int:
           f"(adaptive compiles: {results['adaptive']['compiles']}, "
           f"recompiles after warmup: "
           f"{results['adaptive']['recompiles_after_warmup']})")
+    print(f"paged/dense session tokens/s = {paged_ratio:.3f}")
     return 0
 
 

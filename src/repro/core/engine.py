@@ -79,7 +79,8 @@ import numpy as np
 from jax import lax
 
 from ..configs.base import ModelConfig
-from ..models.kvcache import insert_slot
+from ..models.kvcache import (PagedAttnCache, insert_slot, paged_insert_row,
+                              paged_release_slot)
 from ..models.model import build_model
 from .specdec import (SpecDecodeOut, SpecDecodeState, draft_propose,
                       slot_stop_mask, spec_decode_step, verify_window,
@@ -420,6 +421,77 @@ class SpecDecodeEngine:
             return state, out_buf, cursor, max_new_buf, done
 
         jitted = jax.jit(insert, donate_argnums=(2, 3, 4, 5, 6))
+        self._jit_cache[keyt] = jitted
+        return jitted
+
+    def _insert_step_paged(self, capacity: int, slots: int, pad_len: int,
+                           d_nlog: int, t_nlog: int):
+        """Paged-session admission program: prefill one prompt into a DENSE
+        batch-1 row (``slots`` = the pool's logical length), then scatter
+        that row into the reserved pool blocks and point the slot's block
+        table at them (:func:`paged_insert_row`). Non-paged sides (e.g. an
+        SSM draft) insert dense as before. ``draft_blocks``/``target_blocks``
+        are traced (−1-padded, fixed widths ``d_nlog``/``t_nlog``; width 0
+        for an unpaged side), so any slot with any block reservation reuses
+        one XLA program — the zero-recompile invariant extends to paged
+        admission."""
+        keyt = ("insert-paged", capacity, slots, pad_len, d_nlog, t_nlog)
+        if keyt in self._jit_cache:
+            return self._jit_cache[keyt]
+
+        def insert(draft_params, target_params, state, out_buf, cursor,
+                   max_new_buf, done, prompt, plen, slot, req_max_new, key,
+                   draft_blocks, target_blocks):
+            one = self._prefill(prompt, slots, key, prompt_lens=plen,
+                                draft_params=draft_params,
+                                target_params=target_params)
+
+            def put(cache, row, blocks):
+                if isinstance(cache, PagedAttnCache):
+                    return paged_insert_row(cache, row, blocks, slot)
+                return insert_slot(cache, row, slot)
+
+            state = SpecDecodeState(
+                draft_cache=put(state.draft_cache, one.draft_cache,
+                                draft_blocks),
+                target_cache=put(state.target_cache, one.target_cache,
+                                 target_blocks),
+                last_token=state.last_token.at[slot].set(one.last_token[0]),
+                pos=state.pos.at[slot].set(one.pos[0]))
+            row = jnp.full((1, out_buf.shape[1]), -1, jnp.int32)
+            row = row.at[0, 0].set(one.last_token[0])
+            out_buf = lax.dynamic_update_index_in_dim(out_buf, row, slot, 0)
+            cursor = cursor.at[slot].set(1)
+            max_new_buf = max_new_buf.at[slot].set(req_max_new)
+            done = done.at[slot].set(False)
+            return state, out_buf, cursor, max_new_buf, done
+
+        jitted = jax.jit(insert, donate_argnums=(2, 3, 4, 5, 6))
+        self._jit_cache[keyt] = jitted
+        return jitted
+
+    def _release_step(self):
+        """Retirement program for paged sessions: scrub the slot's block
+        table rows to −1 so the frozen slot's ongoing (masked) speculative
+        window writes DROP instead of stomping blocks the allocator is
+        about to hand to the next request. Runs on the device stream before
+        any later insert can reuse the blocks. Dense caches pass through
+        untouched (their rows are fully overwritten at the next insert)."""
+        keyt = ("release",)
+        if keyt in self._jit_cache:
+            return self._jit_cache[keyt]
+
+        def release(state, slot):
+            def rel(cache):
+                if isinstance(cache, PagedAttnCache):
+                    return paged_release_slot(cache, slot)
+                return cache
+            return SpecDecodeState(draft_cache=rel(state.draft_cache),
+                                   target_cache=rel(state.target_cache),
+                                   last_token=state.last_token,
+                                   pos=state.pos)
+
+        jitted = jax.jit(release, donate_argnums=(0,))
         self._jit_cache[keyt] = jitted
         return jitted
 

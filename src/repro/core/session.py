@@ -42,7 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models.kvcache import reset_slot
+from ..models.kvcache import BlockAllocator, logical_blocks, reset_slot
 # fused-mode tokens stream edge-ward one control round trip per this many
 # committed tokens — the same amortization DSD-Sim's ``fused_chunk``
 # charges (one shared constant so sim and real paths cannot drift)
@@ -98,7 +98,24 @@ class DecodeSession:
                        accepts (requires a transport; γ is capped at
                        ``gamma_max − 1`` because one proposal slot is
                        reserved as the bonus-token guess the next window
-                       anchors on).
+                       anchors on),
+    ``paged``          attention-family sides store KV in a paged block
+                       pool (:class:`repro.models.kvcache.PagedAttnCache`)
+                       instead of dense per-slot rows: admission reserves
+                       only the blocks the request's ``prompt + budget +
+                       2γ`` footprint needs and retirement frees them, so
+                       pool bytes bound ADMITTED WORK, not
+                       capacity × worst-case length. Greedy committed
+                       tokens are bit-identical to the dense layout
+                       (``kv_quantize=False``),
+    ``kv_block_size``  positions per pool block,
+    ``kv_pool_blocks`` physical blocks per pool (int, or
+                       ``{"draft": n, "target": m}``); ``None`` sizes the
+                       pool at full dense parity — no memory saving, used
+                       by the bit-identity tests,
+    ``kv_quantize``    int8 per-entry K/V with f32 scales (≈4× fewer pool
+                       bytes, approximate attention — see README
+                       “Memory & capacity”).
     """
 
     def __init__(self, engine, capacity: int, max_new_cap: int,
@@ -107,7 +124,10 @@ class DecodeSession:
                  sync_every: Optional[int] = None,
                  eos_id: int = -1, key: Optional[jax.Array] = None,
                  log_gamma: bool = True, transport=None,
-                 mode_policy: str = "auto", pair_key: str = "engine"):
+                 mode_policy: str = "auto", pair_key: str = "engine",
+                 paged: bool = False, kv_block_size: int = 16,
+                 kv_pool_blocks: Optional[int] = None,
+                 kv_quantize: bool = False):
         self.engine = engine
         self.capacity = int(capacity)
         self.max_new_cap = int(max_new_cap)
@@ -138,6 +158,22 @@ class DecodeSession:
         # deployment sharing one policy object still gets one stabilizer
         # per draft–target pair
         self.pair_key = str(pair_key)
+
+        # ---- paged KV slot pool (models/kvcache.PagedAttnCache) ---------
+        self.paged = bool(paged)
+        self.kv_block_size = int(kv_block_size)
+        self.kv_pool_blocks = kv_pool_blocks
+        self.kv_quantize = bool(kv_quantize)
+        self._paged_sides = {
+            "draft": engine.draft_cfg.arch_type in ("dense", "moe"),
+            "target": engine.target_cfg.arch_type in ("dense", "moe")}
+        if self.paged:
+            assert any(self._paged_sides.values()), \
+                "paged sessions need at least one attention-family side " \
+                "(recurrent state has no positions to page)"
+        self._alloc: dict[str, Optional[BlockAllocator]] = {
+            "draft": None, "target": None}
+        self._slot_blocks: list[Optional[dict]] = [None] * self.capacity
 
         self.slots_len = (None if self.max_prompt_len is None
                           else self._cache_len(self.max_prompt_len))
@@ -187,6 +223,50 @@ class DecodeSession:
         # jit keys line up; pos_map masking makes the headroom free).
         return prompt_len + self.max_new_cap + 2 * self.gamma_max + 18
 
+    def _n_logical(self) -> int:
+        """Block-table width: logical blocks covering one slot's length."""
+        return logical_blocks(self.slots_len, self.kv_block_size)
+
+    def blocks_needed(self, prompt_len: int, max_new: int) -> int:
+        """Blocks one request must reserve on each paged side: its prompt
+        + clamped budget + speculative-window overhang (2γ covers the
+        pipelined optimistic window; +2 the correction/bonus tokens).
+        Writes past the reservation are stale speculation by construction
+        and DROP harmlessly (models/kvcache.py)."""
+        need = min(self.slots_len,
+                   int(prompt_len) + min(int(max_new), self.max_new_cap)
+                   + 2 * self.gamma_max + 2)
+        return logical_blocks(need, self.kv_block_size)
+
+    def _pool_blocks(self, side: str) -> int:
+        n = self.kv_pool_blocks
+        if isinstance(n, dict):
+            n = n.get(side)
+        # default: full dense parity (capacity × per-slot blocks) — no
+        # memory saving, but functionally identical; benches size it down
+        return int(n) if n else self.capacity * self._n_logical()
+
+    def free_kv_blocks(self) -> Optional[int]:
+        """Min free blocks across paged sides (None for dense sessions)."""
+        if not self.paged:
+            return None
+        self._ensure_state()
+        return min(a.free_blocks for a in self._alloc.values()
+                   if a is not None)
+
+    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+        """True when a free slot AND (paged) every side's reservation fits.
+        The block-aware admission predicate serving uses instead of plain
+        free-slot counting."""
+        if not self.free:
+            return False
+        if not self.paged:
+            return True
+        self._ensure_state()
+        need = self.blocks_needed(prompt_len, max_new)
+        return all(a is None or a.free_blocks >= need
+                   for a in self._alloc.values())
+
     def _init_buffers(self) -> None:
         B = self.capacity
         self._out_buf = jnp.full((B, self.max_new_cap), -1, jnp.int32)
@@ -207,9 +287,18 @@ class DecodeSession:
             assert cfg.arch_type not in ("vlm", "encdec"), \
                 "per-slot admission needs a frontend-free arch; use " \
                 "admit_batch for vlm/encdec waves"
+        def make_cache(model, side):
+            if self.paged and self._paged_sides[side]:
+                n_blocks = self._pool_blocks(side)
+                self._alloc[side] = BlockAllocator(n_blocks)
+                return model.init_paged_cache(
+                    self.capacity, self.slots_len, n_blocks,
+                    self.kv_block_size, quantize=self.kv_quantize)
+            return model.init_cache(self.capacity, self.slots_len)
+
         self._state = _canon(SpecDecodeState(
-            draft_cache=eng.draft.init_cache(self.capacity, self.slots_len),
-            target_cache=eng.target.init_cache(self.capacity, self.slots_len),
+            draft_cache=make_cache(eng.draft, "draft"),
+            target_cache=make_cache(eng.target, "target"),
             last_token=jnp.zeros((self.capacity,), jnp.int32),
             pos=jnp.zeros((self.capacity,), jnp.int32)))
         self._init_buffers()
@@ -256,6 +345,9 @@ class DecodeSession:
         assert self._state is None and not self.occupied, \
             "admit_batch only fills a fresh session; use admit() for " \
             "in-flight admission"
+        assert not self.paged, \
+            "paged sessions admit per-slot (block reservations are " \
+            "per-request); use admit()"
         prompts = jnp.asarray(prompts, jnp.int32)
         B, S = prompts.shape
         assert B == self.capacity, (B, self.capacity)
@@ -313,20 +405,58 @@ class DecodeSession:
         padded = np.zeros((1, P), np.int32)
         padded[0, :prompt.size] = prompt
         budget = min(int(max_new), self.max_new_cap)
-        insert = self.engine._insert_step(self.capacity, self.slots_len, P)
         self._key, kk = jax.random.split(self._key)
-        (self._state, self._out_buf, self._cursor, self._max_new,
-         self._done) = insert(
-            self.engine.draft_params, self.engine.target_params,
-            self._state, self._out_buf, self._cursor, self._max_new,
-            self._done, jnp.asarray(padded),
-            jnp.asarray([prompt.size], jnp.int32),
-            jnp.asarray(j, jnp.int32), jnp.asarray(budget, jnp.int32), kk)
+        args = (self.engine.draft_params, self.engine.target_params,
+                self._state, self._out_buf, self._cursor, self._max_new,
+                self._done, jnp.asarray(padded),
+                jnp.asarray([prompt.size], jnp.int32),
+                jnp.asarray(j, jnp.int32), jnp.asarray(budget, jnp.int32),
+                kk)
+        if self.paged:
+            blocks = self._reserve_blocks(prompt.size, budget)
+            insert = self.engine._insert_step_paged(
+                self.capacity, self.slots_len, P,
+                blocks["draft"].shape[0], blocks["target"].shape[0])
+            (self._state, self._out_buf, self._cursor, self._max_new,
+             self._done) = insert(*args, jnp.asarray(blocks["draft"]),
+                                  jnp.asarray(blocks["target"]))
+            self._slot_blocks[j] = {
+                s: [int(i) for i in ids if i >= 0]
+                for s, ids in blocks.items() if ids.size}
+        else:
+            insert = self.engine._insert_step(self.capacity, self.slots_len,
+                                              P)
+            (self._state, self._out_buf, self._cursor, self._max_new,
+             self._done) = insert(*args)
         if block:
             jax.block_until_ready(self._cursor)
         self._slots[j] = SlotRecord(request_id=request_id, max_new=budget,
                                     admit_it=self.iterations)
         return j
+
+    def _reserve_blocks(self, prompt_len: int, budget: int
+                        ) -> dict[str, np.ndarray]:
+        """Reserve each paged side's blocks for one admission, all-or-
+        nothing (checks both sides before allocating either, so a shortfall
+        never leaks a half-reservation). Returns per-side block-id rows
+        padded to the full table width with −1 (unreserved tail)."""
+        need = self.blocks_needed(prompt_len, budget)
+        n_log = self._n_logical()
+        for side, a in self._alloc.items():
+            if a is not None and a.free_blocks < need:
+                raise RuntimeError(
+                    f"insufficient free KV blocks on {side}: need {need}, "
+                    f"{a.free_blocks} free of {a.n_blocks} — retire "
+                    f"finished requests or grow kv_pool_blocks")
+        out = {}
+        for side, a in self._alloc.items():
+            if a is None:
+                out[side] = np.zeros((0,), np.int32)
+                continue
+            row = np.full((n_log,), -1, np.int32)
+            row[:need] = a.alloc(need)
+            out[side] = row
+        return out
 
     # -------------------------------------------------------------- decode
 
@@ -931,6 +1061,16 @@ class DecodeSession:
         n = min(rec.produced, self.max_new_cap)
         tokens = np.asarray(self._out_buf[slot])[:n].astype(np.int64)
         self._slots[slot] = None
+        if self.paged and self._slot_blocks[slot] is not None:
+            # unmap BEFORE freeing: the frozen slot still writes its masked
+            # speculative window every step, and the device stream orders
+            # this release ahead of any later insert that reuses the blocks
+            # (see models/kvcache.py module docstring)
+            release = self.engine._release_step()
+            self._state = release(self._state, jnp.asarray(slot, jnp.int32))
+            for side, ids in self._slot_blocks[slot].items():
+                self._alloc[side].free(ids)
+            self._slot_blocks[slot] = None
         if scrub:
             self._state = reset_slot(self._state, slot)
         return tokens, rec

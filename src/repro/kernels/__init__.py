@@ -5,7 +5,19 @@
 - ssd          — Mamba2/SSD chunked scan
 """
 
+import jax as _jax
 from jax.experimental.pallas import tpu as _pltpu
+
+
+def default_interpret() -> bool:
+    """Resolve the kernels' shared ``interpret=None`` auto-default: compile
+    for real on TPU backends, fall back to the Pallas interpreter on CPU/GPU
+    (where Mosaic can't lower). Callers override per-call for A/B tests."""
+    return _jax.default_backend() != "tpu"
+
+
+def resolve_interpret(flag) -> bool:
+    return default_interpret() if flag is None else bool(flag)
 
 
 def tpu_compiler_params(**kwargs):

@@ -1,2 +1,3 @@
 from .ops import decode_attention
+from .paged import paged_decode_attention
 from .ref import decode_attention_reference

@@ -27,7 +27,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
-from .. import tpu_compiler_params
+from typing import Optional
+
+from .. import resolve_interpret, tpu_compiler_params
 
 S_TILE = 512
 NEG_INF = -1e30
@@ -92,7 +94,8 @@ def decode_attn_call(q: jax.Array,        # (B, T, Hkv, G, hd)
                      q_pos: jax.Array,    # (B, T)
                      window: int = 0,
                      s_tile: int = S_TILE,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: Optional[bool] = None) -> jax.Array:
+    interpret = resolve_interpret(interpret)  # None → compiled on TPU only
     B, T, Hkv, G, hd = q.shape
     S = k.shape[1]
     s_tile = min(s_tile, S)

@@ -4,6 +4,7 @@ padding to the sequence tile, static window/shape handling."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -11,14 +12,16 @@ import jax.numpy as jnp
 from .decode_attn import S_TILE, decode_attn_call
 
 
-@functools.partial(jax.jit, static_argnames=("window", "s_tile"))
+@functools.partial(jax.jit,
+                   static_argnames=("window", "s_tile", "interpret"))
 def decode_attention(q: jax.Array,        # (B, T, H, hd)
                      k: jax.Array,        # (B, S, Hkv, hd)
                      v: jax.Array,
                      pos_map: jax.Array,  # (B, S)
                      q_pos: jax.Array,    # (B, T)
                      window: int = 0,
-                     s_tile: int = S_TILE) -> jax.Array:
+                     s_tile: int = S_TILE,
+                     interpret: Optional[bool] = None) -> jax.Array:
     B, T, H, hd = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     G = H // Hkv
@@ -30,5 +33,5 @@ def decode_attention(q: jax.Array,        # (B, T, H, hd)
         pos_map = jnp.pad(pos_map, ((0, 0), (0, pad)), constant_values=-1)
     qg = q.reshape(B, T, Hkv, G, hd)
     out = decode_attn_call(qg, k, v, pos_map, q_pos, window=window,
-                           s_tile=tile)
+                           s_tile=tile, interpret=interpret)
     return out.reshape(B, T, H, hd)

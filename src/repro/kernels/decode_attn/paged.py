@@ -1,0 +1,168 @@
+"""Pallas TPU paged flash-decode kernel: the block-table gather fused into
+the decode grid.
+
+Same online-softmax flash-decode as decode_attn.py, but K/V live in a
+shared paged pool (n_blocks, block_size, Hkv, hd) and each sequence reads
+only its own mapped blocks: the grid's sequential dimension walks the
+sequence's LOGICAL block list ``0..n_log-1`` and a
+``PrefetchScalarGridSpec`` scalar-prefetched block table indirects the K/V
+BlockSpec index maps to the physical block — ``(tbl[b, i], 0, h, 0)`` —
+so paging costs zero extra HBM traffic on the hot path (no dense gather
+materializes; each pool block streams HBM→VMEM exactly once per kv-head,
+identical to the dense kernel's tile traffic).
+
+Unmapped table entries (−1) clamp to block 0 for the prefetch and are
+masked out wholesale in-kernel (``phys < 0``), exactly like a dense empty
+slot; ``pos_map`` masking (speculative-rollback stale entries, sliding
+window) carries over unchanged. int8 pools dequantize in VMEM from the
+per-entry scales streamed alongside the blocks.
+
+The dense kernel (decode_attn.py) + the XLA gather path
+(models/kvcache.gather_layer_paged) stay as the reference oracles.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .. import resolve_interpret
+from .decode_attn import NEG_INF
+
+
+def _paged_decode_kernel(tbl_ref, qpos_ref, q_ref, k_ref, v_ref, pm_ref,
+                         *rest, window: int, scale: float, length: int,
+                         bs: int, quant: bool):
+    """Grid (B, Hkv, n_log) — last dim sequential over the slot's logical
+    block list (online softmax).
+
+    tbl (scalar prefetch): (B, n_log) | qpos: (1, T) | q: (1, T, 1, G, hd)
+    k,v: (1, bs, 1, hd) — the PHYSICAL block tbl[b, i] | pm: (1, bs)
+    [quant: ks,vs (1, bs, 1)] | out: (1, T, 1, G, hd)
+    scratch: m,l (T, G) f32; acc (T, G, hd) f32.
+    """
+    if quant:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    phys = tbl_ref[b, i]                                # −1 = unmapped
+    q = q_ref[0, :, 0, :, :].astype(jnp.float32)        # (T, G, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)           # (bs, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    if quant:
+        k = k * ks_ref[0, :, 0][:, None]
+        v = v * vs_ref[0, :, 0][:, None]
+    pm = pm_ref[0, :]                                   # (bs,)
+    qpos = qpos_ref[0, :]                               # (T,)
+
+    T, G, hd = q.shape
+    scores = jax.lax.dot_general(
+        q.reshape(T * G, hd), k,
+        (((1,), (1,)), ((), ()))).reshape(T, G, -1) * scale   # (T, G, bs)
+
+    # logical positions this block covers; past-length tail of the last
+    # block is padding
+    j = i * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)  # (1, bs)
+    valid = (phys >= 0) & (j < length) & (pm[None, :] >= 0) & \
+        (pm[None, :] <= qpos[:, None])                            # (T, bs)
+    if window > 0:
+        valid = valid & (pm[None, :] > qpos[:, None] - window)
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1))    # (T, G)
+    alpha = jnp.exp(m_prev - m_new)
+    e = jnp.exp(scores - m_new[..., None])              # (T, G, bs)
+    e = jnp.where(valid[:, None, :], e, 0.0)
+    l_scr[...] = l_scr[...] * alpha + e.sum(axis=-1)
+    pv = jax.lax.dot_general(
+        e.reshape(T * G, -1), v,
+        (((1,), (0,)), ((), ()))).reshape(T, G, hd)
+    acc_scr[...] = acc_scr[...] * alpha[..., None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(i == pl.num_programs(2) - 1)
+    def _done():
+        l = l_scr[...]
+        out = jnp.where(l[..., None] > 0, acc_scr[...] / jnp.maximum(
+            l[..., None], 1e-20), 0.0)
+        o_ref[0, :, 0, :, :] = out.astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array,            # (B, T, Hkv, G, hd)
+                           k_pool: jax.Array,       # (NB, bs, Hkv, hd)
+                           v_pool: jax.Array,
+                           k_scale: Optional[jax.Array],  # (NB, bs, Hkv)
+                           v_scale: Optional[jax.Array],
+                           pos_map: jax.Array,      # (NB, bs)
+                           block_table: jax.Array,  # (B, n_log) int32
+                           q_pos: jax.Array,        # (B, T)
+                           length: int,
+                           window: int = 0,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Fused paged GQA flash-decode over ONE layer's pool view. Returns the
+    attention context (B, T, Hkv, G, hd) in ``q.dtype`` (the wo projection
+    stays outside, in models/attention.py)."""
+    interpret = resolve_interpret(interpret)
+    B, T, Hkv, G, hd = q.shape
+    bs = k_pool.shape[1]
+    n_log = block_table.shape[1]
+    quant = k_scale is not None
+
+    # unmapped (−1) prefetches clamp to block 0; the kernel masks it out
+    def blk(b, h, i, tbl):
+        return (jnp.maximum(tbl[b, i], 0), 0, h, 0)
+
+    def blk_pm(b, h, i, tbl):
+        return (jnp.maximum(tbl[b, i], 0), 0)
+
+    def blk_scale(b, h, i, tbl):
+        return (jnp.maximum(tbl[b, i], 0), 0, h)
+
+    in_specs = [
+        pl.BlockSpec((1, T), lambda b, h, i, tbl: (b, 0)),
+        pl.BlockSpec((1, T, 1, G, hd), lambda b, h, i, tbl: (b, 0, h, 0, 0)),
+        pl.BlockSpec((1, bs, 1, hd), blk),
+        pl.BlockSpec((1, bs, 1, hd), blk),
+        pl.BlockSpec((1, bs), blk_pm),
+    ]
+    inputs = [q_pos, q, k_pool, v_pool, pos_map]
+    if quant:
+        in_specs += [pl.BlockSpec((1, bs, 1), blk_scale),
+                     pl.BlockSpec((1, bs, 1), blk_scale)]
+        inputs += [k_scale, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, n_log),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, T, 1, G, hd),
+                               lambda b, h, i, tbl: (b, 0, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((T, G), jnp.float32),
+                        pltpu.VMEM((T, G), jnp.float32),
+                        pltpu.VMEM((T, G, hd), jnp.float32)],
+    )
+    kern = functools.partial(_paged_decode_kernel, window=window,
+                             scale=1.0 / math.sqrt(hd), length=length,
+                             bs=bs, quant=quant)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, Hkv, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, *inputs)

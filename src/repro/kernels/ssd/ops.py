@@ -11,8 +11,9 @@ import jax.numpy as jnp
 from .ssd import CHUNK, ssd_call
 
 
-@functools.partial(jax.jit, static_argnames=("chunk",))
-def ssd_chunked_kernel(x, Bm, Cm, dt, A, h_in, chunk: int = CHUNK):
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_kernel(x, Bm, Cm, dt, A, h_in, chunk: int = CHUNK,
+                       interpret=None):
     """Same contract as models.ssm.ssd_chunked: padded dt rows must be zero
     (identity steps) — ssm_block_train guarantees this."""
     B, S, nh, hd = x.shape
@@ -22,5 +23,6 @@ def ssd_chunked_kernel(x, Bm, Cm, dt, A, h_in, chunk: int = CHUNK):
         Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
         Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
-    y, h = ssd_call(x, Bm, Cm, dt, A, h_in, chunk=chunk)
+    y, h = ssd_call(x, Bm, Cm, dt, A, h_in, chunk=chunk,
+                    interpret=interpret)
     return y[:, :S], h

@@ -80,7 +80,9 @@ def ssd_call(x: jax.Array,    # (B, S, nh, hd)
              A: jax.Array,    # (nh,)
              h_in: jax.Array, # (B, nh, hd, N) f32
              chunk: int = CHUNK,
-             interpret: bool = True):
+             interpret=None):
+    from .. import resolve_interpret
+    interpret = resolve_interpret(interpret)  # None → compiled on TPU only
     B, S, nh, hd = x.shape
     N = Bm.shape[-1]
     assert S % chunk == 0, "ops.py pads the sequence to the chunk size"

@@ -12,14 +12,15 @@ from .verify import VOCAB_TILE, cdf_sample_call, gather_reduce_call
 from .ref import VerifyOut
 
 
-@functools.partial(jax.jit, static_argnames=("tile",))
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def verify_window_fused(draft_tokens: jax.Array,   # (B, γ) int32
                         q_probs: jax.Array,        # (B, γ, V)
                         p_probs: jax.Array,        # (B, γ+1, V)
                         u: jax.Array,              # (B, γ)
                         r: jax.Array,              # (B,)
                         tile: int = VOCAB_TILE,
-                        eps: float = 1e-12) -> VerifyOut:
+                        eps: float = 1e-12,
+                        interpret=None) -> VerifyOut:
     B, gamma = draft_tokens.shape
     V = p_probs.shape[-1]
     pad = (-V) % tile
@@ -28,7 +29,7 @@ def verify_window_fused(draft_tokens: jax.Array,   # (B, γ) int32
         q_probs = jnp.pad(q_probs, ((0, 0), (0, 0), (0, pad)))
 
     p_at, q_at, mass = gather_reduce_call(draft_tokens, p_probs, q_probs,
-                                          tile)
+                                          tile, interpret=interpret)
 
     accept = u < jnp.minimum(1.0, p_at / jnp.maximum(q_at, 1e-20))
     prefix = jnp.cumprod(accept.astype(jnp.int32), axis=-1)
@@ -45,7 +46,7 @@ def verify_window_fused(draft_tokens: jax.Array,   # (B, γ) int32
     thresh = (r * total)[:, None].astype(jnp.float32)
 
     token = cdf_sample_call(jrow, qrow, use_p, p_probs, q_probs, thresh,
-                            tile)[:, 0]
+                            tile, interpret=interpret)[:, 0]
     token = jnp.minimum(token, V - 1)           # strip vocab padding
     return VerifyOut(n_accepted=n_acc.astype(jnp.int32),
                      next_token=token.astype(jnp.int32),

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
-from .. import tpu_compiler_params
+from .. import resolve_interpret, tpu_compiler_params
 
 VOCAB_TILE = 512
 
@@ -108,7 +108,9 @@ def cdf_sample_kernel(jrow_ref, qrow_ref, use_p_ref,     # scalar prefetch
                                     found[0, 0])
 
 
-def gather_reduce_call(tokens, p, q, tile: int = VOCAB_TILE):
+def gather_reduce_call(tokens, p, q, tile: int = VOCAB_TILE,
+                       interpret=None):
+    interpret = resolve_interpret(interpret)  # None → compiled on TPU only
     B, gamma = tokens.shape
     V = p.shape[-1]
     assert V % tile == 0, "ops.py pads the vocab to the tile size"
@@ -130,11 +132,13 @@ def gather_reduce_call(tokens, p, q, tile: int = VOCAB_TILE):
         scratch_shapes=[pltpu.VMEM((gamma,), jnp.float32)] * 3,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
-        interpret=True,
+        interpret=interpret,
     )(tokens, p, q)
 
 
-def cdf_sample_call(jrow, qrow, use_p, p, q, thresh, tile: int = VOCAB_TILE):
+def cdf_sample_call(jrow, qrow, use_p, p, q, thresh, tile: int = VOCAB_TILE,
+                    interpret=None):
+    interpret = resolve_interpret(interpret)
     B = jrow.shape[0]
     V = p.shape[-1]
     assert V % tile == 0
@@ -154,5 +158,5 @@ def cdf_sample_call(jrow, qrow, use_p, p, q, thresh, tile: int = VOCAB_TILE):
         cdf_sample_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
-        interpret=True,
+        interpret=interpret,
     )(jrow, qrow, use_p, p, q, thresh)

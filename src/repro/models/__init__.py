@@ -1,4 +1,6 @@
 """Model zoo — dense / MoE / SSM / hybrid / enc-dec / VLM, all JAX."""
 
 from .model import Model, build_model
-from .kvcache import AttnCache, SSMCache, init_attn_cache, init_ssm_cache
+from .kvcache import (AttnCache, BlockAllocator, PagedAttnCache, SSMCache,
+                      init_attn_cache, init_paged_attn_cache,
+                      init_ssm_cache)

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from .layers import apply_rope, causal_mask, dense_init, rms_norm
-from .kvcache import update_layer_cache
+from .kvcache import (gather_layer_paged, paged_update_layer,
+                      update_layer_cache)
 from ..sharding.runtime import constrain_qkv
 
 
@@ -187,10 +188,23 @@ def attention_decode(x_new: jax.Array, p: dict, cfg: ModelConfig,
         k_cache, v_cache, pos_map, k_new, v_new, pos, ring,
         uniform_pos=uniform_pos)
 
-    # decode is memory-bound and has no backward: use the GROUPED einsum so
-    # the KV cache is read once per kv-head, not G x via repeat (the 4-D
-    # repeat form serves the training path's GSPMD-friendly backward; the
-    # TPU serving kernel kernels/decode_attn implements the same grouping)
+    out = _attend_cached(q, k_cache, v_cache, pos_map, abs_pos, window,
+                         p["wo"], x_new.dtype)
+    return out, k_cache, v_cache, pos_map
+
+
+def _attend_cached(q, k_cache, v_cache, pos_map, abs_pos, window, wo,
+                   out_dtype):
+    """Attend rope'd queries (B,T,H,hd) over a position-ordered cache view
+    (B,S,Hkv,hd) + pos_map (B,S). Shared by the dense and paged decode
+    paths — the paged path gathers its pool into exactly this view, so both
+    run the identical einsum/mask/softmax program (bit-identical on equal
+    values).
+
+    decode is memory-bound and has no backward: use the GROUPED einsum so
+    the KV cache is read once per kv-head, not G x via repeat (the 4-D
+    repeat form serves the training path's GSPMD-friendly backward; the
+    TPU serving kernel kernels/decode_attn implements the same grouping)."""
     B_, T_, H_, hd_ = q.shape
     Hkv_ = k_cache.shape[2]
     G_ = H_ // Hkv_
@@ -206,8 +220,57 @@ def attention_decode(x_new: jax.Array, p: dict, cfg: ModelConfig,
     if window > 0:
         valid = valid & (slot_pos > q_pos - window)
     scores = jnp.where(valid, scores, -jnp.inf)
-    weights = jax.nn.softmax(scores, axis=-1).astype(x_new.dtype)
+    weights = jax.nn.softmax(scores, axis=-1).astype(out_dtype)
     ctx = jnp.einsum("bkgts,bskh->btkgh", weights, v_cache)
     ctx = ctx.reshape(B_, T_, H_, hd_)
-    out = jnp.einsum("bthk,hkd->btd", ctx, p["wo"])
-    return out, k_cache, v_cache, pos_map
+    return jnp.einsum("bthk,hkd->btd", ctx, wo)
+
+
+def attention_decode_paged(x_new: jax.Array, p: dict, cfg: ModelConfig,
+                           k_pool: jax.Array, v_pool: jax.Array,
+                           k_scale, v_scale, pos_map: jax.Array,
+                           block_table: jax.Array, pos: jax.Array,
+                           ring: bool, length: int, window: int = 0,
+                           use_kernel: Optional[bool] = None):
+    """Paged decode/verify step: write the (B,T) window into the block pool
+    through the slot block tables, then attend over the slot's mapped
+    blocks. Single-layer pool views: k/v (NB, bs, Hkv, hd), pos_map
+    (NB, bs); block_table (B, n_log) is shared across layers and NOT
+    updated here.
+
+    Identical masking semantics to :func:`attention_decode` — the fp pool
+    is bit-identical to a dense cache of size ``length`` (int8 pools are
+    approximate by construction). ``use_kernel=None`` auto-selects the
+    fused Pallas paged kernel on TPU backends and the XLA gather path
+    elsewhere. Returns (out, k_pool, v_pool, k_scale, v_scale, pos_map).
+    """
+    B, T, _ = x_new.shape
+    abs_pos = pos[:, None] + jnp.arange(T)[None, :]            # (B, T)
+    q = apply_rope(_project_q(x_new, p, cfg), abs_pos, cfg.rope_theta)
+    k_new, v_new = _project_kv(x_new, p, cfg)
+    k_new = apply_rope(k_new, abs_pos, cfg.rope_theta)
+    k_pool, v_pool, k_scale, v_scale, pos_map = paged_update_layer(
+        k_pool, v_pool, k_scale, v_scale, pos_map, block_table,
+        k_new, v_new, pos, ring, length)
+
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        # fused path: the kernel grid walks each slot's block list via
+        # scalar-prefetch indirection — no dense gather materializes
+        from ..kernels.decode_attn.paged import paged_decode_attention
+        B_, T_, H_, hd_ = q.shape
+        Hkv_ = k_pool.shape[2]
+        qg = q.reshape(B_, T_, Hkv_, H_ // Hkv_, hd_)
+        ctx = paged_decode_attention(qg, k_pool, v_pool, k_scale, v_scale,
+                                     pos_map, block_table, abs_pos,
+                                     length=length, window=window)
+        ctx = ctx.astype(x_new.dtype).reshape(B_, T_, H_, hd_)
+        out = jnp.einsum("bthk,hkd->btd", ctx, p["wo"])
+    else:
+        k_d, v_d, pm_d = gather_layer_paged(
+            k_pool, v_pool, k_scale, v_scale, pos_map, block_table,
+            length, x_new.dtype)
+        out = _attend_cached(q, k_d, v_d, pm_d, abs_pos, window, p["wo"],
+                             x_new.dtype)
+    return out, k_pool, v_pool, k_scale, v_scale, pos_map

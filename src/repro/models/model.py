@@ -35,10 +35,12 @@ from jax import lax
 from ..configs.base import ModelConfig
 from .layers import dense_init, dtype_of, rms_norm, swiglu
 from .attention import (attention_bidir, attention_cross, attention_decode,
-                        attention_train, cross_kv, init_attn_params)
+                        attention_decode_paged, attention_train, cross_kv,
+                        init_attn_params)
 from .moe import init_moe_params, moe_block
 from .ssm import SSDState, init_ssm_params, ssm_block_decode, ssm_block_train
-from .kvcache import (AttnCache, SSMCache, init_attn_cache, init_ssm_cache)
+from .kvcache import (AttnCache, PagedAttnCache, SSMCache, init_attn_cache,
+                      init_paged_attn_cache, init_ssm_cache)
 from ..sharding.runtime import (constrain, constrain_head_in,
                                 constrain_logits)
 
@@ -308,6 +310,21 @@ class Model:
                                    cfg.n_kv_heads, cfg.head_dim), dt))
         raise ValueError(cfg.arch_type)
 
+    def init_paged_cache(self, batch: int, length: int, n_blocks: int,
+                         block_size: int, quantize: bool = False,
+                         ring: bool = False) -> PagedAttnCache:
+        """Paged serving cache: shared (L, n_blocks, block_size, Hkv, hd)
+        pool + (batch, ceil(length/block_size)) block tables. Attention
+        families only (dense/moe); recurrent state has no positions to
+        page."""
+        cfg, dt = self.cfg, self.dtype
+        assert cfg.arch_type in ("dense", "moe"), (
+            f"paged KV supports dense/moe, not {cfg.arch_type}")
+        return init_paged_attn_cache(cfg.n_layers, batch, length, n_blocks,
+                                     block_size, cfg.n_kv_heads,
+                                     cfg.head_dim, dt, quantize=quantize,
+                                     ring=ring)
+
     # ------------------------------------------------------- decode / verify
 
     def decode_step(self, params, token: jax.Array, cache, pos: jax.Array,
@@ -334,6 +351,41 @@ class Model:
         B, T = tokens.shape
         h = params["embed"][tokens]
         w = window or 0
+
+        if isinstance(cache, PagedAttnCache):
+            # block_table is shared by all layers: closed over, not scanned
+            bt, ring_, length_ = cache.block_table, cache.ring, cache.length
+            if cache.quantized:
+                def player(h, inp):
+                    lp, kc, vc, ks, vs, pm = inp
+                    a, kc, vc, ks, vs, pm = attention_decode_paged(
+                        rms_norm(h, lp["ln1"], cfg.norm_eps), lp["attn"],
+                        cfg, kc, vc, ks, vs, pm, bt, pos, ring_, length_, w)
+                    h = h + a
+                    h, _ = self._mlp_or_moe(lp, h)
+                    return h, (kc, vc, ks, vs, pm)
+
+                h, (k, v, ks, vs, pm) = lax.scan(
+                    player, h, (params["layers"], cache.k, cache.v,
+                                cache.k_scale, cache.v_scale, cache.pos_map))
+                new_cache = cache.replace(k=k, v=v, k_scale=ks, v_scale=vs,
+                                          pos_map=pm)
+            else:
+                def player(h, inp):
+                    lp, kc, vc, pm = inp
+                    a, kc, vc, _, _, pm = attention_decode_paged(
+                        rms_norm(h, lp["ln1"], cfg.norm_eps), lp["attn"],
+                        cfg, kc, vc, None, None, pm, bt, pos, ring_,
+                        length_, w)
+                    h = h + a
+                    h, _ = self._mlp_or_moe(lp, h)
+                    return h, (kc, vc, pm)
+
+                h, (k, v, pm) = lax.scan(
+                    player, h,
+                    (params["layers"], cache.k, cache.v, cache.pos_map))
+                new_cache = cache.replace(k=k, v=v, pos_map=pm)
+            return self._logits(params, h), new_cache
 
         if cfg.arch_type in ("dense", "vlm", "moe"):
             def layer(h, inp):
@@ -482,6 +534,13 @@ class Model:
         (B, chunk, V) — serving needs just the anchor position."""
         cfg = self.cfg
         B, S = tokens.shape
+        if cfg.arch_type != "ssm" and not ring and slots < S:
+            # overflow writes are DROPPED, not clamped (models/kvcache.py):
+            # refuse the geometry up front instead of silently losing the
+            # prompt tail
+            raise ValueError(
+                f"prompt length {S} exceeds cache slots {slots}: size the "
+                f"cache >= prompt + decode budget (or use a ring cache)")
         cache = self.init_cache(B, slots, ring=ring,
                                 enc_frames=(frontend.shape[1]
                                             if frontend is not None and

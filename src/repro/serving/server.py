@@ -7,7 +7,10 @@ with TOPOLOGY-FIRST multi-pair routing.
 optional transport (its edge–cloud link) and a mode policy, and runs its
 own slot-based decode session. Requests are admitted into free slots the
 moment they have arrived and a slot is open (admission policy mirroring
-``sim/policies.py`` — FIFO or length-aware LAB within the chosen pair),
+``sim/policies.py`` — FIFO or length-aware LAB within the chosen pair;
+with ``ServerConfig.paged_kv`` admission is additionally block-aware: a
+request enters only when every paged side has enough free KV blocks for
+its prompt + decode budget, otherwise it waits for retirements),
 routed across pairs by a pluggable :class:`PairRouter` (least-loaded by
 default; routing is STICKY — a request never migrates off the pair that
 admitted it). Decode proceeds in ``sync_every``-iteration chunks per pair
@@ -102,6 +105,12 @@ class ServerConfig:
                                            # implicit pair's Transport
     mode_policy: str = "auto"              # legacy one-pair surface: the
                                            # implicit pair's mode policy
+    paged_kv: bool = False       # paged block-pool KV cache per pair
+    kv_block_size: int = 16      # positions per KV block (paged only)
+    kv_pool_blocks: Optional[object] = None  # pool size: int, or dict
+                                             # {"draft": n, "target": n};
+                                             # None = dense-parity sizing
+    kv_quantize: bool = False    # int8 per-entry KV quantization (paged)
 
 
 # -- pair routing ------------------------------------------------------------
@@ -238,7 +247,11 @@ class SpecDecodeServer:
                              eos_id=self.cfg.eos_id, log_gamma=False,
                              transport=pair.transport,
                              mode_policy=pair.mode_policy,
-                             pair_key=pair.pair_id)
+                             pair_key=pair.pair_id,
+                             paged=self.cfg.paged_kv,
+                             kv_block_size=self.cfg.kv_block_size,
+                             kv_pool_blocks=self.cfg.kv_pool_blocks,
+                             kv_quantize=self.cfg.kv_quantize)
 
     def run(self) -> list[ServeResult]:
         """Drain the submitted stream; returns per-request results.
@@ -271,7 +284,15 @@ class SpecDecodeServer:
                 idx = self.router.route(arrived[0], self.pairs, frees)
                 if frees[idx] <= 0:
                     break
+                admitted_any = False
                 for r in self._select_admissions(arrived, frees[idx]):
+                    # block-aware admission: a paged session may have a free
+                    # slot but not enough free KV blocks for this request's
+                    # budget — skip it and let retirements free blocks
+                    # (can_admit == slot check for dense sessions)
+                    if not sessions[idx].can_admit(len(r.prompt),
+                                                   r.max_new_tokens):
+                        continue
                     admit_start = clock.now()
                     sessions[idx].admit(r.prompt, r.max_new_tokens,
                                         request_id=r.request_id)
@@ -280,6 +301,9 @@ class SpecDecodeServer:
                     pending.remove(r)
                     arrived.remove(r)
                     self._served[idx] += 1
+                    admitted_any = True
+                if not admitted_any:
+                    break  # no capacity progress — decode to free blocks
             if not any(s.occupied for s in sessions):
                 clock.wait_until(min(r.arrival_s for r in pending))
                 continue
@@ -331,6 +355,9 @@ class SpecDecodeServer:
                 "link_ms": round(sess.link_ms, 2),
                 "mode_policy": pair.mode_policy,
             }
+            fb = sess.free_kv_blocks()
+            if fb is not None:
+                d["free_kv_blocks"] = fb
             tr = pair.transport
             if tr is not None:
                 d.update(

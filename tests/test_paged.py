@@ -1,0 +1,423 @@
+"""Paged + quantized KV slot pool regression tests (models/kvcache.py,
+kernels/decode_attn/paged.py, core/session.py).
+
+The contract under test: an fp paged pool driven through block tables is
+BIT-identical to the dense layout at every level — primitive write/gather,
+the attention layer, and whole sessions under admission/retirement churn
+(including rejected speculation windows rolling back through the block
+table) — while admission reserves only each request's own block footprint.
+Overflow writes DROP (never clamp), the allocator never double-assigns a
+block, and the Pallas paged kernel matches the reference oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.session import DecodeSession
+from repro.core.window import StaticWindowPolicy
+from repro.models.attention import (attention_decode, attention_decode_paged,
+                                    init_attn_params)
+from repro.models.kvcache import (AttnCache, BlockAllocator,
+                                  gather_layer_paged, init_paged_attn_cache,
+                                  logical_blocks, paged_insert_row,
+                                  paged_release_slot, paged_update_layer,
+                                  quantize_kv, update_layer_cache)
+from repro.kernels.decode_attn.paged import paged_decode_attention
+from repro.kernels.decode_attn.ref import decode_attention_reference
+
+from conformance.scenarios import GAMMA, make_engine, make_noised_engine
+
+B, T, HKV, G, HD = 2, 3, 2, 2, 8
+
+
+def _dense_and_paged(length, bs, n_blocks, steps=4, ring=False, seed=0):
+    """Drive identical windows through a dense layer cache and a paged
+    pool; returns the dense triple and the paged pool pieces."""
+    rng = np.random.default_rng(seed)
+    kd = jnp.zeros((B, length, HKV, HD), jnp.float32)
+    vd = jnp.zeros_like(kd)
+    pmd = jnp.full((B, length), -1, jnp.int32)
+    kp = jnp.zeros((n_blocks, bs, HKV, HD), jnp.float32)
+    vp = jnp.zeros_like(kp)
+    pmp = jnp.full((n_blocks, bs), -1, jnp.int32)
+    alloc = BlockAllocator(n_blocks)
+    n_log = logical_blocks(length, bs)
+    tbl = jnp.array([alloc.alloc(n_log) for _ in range(B)], jnp.int32)
+    pos = jnp.array([0, 2], jnp.int32)
+    for _ in range(steps):
+        k_new = jnp.asarray(rng.normal(size=(B, T, HKV, HD)), jnp.float32)
+        v_new = jnp.asarray(rng.normal(size=(B, T, HKV, HD)), jnp.float32)
+        kd, vd, pmd = update_layer_cache(kd, vd, pmd, k_new, v_new, pos, ring)
+        kp, vp, _, _, pmp = paged_update_layer(
+            kp, vp, None, None, pmp, tbl, k_new, v_new, pos, ring, length)
+        pos = pos + T
+    return (kd, vd, pmd), (kp, vp, pmp, tbl), pos
+
+
+# ------------------------------------------------------------------ kvcache
+
+@pytest.mark.parametrize("length,bs", [(20, 4), (18, 4), (16, 7)])
+def test_paged_write_gather_bit_identical_dense(length, bs):
+    """Paged write → position-ordered gather reproduces the dense cache
+    bit-for-bit, including lengths that are not a block multiple."""
+    dense, paged, _ = _dense_and_paged(length, bs, n_blocks=16)
+    k_g, v_g, pm_g = gather_layer_paged(paged[0], paged[1], None, None,
+                                        paged[2], paged[3], length,
+                                        jnp.float32)
+    assert (np.asarray(k_g) == np.asarray(dense[0])).all()
+    assert (np.asarray(v_g) == np.asarray(dense[1])).all()
+    assert (np.asarray(pm_g) == np.asarray(dense[2])).all()
+
+
+def test_paged_ring_wraps_like_dense():
+    """Ring mode: logical slot = pos % length in both layouts (T=1 windows;
+    a window never straddles the ring seam in serving)."""
+    rng = np.random.default_rng(1)
+    length, bs = 8, 4
+    kd = jnp.zeros((B, length, HKV, HD), jnp.float32)
+    vd = jnp.zeros_like(kd)
+    pmd = jnp.full((B, length), -1, jnp.int32)
+    pool = init_paged_attn_cache(1, B, length, 8, bs, HKV, HD, jnp.float32,
+                                 ring=True)
+    alloc = BlockAllocator(8)
+    tbl = jnp.array([alloc.alloc(2) for _ in range(B)], jnp.int32)
+    kp, vp, pmp = pool.k[0], pool.v[0], pool.pos_map[0]
+    for step in range(13):                      # wraps past length
+        k_new = jnp.asarray(rng.normal(size=(B, 1, HKV, HD)), jnp.float32)
+        v_new = jnp.asarray(rng.normal(size=(B, 1, HKV, HD)), jnp.float32)
+        pos = jnp.full((B,), step, jnp.int32)
+        kd, vd, pmd = update_layer_cache(kd, vd, pmd, k_new, v_new, pos, True)
+        kp, vp, _, _, pmp = paged_update_layer(
+            kp, vp, None, None, pmp, tbl, k_new, v_new, pos, True, length)
+    k_g, _, pm_g = gather_layer_paged(kp, vp, None, None, pmp, tbl, length,
+                                      jnp.float32)
+    assert (np.asarray(k_g) == np.asarray(kd)).all()
+    assert (np.asarray(pm_g) == np.asarray(pmd)).all()
+
+
+def test_uniform_overflow_write_drops_whole_window():
+    """Non-ring uniform writes past the cache edge DROP atomically — the
+    old ``min(pos, S-1)`` clamp silently overwrote the newest slot."""
+    S = 8
+    k = jnp.zeros((B, S, HKV, HD), jnp.float32)
+    v, pm = jnp.zeros_like(k), jnp.full((B, S), -1, jnp.int32)
+    k_new = jnp.ones((B, T, HKV, HD), jnp.float32)
+    # sentinel in the last slot: a clamp would overwrite it
+    k = k.at[:, S - 1].set(7.0)
+    pm = pm.at[:, S - 1].set(S - 1)
+    pos = jnp.full((B,), S, jnp.int32)          # entirely past the edge
+    k2, v2, pm2 = update_layer_cache(k, v, pm, k_new, k_new, pos, False,
+                                     uniform_pos=True)
+    assert (np.asarray(k2) == np.asarray(k)).all()
+    assert (np.asarray(pm2) == np.asarray(pm)).all()
+    pos = jnp.full((B,), S - T + 1, jnp.int32)  # straddles the edge
+    k3, _, pm3 = update_layer_cache(k, v, pm, k_new, k_new, pos, False,
+                                    uniform_pos=True)
+    assert (np.asarray(k3) == np.asarray(k)).all()
+    assert (np.asarray(pm3) == np.asarray(pm)).all()
+
+
+def test_uniform_boundary_write_lands():
+    """The last fully-in-range uniform window (pos = S − T) writes through
+    the guard untouched."""
+    S = 8
+    k = jnp.zeros((B, S, HKV, HD), jnp.float32)
+    v, pm = jnp.zeros_like(k), jnp.full((B, S), -1, jnp.int32)
+    k_new = jnp.ones((B, T, HKV, HD), jnp.float32)
+    pos = jnp.full((B,), S - T, jnp.int32)
+    k2, _, pm2 = update_layer_cache(k, v, pm, k_new, k_new, pos, False,
+                                    uniform_pos=True)
+    assert (np.asarray(k2)[:, S - T:] == 1.0).all()
+    assert (np.asarray(k2)[:, :S - T] == 0.0).all()
+    assert (np.asarray(pm2)[:, S - T:]
+            == np.arange(S - T, S)[None, :]).all()
+
+
+def test_scatter_overflow_drops_per_position():
+    """Ragged (per-sequence) writes drop exactly the out-of-range
+    positions; in-range neighbours still land."""
+    S = 8
+    k = jnp.zeros((B, S, HKV, HD), jnp.float32)
+    v, pm = jnp.zeros_like(k), jnp.full((B, S), -1, jnp.int32)
+    k = k.at[:, S - 1].set(7.0)                 # clamp victim sentinel
+    k_new = jnp.ones((B, T, HKV, HD), jnp.float32)
+    pos = jnp.array([S - 1, S + 2], jnp.int32)  # row 0: 1 of 3 in range
+    k2, _, pm2 = update_layer_cache(k, v, pm, k_new, k_new, pos, False)
+    assert (np.asarray(k2)[0, S - 1] == 1.0).all()   # in-range write landed
+    assert (np.asarray(k2)[1, S - 1] == 7.0).all()   # OOB row dropped
+    assert np.asarray(pm2)[0, S - 1] == S - 1
+    assert (np.asarray(pm2)[1] == -1).all()
+
+
+def test_paged_insert_release_roundtrip():
+    """Insert scrubs every mapped block (stale tenants cannot leak) and
+    release unmaps so later writes drop."""
+    rng = np.random.default_rng(3)
+    length, bs, NB = 12, 4, 8
+    row = AttnCache(
+        k=jnp.asarray(rng.normal(size=(1, 1, length, HKV, HD)), jnp.float32),
+        v=jnp.asarray(rng.normal(size=(1, 1, length, HKV, HD)), jnp.float32),
+        pos_map=jnp.arange(length, dtype=jnp.int32)[None, None])
+    pool = init_paged_attn_cache(1, 2, length, NB, bs, HKV, HD, jnp.float32)
+    # dirty the pool first: the insert must fully rewrite its blocks
+    pool = pool.replace(pos_map=jnp.full_like(pool.pos_map, 99))
+    ids = jnp.array([5, 1, 3], jnp.int32)
+    pool = paged_insert_row(pool, row, ids, 1)
+    k_g, _, pm_g = gather_layer_paged(pool.k[0], pool.v[0], None, None,
+                                      pool.pos_map[0], pool.block_table,
+                                      length, jnp.float32)
+    assert (np.asarray(k_g[1]) == np.asarray(row.k[0, 0])).all()
+    assert (np.asarray(pm_g[1]) == np.arange(length)).all()
+    assert (np.asarray(pm_g[0]) == -1).all()         # unmapped slot masks
+    pool = paged_release_slot(pool, 1)
+    assert (np.asarray(pool.block_table[1]) == -1).all()
+    k2, *_ = paged_update_layer(
+        pool.k[0], pool.v[0], None, None, pool.pos_map[0], pool.block_table,
+        jnp.full((2, 1, HKV, HD), 5.0), jnp.full((2, 1, HKV, HD), 5.0),
+        jnp.zeros((2,), jnp.int32), False, length)
+    assert not (np.asarray(k2) == 5.0).any()         # released ⇒ writes drop
+
+
+def test_int8_quantization_error_bounded():
+    """Per-entry symmetric int8: roundtrip error ≤ scale/2 per element."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(16, HKV, HD)) * 3.0, jnp.float32)
+    q, s = quantize_kv(x)
+    err = np.abs(np.asarray(q).astype(np.float32)
+                 * np.asarray(s)[..., None] - np.asarray(x))
+    assert (err <= np.asarray(s)[..., None] * 0.5 + 1e-6).all()
+
+
+# ---------------------------------------------------------------- allocator
+
+def test_block_allocator_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(4, 24),
+           st.lists(st.tuples(st.booleans(), st.integers(1, 6)),
+                    min_size=1, max_size=30))
+    def run(n_blocks, ops):
+        """Random alloc/free interleavings: no block is ever live twice,
+        free+used always partition [0, n_blocks), exhaustion raises."""
+        a = BlockAllocator(n_blocks)
+        live: list[list[int]] = []
+        for is_alloc, n in ops:
+            if is_alloc:
+                if n > a.free_blocks:
+                    with pytest.raises(RuntimeError):
+                        a.alloc(n)
+                else:
+                    ids = a.alloc(n)
+                    flat = [i for grp in live for i in grp]
+                    assert not set(ids) & set(flat)
+                    assert len(set(ids)) == n
+                    live.append(ids)
+            elif live:
+                a.free(live.pop(0))
+            assert a.free_blocks + a.used_blocks == n_blocks
+            assert a.used_blocks == sum(len(g) for g in live)
+        for g in live:
+            a.free(g)
+        assert a.free_blocks == n_blocks and a.used_blocks == 0
+
+    run()
+
+
+# ------------------------------------------------------------ kernel + attn
+
+def test_paged_kernel_matches_reference():
+    """The Pallas paged-decode kernel (scalar-prefetch block-table grid)
+    matches the dense reference oracle on the gathered view, full and
+    sliding-window, eagerly and under jit."""
+    length, bs = 20, 4
+    dense, paged, pos = _dense_and_paged(length, bs, n_blocks=16)
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.normal(size=(B, T, HKV, G, HD)), jnp.float32)
+    q_pos = pos[:, None] + jnp.arange(T)[None, :]
+    for window in (0, 7):
+        ref = decode_attention_reference(
+            q.reshape(B, T, HKV * G, HD), dense[0], dense[1], dense[2],
+            q_pos, window=window)
+        out = paged_decode_attention(q, paged[0], paged[1], None, None,
+                                     paged[2], paged[3], q_pos,
+                                     length=length, window=window)
+        np.testing.assert_allclose(np.asarray(out).reshape(ref.shape),
+                                   np.asarray(ref), atol=2e-6, rtol=2e-6)
+    jit_out = jax.jit(lambda *a: paged_decode_attention(
+        *a, length=length, interpret=True))(
+        q, paged[0], paged[1], None, None, paged[2], paged[3], q_pos)
+    np.testing.assert_allclose(np.asarray(jit_out),
+                               np.asarray(paged_decode_attention(
+                                   q, paged[0], paged[1], None, None,
+                                   paged[2], paged[3], q_pos,
+                                   length=length)), atol=1e-6)
+
+
+def test_paged_kernel_quantized_matches_dequant_reference():
+    """Int8 pool: the kernel's in-register dequant equals attending over
+    the dequantized gather."""
+    length, bs, NB = 16, 4, 12
+    rng = np.random.default_rng(11)
+    pool = init_paged_attn_cache(1, B, length, NB, bs, HKV, HD, jnp.float32,
+                                 quantize=True)
+    alloc = BlockAllocator(NB)
+    tbl = jnp.array([alloc.alloc(4) for _ in range(B)], jnp.int32)
+    kp, vp, ks, vs, pmp = pool.k[0], pool.v[0], pool.k_scale[0], \
+        pool.v_scale[0], pool.pos_map[0]
+    pos = jnp.zeros((B,), jnp.int32)
+    for _ in range(3):
+        k_new = jnp.asarray(rng.normal(size=(B, T, HKV, HD)), jnp.float32)
+        v_new = jnp.asarray(rng.normal(size=(B, T, HKV, HD)), jnp.float32)
+        kp, vp, ks, vs, pmp = paged_update_layer(
+            kp, vp, ks, vs, pmp, tbl, k_new, v_new, pos, False, length)
+        pos = pos + T
+    q = jnp.asarray(rng.normal(size=(B, T, HKV, G, HD)), jnp.float32)
+    q_pos = pos[:, None] + jnp.arange(T)[None, :]
+    k_d, v_d, pm_d = gather_layer_paged(kp, vp, ks, vs, pmp, tbl, length,
+                                        jnp.float32)
+    ref = decode_attention_reference(q.reshape(B, T, HKV * G, HD), k_d, v_d,
+                                     pm_d, q_pos)
+    out = paged_decode_attention(q, kp, vp, ks, vs, pmp, tbl, q_pos,
+                                 length=length)
+    np.testing.assert_allclose(np.asarray(out).reshape(ref.shape),
+                               np.asarray(ref), atol=2e-6, rtol=2e-6)
+
+
+def test_attention_decode_paged_bitwise_dense():
+    """The full attention layer — rope, projections, cache write, gather,
+    grouped attend — is bitwise identical between layouts (fp pool, XLA
+    gather path, the one serving uses off-TPU)."""
+    cfg = ModelConfig(name="t", arch_type="dense", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=HKV, d_ff=64, vocab=64,
+                      dtype="float32", remat=False)
+    p = init_attn_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    length, bs, NB = 20, 4, 16
+    rng = np.random.default_rng(6)
+    kd = jnp.zeros((B, length, HKV, cfg.head_dim), jnp.float32)
+    vd, pmd = jnp.zeros_like(kd), jnp.full((B, length), -1, jnp.int32)
+    pool = init_paged_attn_cache(1, B, length, NB, bs, HKV, cfg.head_dim,
+                                 jnp.float32)
+    alloc = BlockAllocator(NB)
+    tbl = jnp.array([alloc.alloc(5) for _ in range(B)], jnp.int32)
+    kp, vp, pmp = pool.k[0], pool.v[0], pool.pos_map[0]
+    pos = jnp.array([0, 3], jnp.int32)
+    for _ in range(4):
+        x = jnp.asarray(rng.normal(size=(B, T, cfg.d_model)), jnp.float32)
+        out_d, kd, vd, pmd = attention_decode(x, p, cfg, kd, vd, pmd, pos,
+                                              ring=False)
+        out_p, kp, vp, _, _, pmp = attention_decode_paged(
+            x, p, cfg, kp, vp, None, None, pmp, tbl, pos, ring=False,
+            length=length, use_kernel=False)
+        assert (np.asarray(out_p) == np.asarray(out_d)).all()
+        pos = pos + T
+    k_g, v_g, pm_g = gather_layer_paged(kp, vp, None, None, pmp, tbl,
+                                        length, jnp.float32)
+    assert (np.asarray(k_g) == np.asarray(kd)).all()
+    assert (np.asarray(pm_g) == np.asarray(pmd)).all()
+
+
+# ------------------------------------------------------------------ session
+
+def _run_session(eng, prompts, max_new, paged, pool=None, quant=False,
+                 churn=None):
+    sess = DecodeSession(eng, capacity=2, max_new_cap=max_new,
+                         max_prompt_len=10, gamma_max=GAMMA, sync_every=2,
+                         key=jax.random.PRNGKey(0), paged=paged,
+                         kv_block_size=4, kv_pool_blocks=pool,
+                         kv_quantize=quant)
+    pol = StaticWindowPolicy(GAMMA)
+    outs = {}
+    pending = list(range(len(prompts)))
+    while pending or sess.unfinished:
+        while pending and sess.can_admit(len(prompts[pending[0]]), max_new):
+            rid = pending.pop(0)
+            sess.admit(prompts[rid], max_new, request_id=rid)
+        sess.run_chunk(pol)
+        for j in sess.finished_slots():
+            toks, rec = sess.retire(j)
+            outs[rec.request_id] = toks.tolist()
+        if churn is not None:
+            churn(sess)
+    return outs, sess
+
+
+def test_paged_session_churn_bit_identical():
+    """Staggered admissions + retirements through a shared engine: paged
+    greedy tokens == dense, program count frozen across further churn,
+    every block freed at drain; a pool sized below full concurrency
+    throttles admission but commits the same stream; the quantized pool
+    completes with plausible output."""
+    eng = make_engine("dense", temperature=0.0, seed=7)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 128, rng.integers(4, 10)).astype(np.int32)
+               for _ in range(5)]
+    dense, _ = _run_session(eng, prompts, 10, paged=False)
+    paged, psess = _run_session(eng, prompts, 10, paged=True)
+    assert dense == paged
+    progs = eng.compiled_programs()
+    extra = [rng.integers(0, 128, rng.integers(4, 10)).astype(np.int32)
+             for _ in range(3)]
+    again, psess2 = _run_session(eng, extra, 10, paged=True)
+    assert eng.compiled_programs() == progs, \
+        "paged admission/retirement churn must not recompile"
+    assert all(a is None or a.used_blocks == 0
+               for s in (psess, psess2) for a in s._alloc.values())
+    small, _ = _run_session(eng, prompts, 10, paged=True,
+                            pool=dict(draft=12, target=12))
+    assert small == dense
+    quant, _ = _run_session(eng, prompts, 10, paged=True, quant=True)
+    assert sorted(quant) == sorted(dense)
+    assert all(len(t) == 10 for t in quant.values())
+
+
+def test_paged_rollback_bit_identical_dense():
+    """A noised-copy draft (α ≈ 0.8) makes the target reject windows, so
+    speculative entries roll back through the block table via pos_map
+    masking — committed tokens still match the dense layout exactly."""
+    eng = make_noised_engine("dense")
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, 128, rng.integers(5, 10)).astype(np.int32)
+               for _ in range(3)]
+    dense, dsess = _run_session(eng, prompts, 12, paged=False)
+    paged, _ = _run_session(eng, prompts, 12, paged=True)
+    assert dense == paged
+    assert dsess.accepted < dsess.proposed, \
+        "the noised pair should reject some windows (rollback exercised)"
+
+
+def test_paged_pool_exhaustion():
+    """can_admit turns False when blocks run out; a forced admit raises
+    without leaking a half-reservation; retirement restores admission."""
+    eng = make_engine("dense", temperature=0.0, seed=7)
+    rng = np.random.default_rng(2)
+    p = rng.integers(0, 128, 8).astype(np.int32)
+    sess = DecodeSession(eng, capacity=2, max_new_cap=10, max_prompt_len=10,
+                         gamma_max=GAMMA, sync_every=2, paged=True,
+                         kv_block_size=4,
+                         kv_pool_blocks=dict(draft=8, target=8))
+    assert sess.can_admit(len(p), 10)
+    sess.admit(p, 10, request_id=0)
+    assert not sess.can_admit(len(p), 10)       # slot free, blocks are not
+    free_before = {s: a.free_blocks for s, a in sess._alloc.items()}
+    with pytest.raises(RuntimeError, match="insufficient free KV blocks"):
+        sess.admit(p, 10, request_id=1)
+    assert {s: a.free_blocks for s, a in sess._alloc.items()} == free_before
+    pol = StaticWindowPolicy(GAMMA)
+    while not sess.finished_slots():
+        sess.run_chunk(pol)
+    sess.retire(sess.finished_slots()[0])
+    assert sess.can_admit(len(p), 10)
+
+
+def test_prefill_rejects_undersized_cache():
+    """Satellite of the overflow-drop change: the prefill call site refuses
+    a cache too small for the prompt instead of silently dropping KV."""
+    eng = make_engine("dense")
+    toks = jnp.zeros((1, 12), jnp.int32)
+    with pytest.raises(ValueError, match="exceeds cache slots"):
+        eng.target.prefill(eng.target_params, toks, slots=8)

@@ -109,6 +109,38 @@ def test_retire_readmit_no_stale_state():
         np.testing.assert_array_equal(outs[0], outs[1])
 
 
+def test_paged_retire_readmit_reuses_blocks():
+    """Paged sessions: retiring a request frees its KV blocks and the next
+    admission reuses them (LIFO), with the recycled slot decoding the same
+    prompt identically on both visits next to a live co-tenant."""
+    eng = _engine("dense")
+    rng = np.random.default_rng(6)
+    p = rng.integers(0, 128, 9).astype(np.int32)
+    co = rng.integers(0, 128, 12).astype(np.int32)
+    pol = StaticWindowPolicy(GAMMA)
+    sess = DecodeSession(eng, capacity=2, max_new_cap=8, max_prompt_len=16,
+                         gamma_max=GAMMA, sync_every=2, paged=True,
+                         kv_block_size=4)
+    sess.admit(co, 8, request_id=99)
+    first = sess.admit(p, 6, request_id=0)
+    blocks_first = dict(sess._slot_blocks[first])
+    outs = {}
+    while 0 not in outs:
+        sess.run_chunk(pol)
+        for j in sess.finished_slots():
+            toks, rec = sess.retire(j)
+            outs[rec.request_id] = toks
+    again = sess.admit(p, 6, request_id=1)
+    assert again == first
+    # the freed reservation is recycled (LIFO free list), id-for-id
+    assert {s: sorted(ids) for s, ids in sess._slot_blocks[again].items()} \
+        == {s: sorted(ids) for s, ids in blocks_first.items()}
+    _drain(sess, pol, outs)
+    np.testing.assert_array_equal(outs[0], outs[1])
+    assert all(a is None or a.used_blocks == 0
+               for a in sess._alloc.values())
+
+
 def test_session_zero_recompiles_across_churn():
     """After the first admit + first chunk, the program count is frozen:
     admissions into any slot, retirements and re-admissions are data."""
