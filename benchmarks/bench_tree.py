@@ -1,0 +1,206 @@
+"""Tree-speculation benchmark: multi-branch grid drafts vs the linear
+chain on the REAL engine, at equal α and equal target passes.
+
+The draft is a noise-perturbed copy of the target (``--draft-noise``,
+default 0.05 → α ≈ 0.45): low enough that the greedy chain breaks early
+often, which is exactly the regime tree speculation buys back — when the
+primary root is rejected, an alternative top-k root (plus its chain) can
+still commit. Every cell decodes the same prompts for the same budget, so
+the comparison is committed tokens PER TARGET PASS (each speculation
+round is one verify pass on either path) at the same acceptance rate.
+
+Gates (CI runs ``--smoke``; all three must hold or the run exits 1):
+
+- **speedup** — the (γ=4, b=3) tree commits ≥ 1.15× the linear chain's
+  tokens per target pass;
+- **zero recompiles** — after the (γ_max, b_max) tree program compiles,
+  per-round (γ, branches) decisions sweep the whole grid family without
+  adding a single XLA program (``engine.compiled_programs()`` flat);
+- **degenerate bit-identity** — a max_branches=1 tree session commits
+  EXACTLY the linear engine's greedy tokens.
+
+The sim-parity column reports the analytic
+:func:`repro.core.tree.tree_expected_accepted` prediction (fed the
+linear run's measured α) next to each cell's measured tokens/pass — the
+same model DSD-Sim's tree acceptance replay and the AWC joint {γ, b}
+policy use, so the column shows the controller sees the ordering the
+real path realizes.
+
+    PYTHONPATH=src python benchmarks/bench_tree.py [--smoke] \
+        [--max-new 48] [--batch 4] [--draft-noise 0.05] [--out ...]
+
+Writes BENCH_tree.json (repo root by default).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import SpecDecodeEngine
+from repro.core.session import DecodeSession
+from repro.core.tree import tree_expected_accepted
+from repro.core.window import StaticWindowPolicy
+from repro.models.model import build_model
+
+CFG = ModelConfig(name="bench-tree", arch_type="dense", n_layers=2,
+                  d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                  dtype="float32", remat=False)
+GAMMA = 4
+GAMMA_MAX = 6
+B_MAX = 4
+
+
+def noised_draft_params(target_params, scale: float, seed: int = 42):
+    """Draft = target + N(0, (scale·std)²) per tensor: same architecture,
+    controllably-degraded predictions → tunable acceptance rate."""
+    leaves, treedef = jax.tree.flatten(target_params)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    out = []
+    for leaf, k in zip(leaves, keys):
+        if isinstance(leaf, jax.Array) and leaf.ndim > 0:
+            leaf = leaf + scale * jnp.std(leaf) * jax.random.normal(
+                k, leaf.shape, leaf.dtype)
+        out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+def make_engine(noise: float, seed: int = 0) -> SpecDecodeEngine:
+    tparams = build_model(CFG).init_params(jax.random.PRNGKey(seed))
+    return SpecDecodeEngine(CFG, CFG,
+                            draft_params=noised_draft_params(tparams, noise),
+                            target_params=tparams, temperature=0.0,
+                            key=jax.random.PRNGKey(seed))
+
+
+def run_cell(engine, prompts, max_new: int, max_branches: int,
+             policies) -> dict:
+    """One decode of ``prompts`` through a session at the given tree
+    bound, cycling ``policies`` chunk by chunk (a single StaticWindowPolicy
+    for the plain cells; the recompile gate passes the whole (γ, b) sweep).
+    Returns tokens, passes (= speculation rounds = target passes) and the
+    committed token matrix."""
+    sess = DecodeSession(engine, capacity=prompts.shape[0],
+                         max_new_cap=max_new, gamma_max=GAMMA_MAX,
+                         sync_every=4, mode_policy="distributed",
+                         max_branches=max_branches,
+                         key=jax.random.PRNGKey(0))
+    sess.admit_batch(prompts, max_new)
+    t0 = time.perf_counter()
+    i = 0
+    while sess.unfinished:
+        sess.run_chunk(policies[i % len(policies)])
+        i += 1
+    wall = time.perf_counter() - t0
+    tokens, stats = sess.snapshot()
+    # per-REQUEST tokens per pass (every pass serves the whole batch), so
+    # the number is directly comparable to the per-request analytic model
+    tpp = stats.tokens / max(1, sess.iterations) / prompts.shape[0]
+    return {"tokens": tokens, "n_tokens": int(stats.tokens),
+            "passes": int(sess.iterations), "tokens_per_pass": tpp,
+            "alpha": stats.acceptance_rate, "wall_s": wall}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--draft-noise", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes; exit nonzero if any gate fails")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.max_new = min(args.max_new, 32)
+        args.batch = min(args.batch, 4)
+
+    engine = make_engine(args.draft_noise, args.seed)
+    prompts = np.random.default_rng(args.seed + 1).integers(
+        0, CFG.vocab, (args.batch, 9)).astype(np.int32)
+
+    # -- linear baseline + tree cells at equal α / equal passes ------------
+    lin = run_cell(engine, prompts, args.max_new, 0,
+                   [StaticWindowPolicy(GAMMA)])
+    alpha = lin["alpha"]
+    cells = []
+    for b in range(2, B_MAX + 1):
+        cell = run_cell(engine, prompts, args.max_new, b,
+                        [StaticWindowPolicy(GAMMA, branches=b)])
+        cells.append({
+            "gamma": GAMMA, "branches": b,
+            "tokens_per_pass": round(cell["tokens_per_pass"], 3),
+            "passes": cell["passes"],
+            "speedup_vs_linear":
+                round(cell["tokens_per_pass"] / lin["tokens_per_pass"], 3),
+            # sim parity: analytic committed/pass at the LINEAR run's α —
+            # what the AWC {γ, b} policy and DSD-Sim's replay predict
+            "sim_tokens_per_pass":
+                round(1.0 + tree_expected_accepted(alpha, GAMMA, b), 3),
+        })
+    sim_lin = 1.0 + tree_expected_accepted(alpha, GAMMA, 1)
+
+    # -- gate 1: tree ≥ 1.15× linear tokens/target pass at b=3 -------------
+    gate_cell = next(c for c in cells if c["branches"] == 3)
+    speedup_ok = gate_cell["speedup_vs_linear"] >= 1.15
+
+    # -- gate 2: zero recompiles across per-round tree shapes --------------
+    # warm the (GAMMA_MAX, B_MAX) program, then sweep every (γ, b) shape
+    # in ONE session, chunk by chunk: the program count must not move.
+    warm = run_cell(engine, prompts, args.max_new, B_MAX,
+                    [StaticWindowPolicy(GAMMA, branches=B_MAX)])
+    before = engine.compiled_programs()
+    sweep = [StaticWindowPolicy(g, branches=b)
+             for g in range(1, GAMMA_MAX + 1)
+             for b in range(1, B_MAX + 1)]
+    run_cell(engine, prompts, args.max_new, B_MAX, sweep)
+    recompiles = engine.compiled_programs() - before
+    recompile_ok = recompiles == 0
+
+    # -- gate 3: degenerate 1-branch tree ≡ linear engine ------------------
+    degen = run_cell(engine, prompts, args.max_new, 1,
+                     [StaticWindowPolicy(GAMMA, branches=1)])
+    degenerate_ok = bool(np.array_equal(lin["tokens"], degen["tokens"]))
+
+    report = {
+        "bench": "tree", "smoke": args.smoke,
+        "host": platform.node(), "backend": jax.default_backend(),
+        "config": {"max_new": args.max_new, "batch": args.batch,
+                   "draft_noise": args.draft_noise, "gamma": GAMMA,
+                   "gamma_max": GAMMA_MAX, "b_max": B_MAX,
+                   "vocab": CFG.vocab},
+        "alpha_measured": round(alpha, 4),
+        "linear": {"tokens_per_pass": round(lin["tokens_per_pass"], 3),
+                   "passes": lin["passes"],
+                   "sim_tokens_per_pass": round(sim_lin, 3)},
+        "tree_cells": cells,
+        "checks": {
+            "tree_speedup_b3": gate_cell["speedup_vs_linear"],
+            "tree_speedup_ok": bool(speedup_ok),
+            "recompiles_across_shapes": int(recompiles),
+            "zero_recompile_ok": bool(recompile_ok),
+            "degenerate_bit_identical": degenerate_ok,
+        },
+    }
+    out = Path(args.out) if args.out else \
+        Path(__file__).resolve().parent.parent / "BENCH_tree.json"
+    out.write_text(json.dumps(report, indent=1) + "\n")
+    print(json.dumps(report["checks"], indent=1))
+    print(f"wrote {out}")
+
+    ok = speedup_ok and recompile_ok and degenerate_ok
+    if not ok:
+        print("TREE BENCH GATE FAILED")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

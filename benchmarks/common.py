@@ -17,9 +17,9 @@ from repro.core.awc.model import default_predictor
 DATASETS = ("gsm8k", "humaneval", "cnndm")
 
 
-def window_policy(kind: str, gamma: int = 4):
+def window_policy(kind: str, gamma: int = 4, branches: int = 1):
     if kind == "static":
-        return StaticWindowPolicy(gamma)
+        return StaticWindowPolicy(gamma, branches=branches)
     if kind == "dynamic":
         return DynamicWindowPolicy(gamma0=gamma)
     if kind == "awc":
@@ -43,7 +43,7 @@ def run_scenario(dataset: str = "gsm8k", *, targets: int = 2,
                  drafters: int = 64, rtt_ms: float = 10.0,
                  rate: float = 40.0, n_requests: int = 80,
                  routing: str = "jsq", batching: str = "lab",
-                 window: str = "static", gamma: int = 4,
+                 window: str = "static", gamma: int = 4, branches: int = 1,
                  max_batch: int = 16, seed: int = 0,
                  target_hw: str = "A100", target_model: str = "llama2-70b",
                  target_tp: int = 4, draft_hw: str = "A40",
@@ -60,7 +60,7 @@ def run_scenario(dataset: str = "gsm8k", *, targets: int = 2,
     pol = PolicyStack(routing=routing_policy(routing, seed),
                       batching=batching_policy(batching),
                       batching_cfg=BatchingConfig(max_batch=max_batch),
-                      window=window_policy(window, gamma))
+                      window=window_policy(window, gamma, branches))
     gen = WorkloadGenerator(dataset, rate, drafters, seed=seed)
     sim = DSDSimulation(cluster, pol, gen.generate(n_requests), seed=seed)
     t0 = time.time()

@@ -27,8 +27,9 @@ import jax.numpy as jnp
 import numpy as np
 
 
-# [q_depth, alpha_recent, rtt_ms, tpot_ms, gamma_prev, pipe_hit_recent]
-FEATURE_DIM = 6
+# [q_depth, alpha_recent, rtt_ms, tpot_ms, gamma_prev, pipe_hit_recent,
+#  branches_prev]
+FEATURE_DIM = 7
 
 
 class WCDNNParams(NamedTuple):
@@ -132,8 +133,8 @@ def load(path: str) -> WCDNNParams:
         raise ValueError(
             f"{path} was trained on {got}-dim features but this build "
             f"expects FEATURE_DIM={FEATURE_DIM} (the pipeline-hit-rate "
-            f"signal was appended); re-train or delete the stale "
-            f"checkpoint")
+            f"and tree-branch signals were appended); re-train or delete "
+            f"the stale checkpoint")
     n = int(z["n_blocks"])
     blocks = tuple(
         (jnp.asarray(z[f"blk{i}_w1"]), jnp.asarray(z[f"blk{i}_b1"]),

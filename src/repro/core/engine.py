@@ -296,6 +296,86 @@ class SpecDecodeEngine:
         self._jit_cache[keyt] = jitted
         return jitted
 
+    def _tree_step(self, d_max: int, b_max: int):
+        """Tree-speculation path: ONE jitted program per (d_max, b_max)
+        grid bound. The per-round shape — active depth γ ≤ d_max and
+        branch count b ≤ b_max — arrives as traced scalars that only mask
+        acceptance (``node_valid``), so {γ, b} vary every round with zero
+        recompiles, exactly like the linear step's ``active_gamma``.
+
+        Greedy-only (the longest-accepted-root-path rule is the greedy
+        accept rule's generalization; stochastic tree acceptance would
+        need per-branch residual bookkeeping) and dense/moe-only on both
+        sides (the relocation commit is pos_map surgery on a dense
+        non-ring cache)."""
+        keyt = ("tree", d_max, b_max)
+        if keyt in self._jit_cache:
+            return self._jit_cache[keyt]
+        if self.temperature > 0.0:
+            raise NotImplementedError(
+                "tree speculation is greedy-only (temperature 0)")
+        if not (self._target_attention and self._draft_attention):
+            raise NotImplementedError(
+                "tree speculation needs attention-family draft and target")
+        from .tree import (TreeSpec, tree_committed, tree_path_from_winner,
+                           tree_propose, verify_tree_greedy)
+        from ..models.kvcache import tree_commit_cache
+        spec = TreeSpec(d_max, b_max)
+        T = spec.n_entries
+
+        def step(draft_params, target_params, state, key, active_gamma,
+                 branches, row_idx, out_buf, cursor, nacc_buf, nn_buf,
+                 max_new, done, eos_id):
+            tree_tokens, dcache = tree_propose(
+                self.draft, draft_params, state.draft_cache,
+                state.last_token, state.pos, spec)
+            p_logits, tcache = self.target.verify_step(
+                target_params, tree_tokens, state.target_cache, state.pos,
+                slot_off=jnp.arange(T), pos_off=spec.tree_pos,
+                win_mask=spec.win_mask)
+            node_valid = spec.node_valid(active_gamma, branches)
+            if self.use_verify_kernel:
+                from ..kernels.verify.ops import tree_verify_fused
+                n_acc, winner, bonus = tree_verify_fused(
+                    tree_tokens, p_logits, spec.parent_entry, spec.tree_pos,
+                    node_valid, spec.win_mask)
+                from .tree import TreeVerifyResult
+                res = TreeVerifyResult(
+                    n_accepted=n_acc, next_token=bonus, winner=winner,
+                    path=tree_path_from_winner(winner, spec.parent_entry,
+                                               spec.tree_pos, d_max),
+                    accept=jnp.zeros_like(tree_tokens, bool))
+            else:
+                res = verify_tree_greedy(
+                    tree_tokens, p_logits, spec.parent_entry, spec.tree_pos,
+                    node_valid, spec.win_mask, d_max)
+            new_tokens, num_new = tree_committed(tree_tokens, res, d_max)
+            stop = slot_stop_mask(num_new, res.n_accepted, new_tokens,
+                                  cursor, max_new, done, eos_id)
+            # Relocate the winning path onto canonical slots in BOTH caches
+            # (tree slots ≠ positions, so the linear path's implicit
+            # stale-masking is not enough here). Lifecycle-clamped counts:
+            # tokens beyond the budget/EOS cut are scrubbed, not kept.
+            tcache = tree_commit_cache(tcache, state.pos, res.path,
+                                       stop.n_accepted, T)
+            dcache = tree_commit_cache(dcache, state.pos, res.path,
+                                       stop.n_accepted, T)
+            new_state = SpecDecodeState(
+                draft_cache=dcache, target_cache=tcache,
+                last_token=jnp.where(done, state.last_token,
+                                     res.next_token),
+                pos=state.pos + stop.num_new)
+            out = SpecDecodeOut(state=new_state, new_tokens=new_tokens,
+                                num_new=stop.num_new,
+                                n_accepted=stop.n_accepted)
+            out_buf, cursor, nacc_buf, nn_buf = _accumulate(
+                out, out_buf, cursor, nacc_buf, nn_buf, row_idx)
+            return new_state, out_buf, cursor, nacc_buf, nn_buf, stop.done
+
+        jitted = jax.jit(step, donate_argnums=(2, 7, 8, 9, 10, 12))
+        self._jit_cache[keyt] = jitted
+        return jitted
+
     def _split_step(self, gamma_max: int):
         """SSM/hybrid-target path: verify on a throwaway cache, then advance
         the committed prefix with an active-masked ``lax.scan``. Per-slot

@@ -115,7 +115,16 @@ class DecodeSession:
                        by the bit-identity tests,
     ``kv_quantize``    int8 per-entry K/V with f32 scales (≈4× fewer pool
                        bytes, approximate attention — see README
-                       “Memory & capacity”).
+                       “Memory & capacity”),
+    ``max_branches``   opt-in to TREE speculation: > 0 compiles the
+                       (γ_max, max_branches) grid-tree step and lets the
+                       window policy pick a per-round branch width b ≤
+                       the bound (``WindowDecision.branches``); 0 (the
+                       default) keeps the linear chain path untouched.
+                       ``max_branches=1`` is the degenerate tree — same
+                       committed greedy tokens as the linear path.
+                       Greedy-only, attention-family both sides, dense
+                       KV, and mutually exclusive with pipeline mode.
     """
 
     def __init__(self, engine, capacity: int, max_new_cap: int,
@@ -127,7 +136,8 @@ class DecodeSession:
                  mode_policy: str = "auto", pair_key: str = "engine",
                  paged: bool = False, kv_block_size: int = 16,
                  kv_pool_blocks: Optional[int] = None,
-                 kv_quantize: bool = False):
+                 kv_quantize: bool = False,
+                 max_branches: int = 0):
         self.engine = engine
         self.capacity = int(capacity)
         self.max_new_cap = int(max_new_cap)
@@ -158,6 +168,29 @@ class DecodeSession:
         # deployment sharing one policy object still gets one stabilizer
         # per draft–target pair
         self.pair_key = str(pair_key)
+
+        # ---- tree speculation (core/tree.py) ----------------------------
+        self.max_branches = int(max_branches or 0)
+        self._tree_spec = None
+        self._branches_eff = 1
+        self._branches_prev = 1.0
+        if self.max_branches:
+            if mode_policy == "pipeline":
+                raise ValueError(
+                    "tree speculation does not compose with pipeline mode "
+                    "(one in-flight window shape per exchange)")
+            if engine.temperature > 0.0:
+                raise ValueError("tree speculation is greedy-only "
+                                 "(temperature 0)")
+            if not (engine._draft_attention and engine._target_attention):
+                raise ValueError("tree speculation needs attention-family "
+                                 "draft and target")
+            if paged:
+                raise ValueError(
+                    "tree speculation needs dense KV slots (the winning-"
+                    "path relocation is pos_map surgery on dense rows)")
+            from .tree import TreeSpec
+            self._tree_spec = TreeSpec(self.gamma_max, self.max_branches)
 
         # ---- paged KV slot pool (models/kvcache.PagedAttnCache) ---------
         self.paged = bool(paged)
@@ -221,6 +254,13 @@ class DecodeSession:
         # mark. Applied to every mode so sessions that differ only in
         # mode_policy share one cache geometry (state-comparison tests and
         # jit keys line up; pos_map masking makes the headroom free).
+        if self.max_branches:
+            # tree rounds write the full (γ_max, b_max) grid past the
+            # high-water mark: anchor + γ_max·b_max entries at slots
+            # pos .. pos+T−1 (no pipelining, so the 2γ overhang shrinks
+            # to γ + grid)
+            return (prompt_len + self.max_new_cap + self.gamma_max
+                    + self._tree_spec.n_entries + 18)
         return prompt_len + self.max_new_cap + 2 * self.gamma_max + 18
 
     def _n_logical(self) -> int:
@@ -481,6 +521,15 @@ class DecodeSession:
         cap = (self.gamma_max - 1 if self.mode_policy == "pipeline"
                else self.gamma_max)
         gamma_eff = 0 if fused else min(cap, max(1, int(dec.gamma)))
+        # tree sessions additionally honor the decision's branch width,
+        # clamped to the compiled bound; linear sessions pin b = 1 so a
+        # tree-aware policy driving a linear session stays harmless
+        if self.max_branches and not fused:
+            self._branches_eff = min(self.max_branches,
+                                     max(1, int(getattr(dec, "branches", 1))))
+        else:
+            self._branches_eff = 1
+        self._branches_prev = float(self._branches_eff)
         if self.log_gamma:
             self.gamma_seq.append(1 if fused else gamma_eff)
         if fused:
@@ -520,20 +569,36 @@ class DecodeSession:
         if n <= 0 or not self.occupied:
             return 0
         eng = self.engine
-        step = eng._step_fn(self.gamma_max)
+        tree = bool(self.max_branches)
+        step = (eng._tree_step(self.gamma_max, self.max_branches) if tree
+                else eng._step_fn(self.gamma_max))
         chunk_t0 = time.perf_counter()
         chunk_gammas: list[int] = []
         for r in range(n):
             gamma, _fused = self._decide(policy, q_depth)
             chunk_gammas.append(gamma)
             self._key, ks = jax.random.split(self._key)
-            (self._state, self._out_buf, self._cursor, self._nacc,
-             self._nn, self._done) = step(
-                eng.draft_params, eng.target_params, self._state, ks,
-                jnp.asarray(gamma, jnp.int32), jnp.asarray(r, jnp.int32),
-                self._out_buf, self._cursor, self._nacc, self._nn,
-                self._max_new, self._done,
-                jnp.asarray(self.eos_id, jnp.int32))
+            if tree:
+                # γ = 0 (fused decision) masks every non-anchor node:
+                # only the target's own next token commits, same as the
+                # linear step's fused round
+                (self._state, self._out_buf, self._cursor, self._nacc,
+                 self._nn, self._done) = step(
+                    eng.draft_params, eng.target_params, self._state, ks,
+                    jnp.asarray(gamma, jnp.int32),
+                    jnp.asarray(self._branches_eff, jnp.int32),
+                    jnp.asarray(r, jnp.int32),
+                    self._out_buf, self._cursor, self._nacc, self._nn,
+                    self._max_new, self._done,
+                    jnp.asarray(self.eos_id, jnp.int32))
+            else:
+                (self._state, self._out_buf, self._cursor, self._nacc,
+                 self._nn, self._done) = step(
+                    eng.draft_params, eng.target_params, self._state, ks,
+                    jnp.asarray(gamma, jnp.int32), jnp.asarray(r, jnp.int32),
+                    self._out_buf, self._cursor, self._nacc, self._nn,
+                    self._max_new, self._done,
+                    jnp.asarray(self.eos_id, jnp.int32))
             self.iterations += 1
         self._sync_and_attribute(n, chunk_gammas, chunk_t0,
                                  non_target_ms=0.0,
@@ -566,6 +631,25 @@ class DecodeSession:
             jnp.asarray(row_idx, jnp.int32), jnp.asarray(self.eos_id,
                                                          jnp.int32))
         return tcache, new_pos, new_last, num_new_dev, nacc_dev, next_raw
+
+    def _verify_commit_tree_round(self, tw, tree_np: np.ndarray, gamma: int,
+                                  branches: int, row_idx: int):
+        """Tree analogue of :meth:`_verify_commit_round`: one ancestor-
+        masked verify pass + longest-accepted-root-path verdict + winning-
+        path KV relocation on the target cache. Returns the winning path
+        too — the draft side relocates its propose cache with it."""
+        state = self._state
+        (tcache, new_pos, new_last, self._out_buf, self._cursor,
+         self._nacc, self._nn, self._done, num_new_dev, nacc_dev,
+         next_raw, path_dev) = tw.verify_commit_tree(
+            self.gamma_max, self.max_branches)(
+            tw.params, state.target_cache, jnp.asarray(tree_np), state.pos,
+            jnp.asarray(gamma, jnp.int32), jnp.asarray(branches, jnp.int32),
+            self._out_buf, self._cursor, self._nacc, self._nn,
+            self._max_new, self._done, jnp.asarray(row_idx, jnp.int32),
+            jnp.asarray(self.eos_id, jnp.int32))
+        return (tcache, new_pos, new_last, num_new_dev, nacc_dev, next_raw,
+                path_dev)
 
     def _fused_round(self, dw, tw, row_idx: int, sampled: bool, key) -> float:
         """One fused (cloud-only) round over the transport: γ = 0 verify
@@ -638,6 +722,44 @@ class DecodeSession:
             if fused:
                 link_ms += self._fused_round(dw, tw, r, sampled, kv)
                 done_host = np.asarray(self._done)
+            elif self.max_branches:
+                # tree round: the grid window crosses the wire with its
+                # parent table (node-count-priced payload), the verdict
+                # carries the winning path back so the draft can relocate
+                # its propose cache identically to the target's commit
+                b = self._branches_eff
+                t_draft = time.perf_counter()
+                toks, dcache_prop = dw.propose_tree(
+                    self.gamma_max, self.max_branches)(
+                    dw.params, state.draft_cache, state.last_token,
+                    state.pos)
+                toks_np = np.asarray(toks)
+                draft_ms += (time.perf_counter() - t_draft) * 1e3
+                rid = self._round_seq
+                self._round_seq += 1
+                msg = WindowMsg(tokens=toks_np, gamma=gamma,
+                                n_active=n_active, round_id=rid,
+                                n_nodes=toks_np.shape[1], branches=b,
+                                parent=self._tree_spec.parent_np)
+                link_ms += tr.send_window(msg)
+                (tcache, new_pos, new_last, num_new_dev, nacc_dev,
+                 next_raw, path_dev) = self._verify_commit_tree_round(
+                    tw, msg.tokens, gamma, b, r)
+                done_host = np.asarray(self._done)
+                verdict = VerdictMsg(
+                    n_accepted=np.asarray(nacc_dev),
+                    num_new=np.asarray(num_new_dev),
+                    next_token=np.asarray(next_raw),
+                    last_token=np.asarray(new_last),
+                    done=done_host, gamma=gamma, n_active=n_active,
+                    round_id=rid, path=np.asarray(path_dev))
+                link_ms += tr.send_verdict(verdict)
+                dcache = dw.ingest_tree(self.gamma_max, self.max_branches)(
+                    dcache_prop, state.pos, jnp.asarray(verdict.path),
+                    jnp.asarray(verdict.n_accepted))
+                self._state = SpecDecodeState(
+                    draft_cache=dcache, target_cache=tcache,
+                    last_token=new_last, pos=new_pos)
             else:
                 # timing the propose dispatch through the host materialize
                 # isolates the draft's serial scan — excluded from the
@@ -1045,7 +1167,8 @@ class DecodeSession:
             # outside pipeline mode no RTT is ever overlapped: report 0 so
             # bootstrap_gamma's overlapped-RTT term stays inert
             pipe_hit_recent=((sum(p) / len(p)) if p else 0.0)
-            if self.mode_policy == "pipeline" else 0.0)
+            if self.mode_policy == "pipeline" else 0.0,
+            branches_prev=self._branches_prev if self.max_branches else 1.0)
 
     # ------------------------------------------------------------ retirement
 

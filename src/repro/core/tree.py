@@ -1,0 +1,256 @@
+"""Tree-structured speculation: grid-shaped multi-branch drafts verified in
+one masked target pass.
+
+A speculation *tree* generalizes the linear window: instead of one γ-token
+chain, the draft proposes several candidate continuations that share a
+prefix, and the target verifies all of them in a single ancestor-masked
+pass — the same pass cost buys more chances to commit tokens when the
+chain would have broken early (low α).
+
+Compile-once shape. The engine compiles ONE program per (d_max, b_max)
+bound, exactly like the linear step compiles once at γ_max. To keep every
+per-round tree inside that single program, trees are drawn from a
+*canonical grid family*:
+
+- ``T = 1 + d_max·b_max`` window entries; entry 0 is the anchor (the last
+  committed token), entry ``1 + d·b_max + k`` is depth ``d`` of branch
+  ``k`` (depth-major flattening).
+- branch ``k`` is a greedy chain rooted at the draft anchor
+  distribution's k-th-best token; all branches share the anchor, so
+  ``parent(d, k) = (d−1, k)`` for d > 0 and the anchor otherwise.
+- a round's active shape (γ ≤ d_max depths, b ≤ b_max branches) enters
+  the trace ONLY through the ``node_valid`` mask (and the traced parent /
+  position / ancestor-mask buffers) — never through array shapes, so γ
+  and b vary per round with zero recompiles.
+- ``b_max = 1`` degenerates to today's linear chain: entries are the
+  window positions, the ancestor mask is the causal mask, and the accept
+  rule below reduces to the masked-window prefix rule bit-for-bit.
+
+Accept rule (greedy, longest accepted root path). With ``tgt[e]`` the
+target argmax at entry ``e``, an entry is *accepted* iff every tree edge
+on its root path predicted correctly::
+
+    accept[e] = node_valid[e] ∧ (token[e] == tgt[parent[e]]) ∧ accept[parent[e]]
+
+The committed path is the deepest accepted entry (ties → lowest entry
+index, i.e. the best-ranked branch), and the bonus token is the target's
+own prediction AT the winning entry — the tree generalization of the
+linear rule's corrected/bonus token. The anchor is always accepted, so
+the rule always commits ≥ 1 token, like the linear path.
+
+KV discipline. Entry ``e`` writes cache slot ``pos + e`` while its
+*logical* position (RoPE phase, pos_map value) is ``pos + tree_pos[e]``
+— siblings share positions but never slots. During the round the
+ancestor bitmap masks cross-branch attention (the base ``slot_pos ≤
+q_pos`` rule cannot: siblings tie on position); after the verdict
+:func:`repro.models.kvcache.tree_commit_cache` relocates the winning
+path onto the canonical linear slots and scrubs the losing branches'
+pos_map — the same pos_map mechanism the linear path uses for rollback,
+plus a relocation because tree slots ≠ positions.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TreeSpec:
+    """Static (d_max, b_max) grid-family descriptor.
+
+    Holds the numpy layout tables and their device mirrors. Everything
+    here depends only on the compile-time bounds; the per-round shape is
+    produced by :meth:`node_valid` from traced (γ, branches) scalars.
+    """
+
+    def __init__(self, d_max: int, b_max: int):
+        if d_max < 1 or b_max < 1:
+            raise ValueError(f"TreeSpec needs d_max, b_max >= 1, got "
+                             f"({d_max}, {b_max})")
+        self.d_max = int(d_max)
+        self.b_max = int(b_max)
+        T = 1 + self.d_max * self.b_max
+        self.n_entries = T
+
+        depth = np.full((T,), -1, np.int32)    # anchor = -1
+        branch = np.zeros((T,), np.int32)
+        parent = np.zeros((T,), np.int32)      # anchor's parent = itself
+        tpos = np.zeros((T,), np.int32)        # window-relative position
+        for d in range(self.d_max):
+            for k in range(self.b_max):
+                e = 1 + d * self.b_max + k
+                depth[e], branch[e], tpos[e] = d, k, 1 + d
+                parent[e] = 0 if d == 0 else 1 + (d - 1) * self.b_max + k
+        mask = np.zeros((T, T), bool)          # ancestor-or-self bitmap
+        for e in range(T):
+            a = e
+            while True:
+                mask[e, a] = True
+                if a == 0:
+                    break
+                a = int(parent[a])
+
+        self.depth_np, self.branch_np = depth, branch
+        self.parent_np, self.tree_pos_np, self.mask_np = parent, tpos, mask
+        # Device mirrors — passed into the jitted step as traced buffers.
+        self.parent_entry = jnp.asarray(parent)
+        self.tree_pos = jnp.asarray(tpos)
+        self.win_mask = jnp.asarray(mask)
+        self.depth = jnp.asarray(depth)
+        self.branch = jnp.asarray(branch)
+
+    def node_valid(self, gamma, branches) -> jax.Array:
+        """(T,) bool — which grid entries the round's (γ, b) activates.
+
+        ``gamma``/``branches`` may be traced scalars; the anchor (depth
+        −1, branch 0) is always valid."""
+        return (self.depth < gamma) & (self.branch < branches)
+
+    def row_slice(self, d: int) -> tuple[int, int]:
+        """Entry range [lo, hi) of depth ``d``'s b_max-wide frontier."""
+        lo = 1 + d * self.b_max
+        return lo, lo + self.b_max
+
+
+def tree_expected_accepted(alpha: float, gamma: float, branches: float,
+                           decay: float = 0.4) -> float:
+    """E[accepted draft tokens] of a (γ, b) grid tree at acceptance α.
+
+    The primary branch is the ordinary chain: E_chain(α, γ) =
+    α(1 − α^γ)/(1 − α) accepted tokens. Extra branches only matter when
+    the primary ROOT is rejected (prob 1 − α): an alternative root is the
+    draft's k-th-best token, which matches the target's argmax with a
+    decayed probability r = decay·α (top-2 swaps dominate draft–target
+    disagreement, but each further rank is less likely — ``decay``
+    calibrates how much of α survives the rank demotion). A rescued
+    branch contributes its root plus a fresh (γ − 1)-deep chain below it.
+
+    With b = 1 this reduces exactly to E_chain — the analytic mirror of
+    the degenerate-tree bit-identity. Host-side float math (feeds the AWC
+    joint {γ, b} decision and DSD-Sim's tree acceptance replay)."""
+    a = min(max(float(alpha), 0.0), 1.0 - 1e-9)
+    g = max(float(gamma), 0.0)
+    b = max(float(branches), 1.0)
+
+    def chain(depth: float) -> float:
+        return a * (1.0 - a ** depth) / (1.0 - a) if depth > 0 else 0.0
+
+    r = min(max(decay * a, 0.0), 1.0)
+    rescue_p = (1.0 - a) * (1.0 - (1.0 - r) ** (b - 1.0))
+    return chain(g) + rescue_p * (1.0 + chain(g - 1.0))
+
+
+class TreeVerifyResult(NamedTuple):
+    """Per-slot verdict of one tree verify pass (pre-lifecycle)."""
+    n_accepted: jax.Array   # (B,) int32 — depth of the winning entry
+    next_token: jax.Array   # (B,) int32 — target prediction at the winner
+    winner: jax.Array       # (B,) int32 — winning entry index
+    path: jax.Array         # (B, d_max) int32 — root-path entries (0 pad)
+    accept: jax.Array       # (B, T) bool — accepted-entry bitmap
+
+
+def verify_tree_greedy(tree_tokens: jax.Array,    # (B, T) int32
+                       p_logits: jax.Array,       # (B, T, V)
+                       parent_entry: jax.Array,   # (T,) int32
+                       tree_pos: jax.Array,       # (T,) int32
+                       node_valid: jax.Array,     # (T,) bool
+                       win_mask: jax.Array,       # (T, T) bool ancestor map
+                       d_max: int) -> TreeVerifyResult:
+    """Longest-accepted-root-path rule over one target pass's logits.
+
+    Generalizes :func:`repro.core.specdec.verify_window_greedy`: with the
+    degenerate chain grid (b_max = 1) the two agree bit-for-bit (accept
+    prefix, count, bonus token)."""
+    B, T = tree_tokens.shape
+    tgt = jnp.argmax(p_logits, axis=-1).astype(jnp.int32)          # (B, T)
+    parent_tgt = jnp.take_along_axis(
+        tgt, jnp.broadcast_to(parent_entry[None, :], (B, T)), axis=1)
+    match = node_valid[None, :] & (tree_tokens == parent_tgt)
+    match = match.at[:, 0].set(True)                               # anchor
+    # accept[e] = AND over ancestors-or-self of match — one masked all().
+    accept = jnp.all(match[:, None, :] | ~win_mask[None, :, :], axis=-1)
+
+    # Deepest accepted entry; ties break toward the lowest entry index
+    # (the best-ranked branch of that depth).
+    entry = jnp.arange(T)
+    score = jnp.where(accept, tree_pos[None, :] * T + (T - entry)[None, :],
+                      -1)
+    winner = jnp.argmax(score, axis=-1).astype(jnp.int32)          # (B,)
+    n_acc = jnp.take(tree_pos, winner).astype(jnp.int32)
+    bonus = jnp.take_along_axis(tgt, winner[:, None], axis=1)[:, 0]
+
+    path = tree_path_from_winner(winner, parent_entry, tree_pos, d_max)
+    return TreeVerifyResult(n_accepted=n_acc,
+                            next_token=bonus.astype(jnp.int32),
+                            winner=winner, path=path, accept=accept)
+
+
+def tree_path_from_winner(winner: jax.Array, parent_entry: jax.Array,
+                          tree_pos: jax.Array, d_max: int) -> jax.Array:
+    """(B, d_max) root-path entries of ``winner``: a static d_max-step
+    parent walk scattering each visited entry into its depth slot (the
+    anchor contributes nothing; depths beyond the winner stay 0)."""
+    B = winner.shape[0]
+    path = jnp.zeros((B, d_max), jnp.int32)
+    darange = jnp.arange(d_max)[None, :]
+    cur = winner
+    for _ in range(d_max):
+        dcur = jnp.take(tree_pos, cur)                             # (B,)
+        hit = (darange == (dcur - 1)[:, None]) & (cur != 0)[:, None]
+        path = jnp.where(hit, cur[:, None], path)
+        cur = jnp.take(parent_entry, cur)
+    return path
+
+
+def tree_committed(tree_tokens: jax.Array, res: TreeVerifyResult,
+                   d_max: int) -> tuple[jax.Array, jax.Array]:
+    """(new_tokens (B, d_max+1), num_new (B,)) — the committed window.
+
+    Mirrors the linear step's corrected/bonus assembly: positions
+    0..n_acc−1 are the winning path's draft tokens, position n_acc is the
+    bonus token, the rest are −1-padded."""
+    path_tokens = jnp.take_along_axis(tree_tokens, res.path, axis=1)
+    committed = jnp.concatenate(
+        [path_tokens, jnp.zeros_like(path_tokens[:, :1])], axis=1)
+    arange = jnp.arange(d_max + 1)[None, :]
+    committed = jnp.where(arange == res.n_accepted[:, None],
+                          res.next_token[:, None], committed)
+    num_new = res.n_accepted + 1
+    new_tokens = jnp.where(arange < num_new[:, None], committed, -1)
+    return new_tokens, num_new
+
+
+def tree_propose(model, params, cache, last_token: jax.Array,
+                 pos: jax.Array, spec: TreeSpec):
+    """Draft a full (d_max, b_max) grid in lockstep depth rounds.
+
+    One anchor decode yields the top-b_max root tokens; each subsequent
+    depth is ONE b_max-wide masked window pass (all branches advance
+    together), writing slots ``pos + entry`` at logical positions
+    ``pos + 1 + d`` under the ancestor mask. The final depth's KV is not
+    written — the same tail hole the linear propose scan leaves, masked
+    by pos_map either way.
+
+    Returns ``(tree_tokens (B, T) int32, cache)``. The grid is proposed
+    unconditionally; the round's (γ, b) only masks acceptance, exactly
+    like the linear path always scanning γ_max.
+    """
+    d_max, b_max, T = spec.d_max, spec.b_max, spec.n_entries
+    logits, cache = model.decode_step(params, last_token, cache, pos)
+    _, roots = jax.lax.top_k(logits, b_max)
+    frontier = roots.astype(jnp.int32)                       # (B, b_max)
+    rows = [frontier]
+    for d in range(d_max - 1):
+        lo, hi = spec.row_slice(d)
+        slot_off = jnp.arange(lo, hi, dtype=jnp.int32)
+        pos_off = jnp.full((b_max,), 1 + d, jnp.int32)
+        lg, cache = model.verify_step(
+            params, frontier, cache, pos, slot_off=slot_off,
+            pos_off=pos_off, win_mask=spec.win_mask[lo:hi, :])
+        frontier = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        rows.append(frontier)
+    tree_tokens = jnp.concatenate([last_token[:, None]] + rows, axis=1)
+    return tree_tokens, cache

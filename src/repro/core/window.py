@@ -28,23 +28,30 @@ class FeatureSnapshot:
     windows that survived their verdict (pipelined execution overlaps
     window k+1's draft with window k's verification; a hit means the
     overlapped RTT was genuinely hidden). 0.0 whenever pipelining is off —
-    the controller's overlapped-RTT discount must stay inert there."""
+    the controller's overlapped-RTT discount must stay inert there.
+
+    ``branches_prev`` is the branch width of the previous round's
+    speculation tree (1.0 outside tree sessions — the feature is inert on
+    linear deployments, like ``pipe_hit_recent`` outside pipelining)."""
     q_depth: float        # recent target-queue depth utilization in [0, ~]
     alpha_recent: float   # recent token acceptance rate in [0,1]
     rtt_recent_ms: float  # recent link round-trip time
     tpot_recent_ms: float # recent time-per-output-token of the target
     gamma_prev: float     # previous window size
     pipe_hit_recent: float = 0.0  # recent pipeline hit rate in [0,1]
+    branches_prev: float = 1.0    # previous tree branch width (1 = linear)
 
     def as_list(self) -> list[float]:
         return [self.q_depth, self.alpha_recent, self.rtt_recent_ms,
-                self.tpot_recent_ms, self.gamma_prev, self.pipe_hit_recent]
+                self.tpot_recent_ms, self.gamma_prev, self.pipe_hit_recent,
+                self.branches_prev]
 
 
 @dataclass(frozen=True)
 class WindowDecision:
     gamma: int
     mode: str  # "distributed" | "fused"
+    branches: int = 1  # speculation-tree branch width (1 = linear chain)
 
 
 class WindowPolicy(Protocol):
@@ -53,11 +60,12 @@ class WindowPolicy(Protocol):
 
 
 class StaticWindowPolicy:
-    def __init__(self, gamma: int = 4):
+    def __init__(self, gamma: int = 4, branches: int = 1):
         self.gamma = int(gamma)
+        self.branches = max(1, int(branches))
 
     def decide(self, pair_key: str, feats: FeatureSnapshot) -> WindowDecision:
-        return WindowDecision(self.gamma, "distributed")
+        return WindowDecision(self.gamma, "distributed", self.branches)
 
     def gamma_bound(self) -> int:
         """Largest γ this policy can ever emit — the engine compiles its
@@ -65,6 +73,8 @@ class StaticWindowPolicy:
         return self.gamma
 
     def name(self) -> str:
+        if self.branches > 1:
+            return f"static-{self.gamma}x{self.branches}"
         return f"static-{self.gamma}"
 
 
@@ -103,10 +113,41 @@ class AWCWindowPolicy:
     """
 
     def __init__(self, predictor: Callable[[list[float]], float],
-                 stab_cfg: StabilizerConfig | None = None):
+                 stab_cfg: StabilizerConfig | None = None,
+                 max_branches: int = 1, bandwidth_gbps: float = 1.0):
         self.predictor = predictor
         self.stab_cfg = stab_cfg or StabilizerConfig()
         self._stab: dict[str, WindowStabilizer] = {}
+        self.max_branches = max(1, int(max_branches))
+        self.bandwidth_gbps = float(bandwidth_gbps)
+
+    def _pick_branches(self, gamma: int, feats: FeatureSnapshot) -> int:
+        """Joint {γ, b} decision: widen the tree while the marginal
+        expected-accepted gain of one more branch beats its cost.
+
+        The gain comes from :func:`repro.core.tree.tree_expected_accepted`
+        (branch rescue only pays off when α is low — the formula encodes
+        that, no separate α threshold needed). The cost is the extra wire
+        serialization a wider grid adds (12 B/node at the link's
+        bandwidth), converted to token-equivalents via the recent TPOT,
+        plus a small floor so near-zero gains do not buy extra draft
+        passes."""
+        from .tree import tree_expected_accepted
+        if self.max_branches <= 1 or gamma < 1:
+            return 1
+        tpot = max(0.1, feats.tpot_recent_ms)
+        # one extra branch adds γ grid nodes → 12·γ bytes on the uplink
+        ser_ms = 12 * gamma * 8 / (self.bandwidth_gbps * 1e9) * 1e3
+        floor = max(0.02, ser_ms / tpot)
+        b = 1
+        prev = tree_expected_accepted(feats.alpha_recent, gamma, 1)
+        while b < self.max_branches:
+            nxt = tree_expected_accepted(feats.alpha_recent, gamma, b + 1)
+            if nxt - prev <= floor:
+                break
+            prev = nxt
+            b += 1
+        return b
 
     def decide(self, pair_key: str, feats: FeatureSnapshot) -> WindowDecision:
         stab = self._stab.get(pair_key)
@@ -114,7 +155,9 @@ class AWCWindowPolicy:
             stab = self._stab[pair_key] = WindowStabilizer(self.stab_cfg)
         raw = float(self.predictor(feats.as_list()))
         gamma, mode = stab.step(raw)
-        return WindowDecision(gamma, mode)
+        branches = (self._pick_branches(gamma, feats)
+                    if mode == "distributed" else 1)
+        return WindowDecision(gamma, mode, branches)
 
     def gamma_bound(self) -> int:
         return int(self.stab_cfg.clamp_hi)
@@ -125,14 +168,18 @@ class AWCWindowPolicy:
 
 def make_window_policy(kind: str, *, gamma: int = 4, hi: float = 0.75,
                        lo: float = 0.25, gmax: int = 12, predictor=None,
-                       stab_cfg: StabilizerConfig | None = None):
+                       stab_cfg: StabilizerConfig | None = None,
+                       branches: int = 1, max_branches: int = 1,
+                       bandwidth_gbps: float = 1.0):
     """One window-policy factory for every config surface (the topology
     spec layer, ``launch.serve`` flags, DSD-Sim's YAML reader): a policy
     *kind* plus its knobs → a fresh policy instance. Fresh matters — each
     call returns its own adaptation state, so two deployment surfaces can
-    never accidentally share a stabilizer."""
+    never accidentally share a stabilizer. ``branches``/``max_branches``
+    opt a policy into tree speculation (static width vs AWC's joint
+    {γ, b} choice); both default to 1 — the linear chain."""
     if kind == "static":
-        return StaticWindowPolicy(int(gamma))
+        return StaticWindowPolicy(int(gamma), branches=int(branches))
     if kind == "dynamic":
         return DynamicWindowPolicy(hi=float(hi), lo=float(lo),
                                    gamma0=int(gamma), gmax=int(gmax))
@@ -140,7 +187,9 @@ def make_window_policy(kind: str, *, gamma: int = 4, hi: float = 0.75,
         if predictor is None:
             from .awc.model import default_predictor
             predictor = default_predictor()
-        return AWCWindowPolicy(predictor, stab_cfg=stab_cfg)
+        return AWCWindowPolicy(predictor, stab_cfg=stab_cfg,
+                               max_branches=int(max_branches),
+                               bandwidth_gbps=float(bandwidth_gbps))
     raise ValueError(f"unknown window policy kind {kind!r}; "
                      "expected static | dynamic | awc")
 

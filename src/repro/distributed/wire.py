@@ -53,17 +53,29 @@ from ..sim.network import verdict_payload_bytes, window_payload_bytes
 
 @dataclass
 class WindowMsg:
-    """Draft → target: one speculation window for the whole slot batch."""
-    tokens: np.ndarray            # (B, gamma_max) int32 draft proposals
+    """Draft → target: one speculation window for the whole slot batch.
+
+    Tree rounds (``n_nodes > 0``) ship the (B, T) grid window — entry 0
+    is the anchor — plus the (T,) parent table that pins the tree
+    topology; the payload is then priced per NODE (token id + parent
+    index + per-node q(t)), strictly more bytes than a linear window of
+    the same depth. ``n_nodes == 0`` is today's linear chain, byte-for-
+    byte unchanged on the wire."""
+    tokens: np.ndarray            # (B, gamma_max | n_nodes) int32 proposals
     gamma: int                    # active window size this round (≤ gamma_max)
     n_active: int                 # slots actually decoding (payload scaling)
     q_probs: Any = None           # (B, gamma_max, V) draft dists (temp > 0)
     round_id: int = 0             # exchange ordinal (pairs with its verdict)
     speculative: bool = False     # optimistic pipeline window (invalidatable)
+    n_nodes: int = 0              # tree entries incl. anchor (0 = linear)
+    branches: int = 1             # active branch width this round (≤ b_max)
+    parent: Any = None            # (n_nodes,) int32 parent table (tree only)
 
     @property
     def payload_bytes(self) -> int:
-        return max(1, self.n_active) * window_payload_bytes(self.gamma)
+        per = (window_payload_bytes(self.gamma, n_nodes=self.n_nodes)
+               if self.n_nodes else window_payload_bytes(self.gamma))
+        return max(1, self.n_active) * per
 
 
 @dataclass
@@ -82,6 +94,9 @@ class VerdictMsg:
     gamma: int
     n_active: int
     round_id: int = 0             # id of the window this verdict answers
+    path: Any = None              # (B, d_max) int32 winning-path entries
+                                  # (tree rounds — drives the draft's KV
+                                  # relocation; None for linear rounds)
 
     @property
     def payload_bytes(self) -> int:
@@ -92,30 +107,47 @@ class VerdictMsg:
 # Byte serialization (the multi-process-transport seam)
 # --------------------------------------------------------------------------
 
-_WINDOW_HDR = struct.Struct("<4sqiiiiB")    # magic, round, γ, n_active, B, Γ, spec
-_VERDICT_HDR = struct.Struct("<4sqiii")     # magic, round, γ, n_active, B
+# magic, round, γ, n_active, B, Γ|T, spec byte, n_nodes, branches
+_WINDOW_HDR = struct.Struct("<4sqiiiiBii")
+# magic, round, γ, n_active, B, path width (0 = linear verdict)
+_VERDICT_HDR = struct.Struct("<4sqiiii")
 _WINDOW_MAGIC = b"DSDW"
 _VERDICT_MAGIC = b"DSDV"
 
 
 def encode_window(msg: WindowMsg) -> bytes:
     """Serialize a window to bytes (token ids only — ``q_probs`` is the
-    documented device pass-through and does not cross this seam)."""
+    documented device pass-through and does not cross this seam). Tree
+    windows append the (n_nodes,) int32 parent table after the tokens."""
     tokens = np.ascontiguousarray(msg.tokens, np.int32)
     B, G = tokens.shape
     head = _WINDOW_HDR.pack(_WINDOW_MAGIC, msg.round_id, msg.gamma,
-                            msg.n_active, B, G, 1 if msg.speculative else 0)
-    return head + tokens.tobytes()
+                            msg.n_active, B, G, 1 if msg.speculative else 0,
+                            msg.n_nodes, msg.branches)
+    blob = head + tokens.tobytes()
+    if msg.n_nodes:
+        parent = np.ascontiguousarray(msg.parent, np.int32)
+        assert parent.shape == (msg.n_nodes,), (parent.shape, msg.n_nodes)
+        blob += parent.tobytes()
+    return blob
 
 
 def decode_window(blob: bytes) -> WindowMsg:
-    magic, round_id, gamma, n_active, B, G, spec = _WINDOW_HDR.unpack_from(blob)
+    (magic, round_id, gamma, n_active, B, G, spec, n_nodes,
+     branches) = _WINDOW_HDR.unpack_from(blob)
     if magic != _WINDOW_MAGIC:
         raise ValueError(f"bad window magic {magic!r}")
+    off = _WINDOW_HDR.size
     tokens = np.frombuffer(blob, np.int32, count=B * G,
-                           offset=_WINDOW_HDR.size).reshape(B, G).copy()
+                           offset=off).reshape(B, G).copy()
+    off += 4 * B * G
+    parent = None
+    if n_nodes:
+        parent = np.frombuffer(blob, np.int32, count=n_nodes,
+                               offset=off).copy()
     return WindowMsg(tokens=tokens, gamma=gamma, n_active=n_active,
-                     round_id=round_id, speculative=bool(spec))
+                     round_id=round_id, speculative=bool(spec),
+                     n_nodes=n_nodes, branches=branches, parent=parent)
 
 
 def encode_verdict(msg: VerdictMsg) -> bytes:
@@ -123,13 +155,20 @@ def encode_verdict(msg: VerdictMsg) -> bytes:
             (msg.n_accepted, msg.num_new, msg.next_token, msg.last_token)]
     done = np.ascontiguousarray(msg.done, np.uint8)
     B = arrs[0].shape[0]
+    path = (None if msg.path is None
+            else np.ascontiguousarray(msg.path, np.int32))
+    D = 0 if path is None else path.shape[1]
     head = _VERDICT_HDR.pack(_VERDICT_MAGIC, msg.round_id, msg.gamma,
-                             msg.n_active, B)
-    return head + b"".join(a.tobytes() for a in arrs) + done.tobytes()
+                             msg.n_active, B, D)
+    blob = head + b"".join(a.tobytes() for a in arrs) + done.tobytes()
+    if path is not None:
+        assert path.shape == (B, D), (path.shape, B, D)
+        blob += path.tobytes()
+    return blob
 
 
 def decode_verdict(blob: bytes) -> VerdictMsg:
-    magic, round_id, gamma, n_active, B = _VERDICT_HDR.unpack_from(blob)
+    magic, round_id, gamma, n_active, B, D = _VERDICT_HDR.unpack_from(blob)
     if magic != _VERDICT_MAGIC:
         raise ValueError(f"bad verdict magic {magic!r}")
     off = _VERDICT_HDR.size
@@ -138,6 +177,11 @@ def decode_verdict(blob: bytes) -> VerdictMsg:
         arrs.append(np.frombuffer(blob, np.int32, count=B, offset=off).copy())
         off += 4 * B
     done = np.frombuffer(blob, np.uint8, count=B, offset=off).astype(bool)
+    off += B
+    path = None
+    if D:
+        path = np.frombuffer(blob, np.int32, count=B * D,
+                             offset=off).reshape(B, D).copy()
     return VerdictMsg(n_accepted=arrs[0], num_new=arrs[1], next_token=arrs[2],
                       last_token=arrs[3], done=done, gamma=gamma,
-                      n_active=n_active, round_id=round_id)
+                      n_active=n_active, round_id=round_id, path=path)

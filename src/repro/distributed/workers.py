@@ -45,6 +45,9 @@ from ..core.engine import _accumulate, _scan_cache_advance, _tree_where
 from ..core.specdec import (SpecDecodeOut, _temperature_probs, draft_propose,
                             slot_stop_mask, verify_window,
                             verify_window_greedy)
+from ..core.tree import (TreeSpec, tree_committed, tree_propose,
+                         verify_tree_greedy)
+from ..models.kvcache import tree_commit_cache
 
 
 class DraftWorker:
@@ -76,6 +79,51 @@ class DraftWorker:
             prop = draft_propose(decode, params, dcache, last_token, pos,
                                  gamma_max, key, self.temperature)
             return prop.tokens, prop.q_probs, prop.cache
+
+        cache[keyt] = jax.jit(fn)
+        return cache[keyt]
+
+    def propose_tree(self, d_max: int, b_max: int):
+        """(params, cache, last_token, pos) → (tree_tokens (B, T), cache).
+
+        Greedy grid-tree proposal (:func:`repro.core.tree.tree_propose`):
+        one anchor decode + ``d_max − 1`` lockstep frontier passes, always
+        the full (d_max, b_max) grid — the round's (γ, b) only masks
+        acceptance target-side, like the linear propose always scanning
+        γ_max. Attention drafts only (tree slots need a KV pos_map)."""
+        keyt = ("dw_propose_tree", d_max, b_max)
+        cache = self.engine._jit_cache
+        if keyt in cache:
+            return cache[keyt]
+        assert self.attention, \
+            "tree speculation needs an attention-family draft"
+        spec = TreeSpec(d_max, b_max)
+
+        def fn(params, dcache, last_token, pos):
+            return tree_propose(self.model, params, dcache, last_token,
+                                pos, spec)
+
+        cache[keyt] = jax.jit(fn)
+        return cache[keyt]
+
+    def ingest_tree(self, d_max: int, b_max: int):
+        """(propose_cache, pos, path, n_accepted) → cache.
+
+        Verdict application for tree rounds: relocate the winning path's
+        KV from grid slots onto the canonical linear slots and scrub the
+        losing branches — the draft-side mirror of the target's tree
+        commit, so both caches agree on the committed prefix layout."""
+        keyt = ("dw_ingest_tree", d_max, b_max)
+        cache = self.engine._jit_cache
+        if keyt in cache:
+            return cache[keyt]
+        assert self.attention, \
+            "tree speculation needs an attention-family draft"
+        n_entries = 1 + d_max * b_max
+
+        def fn(dcache, pos, path, n_accepted):
+            return tree_commit_cache(dcache, pos, path, n_accepted,
+                                     n_entries)
 
         cache[keyt] = jax.jit(fn)
         return cache[keyt]
@@ -209,5 +257,64 @@ class TargetWorker:
                             max_new, done, row_idx, eos_id)
         else:
             fn = core
+        cache[keyt] = jax.jit(fn)
+        return cache[keyt]
+
+    def verify_commit_tree(self, d_max: int, b_max: int):
+        """The tree-round verdict program (greedy only).
+
+        Signature::
+
+            (params, tcache, tree_tokens, pos, active_gamma, branches,
+             out_buf, cursor, nacc_buf, nn_buf, max_new, done, row_idx,
+             eos_id)
+            → (tcache, pos, last_token, out_buf, cursor, nacc_buf, nn_buf,
+               done, num_new, n_accepted, next_token_raw, path)
+
+        ``tree_tokens`` is the (B, T) grid window (entry 0 = anchor); one
+        ancestor-masked verify pass scores every entry, the longest-
+        accepted-root-path rule picks the winner, and
+        :func:`repro.models.kvcache.tree_commit_cache` relocates the
+        winning path onto the canonical linear slots. The extra ``path``
+        output lets the draft side run the same relocation on its propose
+        cache (:meth:`DraftWorker.ingest_tree`). Attention targets only —
+        the grid writes slots ≠ positions, which needs a pos_map."""
+        keyt = ("tw_verify_tree", d_max, b_max)
+        cache = self.engine._jit_cache
+        if keyt in cache:
+            return cache[keyt]
+        assert self.temperature <= 0.0, \
+            "tree speculation is greedy-only (no per-branch q dists yet)"
+        assert self.attention, \
+            "tree speculation needs an attention-family target"
+        spec = TreeSpec(d_max, b_max)
+        T = spec.n_entries
+
+        def fn(params, tcache, tree_tokens, pos, active_gamma, branches,
+               out_buf, cursor, nacc_buf, nn_buf, max_new, done, row_idx,
+               eos_id):
+            p_logits, tcache_spec = self.model.verify_step(
+                params, tree_tokens, tcache, pos,
+                slot_off=jnp.arange(T, dtype=jnp.int32),
+                pos_off=spec.tree_pos, win_mask=spec.win_mask)
+            node_valid = spec.node_valid(active_gamma, branches)
+            res = verify_tree_greedy(tree_tokens, p_logits,
+                                     spec.parent_entry, spec.tree_pos,
+                                     node_valid, spec.win_mask, d_max)
+            new_tokens, num_new = tree_committed(tree_tokens, res, d_max)
+            stop = slot_stop_mask(num_new, res.n_accepted, new_tokens,
+                                  cursor, max_new, done, eos_id)
+            tcache_new = tree_commit_cache(tcache_spec, pos, res.path,
+                                           stop.n_accepted, T)
+            out = SpecDecodeOut(state=None, new_tokens=new_tokens,
+                                num_new=stop.num_new,
+                                n_accepted=stop.n_accepted)
+            out_buf, cursor, nacc_buf, nn_buf = _accumulate(
+                out, out_buf, cursor, nacc_buf, nn_buf, row_idx)
+            last = jnp.where(done, tree_tokens[:, 0], res.next_token)
+            return (tcache_new, pos + stop.num_new, last, out_buf, cursor,
+                    nacc_buf, nn_buf, stop.done, stop.num_new,
+                    stop.n_accepted, res.next_token, res.path)
+
         cache[keyt] = jax.jit(fn)
         return cache[keyt]

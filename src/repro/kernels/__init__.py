@@ -5,6 +5,8 @@
 - ssd          — Mamba2/SSD chunked scan
 """
 
+import functools as _functools
+
 import jax as _jax
 from jax.experimental.pallas import tpu as _pltpu
 
@@ -18,6 +20,15 @@ def default_interpret() -> bool:
 
 def resolve_interpret(flag) -> bool:
     return default_interpret() if flag is None else bool(flag)
+
+
+def kernel_op(*static_argnames):
+    """Shared jit decorator for the public kernel wrappers: every op takes
+    an ``interpret=None`` kwarg (resolved inside the pallas_call layer via
+    :func:`resolve_interpret`), so ``interpret`` is always static alongside
+    the op's own shape/tiling statics."""
+    return _functools.partial(_jax.jit,
+                              static_argnames=(*static_argnames, "interpret"))
 
 
 def tpu_compiler_params(**kwargs):

@@ -3,17 +3,16 @@ padding to the sequence tile, static window/shape handling."""
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from .. import kernel_op
 from .decode_attn import S_TILE, decode_attn_call
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("window", "s_tile", "interpret"))
+@kernel_op("window", "s_tile")
 def decode_attention(q: jax.Array,        # (B, T, H, hd)
                      k: jax.Array,        # (B, S, Hkv, hd)
                      v: jax.Array,

@@ -3,15 +3,14 @@
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
+from .. import kernel_op
 from .ssd import CHUNK, ssd_call
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+@kernel_op("chunk")
 def ssd_chunked_kernel(x, Bm, Cm, dt, A, h_in, chunk: int = CHUNK,
                        interpret=None):
     """Same contract as models.ssm.ssd_chunked: padded dt rows must be zero

@@ -3,16 +3,16 @@ residual reduce) → O(Bγ) acceptance glue → pass B (inverse-CDF sample)."""
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
+from .. import kernel_op
 from .verify import VOCAB_TILE, cdf_sample_call, gather_reduce_call
+from .tree import tree_accept_call, tree_argmax_call
 from .ref import VerifyOut
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+@kernel_op("tile")
 def verify_window_fused(draft_tokens: jax.Array,   # (B, γ) int32
                         q_probs: jax.Array,        # (B, γ, V)
                         p_probs: jax.Array,        # (B, γ+1, V)
@@ -51,3 +51,37 @@ def verify_window_fused(draft_tokens: jax.Array,   # (B, γ) int32
     return VerifyOut(n_accepted=n_acc.astype(jnp.int32),
                      next_token=token.astype(jnp.int32),
                      accept_mask=accept)
+
+
+@kernel_op("tile")
+def tree_verify_fused(tree_tokens: jax.Array,    # (B, T) int32
+                      p_logits: jax.Array,       # (B, T, V)
+                      parent_entry: jax.Array,   # (T,) int32
+                      tree_pos: jax.Array,       # (T,) int32
+                      node_valid: jax.Array,     # (T,) bool (traced mask)
+                      win_mask: jax.Array,       # (T, T) bool ancestor map
+                      tile: int = VOCAB_TILE,
+                      interpret=None):
+    """Fused greedy tree-verify: (n_accepted, winner, bonus) — the same
+    verdict triple :func:`repro.core.tree.verify_tree_greedy` derives,
+    without materializing the (B, T) argmax glue in HBM. Pass A streams
+    the vocab in tiles for the per-entry target argmax; pass B runs the
+    longest-accepted-root-path rule per batch row on VMEM-resident tree
+    tables."""
+    B, T = tree_tokens.shape
+    V = p_logits.shape[-1]
+    pad = (-V) % tile
+    if pad:
+        # -inf padding keeps the argmax on real vocab entries
+        p_logits = jnp.pad(p_logits, ((0, 0), (0, 0), (0, pad)),
+                           constant_values=float("-inf"))
+
+    tgt = tree_argmax_call(p_logits, tile, interpret=interpret)
+    n_acc, winner, bonus = tree_accept_call(
+        tree_tokens.astype(jnp.int32), tgt,
+        parent_entry[None, :].astype(jnp.int32),
+        tree_pos[None, :].astype(jnp.int32),
+        node_valid[None, :].astype(jnp.int32),
+        win_mask.astype(jnp.int32), interpret=interpret)
+    return (n_acc.astype(jnp.int32), winner.astype(jnp.int32),
+            bonus.astype(jnp.int32))

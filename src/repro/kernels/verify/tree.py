@@ -1,0 +1,139 @@
+"""Pallas TPU kernels for fused tree-verify (greedy, grid-family trees).
+
+The tree verify hot-spot is extracting the target argmax at every tree
+entry from the (B, T, V) logits of the single masked pass — V is far
+beyond VMEM, so the vocab streams through in 128-aligned tiles exactly
+like the linear verify kernels. Two passes:
+
+- :func:`tree_argmax_kernel` — one sweep over the vocab per (batch,
+  entry) row keeping a running (max, argmax) pair in VMEM scratch.
+  Cross-tile ties break toward the LOWER vocab id (strict ``>`` update;
+  in-tile ``argmax`` already ties-to-first) so the kernel matches
+  ``jnp.argmax`` bit-for-bit — the contract
+  :func:`repro.core.tree.verify_tree_greedy` is written against.
+- :func:`tree_accept_kernel` — the longest-accepted-root-path rule on
+  the (T,) target tokens: parent gathers become one-hot compares against
+  an in-tile iota (no dynamic indexing), the ancestor-AND becomes a
+  masked violation count over the (T, T) bitmap, and the winner/bonus
+  come out of a one-hot reduction. All O(T²) on T = 1 + d_max·b_max ≤ a
+  few dozen — pure VPU work on a single VMEM-resident block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .. import resolve_interpret, tpu_compiler_params
+
+NEG_INF = float("-inf")
+
+
+def tree_argmax_kernel(p_ref, tgt_ref, acc_max, acc_idx):
+    """Grid (B, V/TV); running argmax across vocab tiles in VMEM scratch.
+
+    p: (1, T, TV) | tgt out (written at the last tile): (1, T) i32.
+    """
+    vt = pl.program_id(1)
+
+    @pl.when(vt == 0)
+    def _init():
+        acc_max[...] = jnp.full_like(acc_max, NEG_INF)
+        acc_idx[...] = jnp.zeros_like(acc_idx)
+
+    tv = p_ref.shape[-1]
+    base = vt * tv
+    p = p_ref[0, :, :].astype(jnp.float32)                 # (T, TV)
+    local_max = jnp.max(p, axis=-1)                        # (T,)
+    local_idx = base + jnp.argmax(p, axis=-1).astype(jnp.int32)
+    better = local_max > acc_max[...]                      # strict: keep
+    acc_idx[...] = jnp.where(better, local_idx, acc_idx[...])  # earlier tile
+    acc_max[...] = jnp.where(better, local_max, acc_max[...])  # on ties
+
+    @pl.when(vt == pl.num_programs(1) - 1)
+    def _done():
+        tgt_ref[0, :] = acc_idx[...]
+
+
+def tree_accept_kernel(tok_ref, tgt_ref, parent_ref, tpos_ref, valid_ref,
+                       mask_ref, nacc_ref, winner_ref, bonus_ref):
+    """Grid (B,); accept rule + winner selection on one sequence's tree.
+
+    tok/tgt: (1, T) i32 | parent/tpos/valid: (1, T) i32 (shared rows) |
+    mask: (T, T) i32 ancestor-or-self bitmap | outputs: (1, 1) i32 each.
+    """
+    T = tok_ref.shape[-1]
+    tok = tok_ref[0, :]
+    tgt = tgt_ref[0, :]
+    parent = parent_ref[0, :]
+    tpos = tpos_ref[0, :]
+    valid = valid_ref[0, :] > 0
+    mask = mask_ref[...] > 0                               # (T, T)
+
+    # entry ids — 2D iota then collapse (1D iota is unsupported on TPU)
+    col = jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)
+    entry = col[0, :]                                      # (T,)
+
+    # parent gather as a one-hot reduce: row e picks column parent[e]
+    onehot_parent = col == parent[:, None]
+    parent_tgt = jnp.sum(jnp.where(onehot_parent, tgt[None, :], 0), axis=-1)
+
+    match = (valid & (tok == parent_tgt)) | (entry == 0)   # anchor free
+    # accept[e] = AND over ancestors-or-self of match ⇔ zero violations
+    viol = jnp.sum(jnp.where(mask & (~match)[None, :], 1, 0), axis=-1)
+    accept = viol == 0
+
+    # deepest accepted entry, ties → lowest entry index (best branch)
+    score = jnp.where(accept, tpos * T + (T - entry), -1)
+    w = jnp.argmax(score).astype(jnp.int32)
+    onehot_w = entry == w
+    nacc_ref[0, 0] = jnp.sum(jnp.where(onehot_w, tpos, 0))
+    winner_ref[0, 0] = w
+    bonus_ref[0, 0] = jnp.sum(jnp.where(onehot_w, tgt, 0))
+
+
+def tree_argmax_call(p_logits, tile: int, interpret=None):
+    """(B, T, V) logits → (B, T) i32 per-entry target argmax."""
+    interpret = resolve_interpret(interpret)
+    B, T, V = p_logits.shape
+    assert V % tile == 0, "ops.py pads the vocab to the tile size"
+    return pl.pallas_call(
+        tree_argmax_kernel,
+        grid=(B, V // tile),
+        in_specs=[pl.BlockSpec((1, T, tile), lambda b, v: (b, 0, v))],
+        out_specs=pl.BlockSpec((1, T), lambda b, v: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((T,), jnp.float32),
+                        pltpu.VMEM((T,), jnp.int32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(p_logits)
+
+
+def tree_accept_call(tree_tokens, tgt, parent, tpos, valid, mask,
+                     interpret=None):
+    """Per-batch accept/winner/bonus. Tree tables arrive as (1, T) /
+    (T, T) i32 rows shared across the batch grid."""
+    interpret = resolve_interpret(interpret)
+    B, T = tree_tokens.shape
+    shared = pl.BlockSpec((1, T), lambda b: (0, 0))
+    outs = pl.pallas_call(
+        tree_accept_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, T), lambda b: (b, 0)),   # tokens
+            pl.BlockSpec((1, T), lambda b: (b, 0)),   # target argmax
+            shared, shared, shared,                   # parent/tpos/valid
+            pl.BlockSpec((T, T), lambda b: (0, 0)),   # ancestor bitmap
+        ],
+        out_specs=[pl.BlockSpec((1, 1), lambda b: (b, 0))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((B, 1), jnp.int32)] * 3,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(tree_tokens, tgt, parent, tpos, valid, mask)
+    n_acc, winner, bonus = outs
+    return n_acc[:, 0], winner[:, 0], bonus[:, 0]

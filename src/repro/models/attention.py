@@ -169,7 +169,10 @@ def cross_kv(p: dict, cfg: ModelConfig, enc_out: jax.Array):
 def attention_decode(x_new: jax.Array, p: dict, cfg: ModelConfig,
                      k_cache: jax.Array, v_cache: jax.Array,
                      pos_map: jax.Array, pos: jax.Array, ring: bool,
-                     window: int = 0, uniform_pos: bool = False):
+                     window: int = 0, uniform_pos: bool = False,
+                     slot_off: Optional[jax.Array] = None,
+                     pos_off: Optional[jax.Array] = None,
+                     win_mask: Optional[jax.Array] = None):
     """Decode/verify step: write the (B,T) window into the cache, attend over
     valid slots.
 
@@ -177,24 +180,35 @@ def attention_decode(x_new: jax.Array, p: dict, cfg: ModelConfig,
     Validity mask per slot s for query t:  0 ≤ pos_map[s] ≤ pos+t, and
     pos_map[s] > pos+t − window when sliding. Stale speculative entries
     (pos_map beyond the committed position) are excluded automatically.
+
+    Tree speculation (``slot_off``/``pos_off``/``win_mask``): token t
+    writes slot ``pos + slot_off[t]`` at logical position
+    ``pos + pos_off[t]`` (RoPE phase and pos_map value), and for cache
+    slots inside the window region ``[pos, pos + win_mask.shape[1])`` the
+    validity of slot ``pos + j`` for query t is OVERRIDDEN by
+    ``win_mask[t, j]`` — sibling branches tie on position, so the base
+    ``slot_pos ≤ q_pos`` rule cannot separate them; the ancestor bitmap
+    does. Slots outside the region keep the base rule (the committed
+    prefix stays visible).
     Returns (out, k_cache, v_cache, pos_map).
     """
     B, T, _ = x_new.shape
-    abs_pos = pos[:, None] + jnp.arange(T)[None, :]            # (B, T)
+    off = jnp.arange(T) if pos_off is None else pos_off
+    abs_pos = pos[:, None] + off[None, :]                      # (B, T)
     q = apply_rope(_project_q(x_new, p, cfg), abs_pos, cfg.rope_theta)
     k_new, v_new = _project_kv(x_new, p, cfg)
     k_new = apply_rope(k_new, abs_pos, cfg.rope_theta)
     k_cache, v_cache, pos_map = update_layer_cache(
         k_cache, v_cache, pos_map, k_new, v_new, pos, ring,
-        uniform_pos=uniform_pos)
+        uniform_pos=uniform_pos, slot_off=slot_off, pos_off=pos_off)
 
     out = _attend_cached(q, k_cache, v_cache, pos_map, abs_pos, window,
-                         p["wo"], x_new.dtype)
+                         p["wo"], x_new.dtype, win_mask=win_mask, pos=pos)
     return out, k_cache, v_cache, pos_map
 
 
 def _attend_cached(q, k_cache, v_cache, pos_map, abs_pos, window, wo,
-                   out_dtype):
+                   out_dtype, win_mask=None, pos=None):
     """Attend rope'd queries (B,T,H,hd) over a position-ordered cache view
     (B,S,Hkv,hd) + pos_map (B,S). Shared by the dense and paged decode
     paths — the paged path gathers its pool into exactly this view, so both
@@ -219,6 +233,17 @@ def _attend_cached(q, k_cache, v_cache, pos_map, abs_pos, window, wo,
     valid = (slot_pos >= 0) & (slot_pos <= q_pos)
     if window > 0:
         valid = valid & (slot_pos > q_pos - window)
+    if win_mask is not None:
+        # Tree window override: slot pos+j obeys win_mask[t, j] instead of
+        # the position rule, for j in [0, Wn) (see attention_decode).
+        Wn = win_mask.shape[1]
+        S_ = pos_map.shape[1]
+        rel = jnp.arange(S_)[None, :] - pos[:, None]            # (B, S)
+        in_region = (rel >= 0) & (rel < Wn)
+        ov = jnp.take(win_mask, jnp.clip(rel, 0, Wn - 1), axis=1)  # (T,B,S)
+        ov = jnp.moveaxis(ov, 0, 1)[:, None, None, :, :]        # (B,1,1,T,S)
+        valid = jnp.where(in_region[:, None, None, None, :],
+                          ov, valid)
     scores = jnp.where(valid, scores, -jnp.inf)
     weights = jax.nn.softmax(scores, axis=-1).astype(out_dtype)
     ctx = jnp.einsum("bkgts,bskh->btkgh", weights, v_cache)

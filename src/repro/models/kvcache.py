@@ -84,7 +84,9 @@ def init_attn_cache(n_layers: int, batch: int, slots: int, n_kv: int,
 def update_layer_cache(k_cache: jax.Array, v_cache: jax.Array,
                        pos_map: jax.Array, k_new: jax.Array,
                        v_new: jax.Array, pos: jax.Array, ring,
-                       uniform_pos: bool = False
+                       uniform_pos: bool = False,
+                       slot_off: Optional[jax.Array] = None,
+                       pos_off: Optional[jax.Array] = None
                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Write a (B, T, Hkv, hd) window into one layer's cache at per-sequence
     positions ``pos`` (B,). Returns updated (k, v, pos_map).
@@ -93,6 +95,12 @@ def update_layer_cache(k_cache: jax.Array, v_cache: jax.Array,
     the cache keeps its newest committed KV instead of silently overwriting
     the last slot (the old ``min(pos, S-1)`` clamp). Ring writes wrap by
     construction and cannot overflow.
+
+    ``slot_off``/``pos_off`` (each (T,) int32, non-ring only) decouple the
+    write slot (``pos + slot_off[t]``) from the stored logical position
+    (``pos + pos_off[t]``) — tree speculation places sibling branches in
+    distinct slots that share a position. Default (None) keeps slot ==
+    position == ``pos + t``, the linear layout.
 
     ``uniform_pos=True`` asserts all sequences share one position (aligned
     serving waves / chunked prefill): the write lowers to a
@@ -105,6 +113,7 @@ def update_layer_cache(k_cache: jax.Array, v_cache: jax.Array,
     B, T = k_new.shape[0], k_new.shape[1]
     S = k_cache.shape[1]
     if uniform_pos:
+        assert slot_off is None and pos_off is None
         p0 = pos[0]
         # no wrap handling: a T-token window must not straddle the ring seam
         # (serving guarantees T=1 for ring caches; see launch/shapes.py)
@@ -123,16 +132,77 @@ def update_layer_cache(k_cache: jax.Array, v_cache: jax.Array,
                                    p0 + T > S)
         return jax.lax.cond(overflow, lambda ops: ops, _write,
                             (k_cache, v_cache, pos_map))
-    abs_pos = pos[:, None] + jnp.arange(T)[None, :]           # (B, T)
+    if slot_off is not None or pos_off is not None:
+        # ``ring`` may arrive as a traced scalar (sessions canonicalize the
+        # static flag into an array); the static check only fires when the
+        # flag is still concrete — ring sessions never reach the tree path
+        # (the engine/session gates reject them first)
+        assert not (isinstance(ring, bool) and ring), \
+            "tree slot/pos decoupling needs a non-ring cache"
+    s_off = jnp.arange(T) if slot_off is None else slot_off
+    p_off = s_off if pos_off is None else pos_off
+    abs_pos = pos[:, None] + p_off[None, :]                   # (B, T)
     # non-ring: an out-of-range position indexes past S and the scatter
     # drops it (mode="drop") instead of clamping onto slot S-1
-    slot = jnp.where(ring, abs_pos % S, abs_pos)
+    write_pos = pos[:, None] + s_off[None, :]
+    slot = jnp.where(ring, write_pos % S, write_pos)
 
     batch_idx = jnp.arange(B)[:, None].repeat(T, axis=1)      # (B, T)
     k_cache = k_cache.at[batch_idx, slot].set(k_new, mode="drop")
     v_cache = v_cache.at[batch_idx, slot].set(v_new, mode="drop")
     pos_map = pos_map.at[batch_idx, slot].set(abs_pos, mode="drop")
     return k_cache, v_cache, pos_map
+
+
+def _tree_commit_layer(k, v, pm, pos, path, n_acc, n_entries, d_max):
+    """One layer of :func:`tree_commit_cache` — k/v (B,S,Hkv,hd), pm (B,S)."""
+    B, S = pm.shape
+    d_idx = jnp.arange(d_max)
+    src = jnp.clip(pos[:, None] + path, 0, S - 1)             # (B, d_max)
+    kg = jnp.take_along_axis(k, src[:, :, None, None], axis=1)
+    vg = jnp.take_along_axis(v, src[:, :, None, None], axis=1)
+    pg = jnp.take_along_axis(pm, src, axis=1)
+    # Scrub the whole window region: losing branches AND stale tails; the
+    # accepted path is re-scattered below. (Tree slots carry pos_map values
+    # below their slot index, so the linear path's slot_pos<=q_pos masking
+    # cannot be relied on here — the scrub makes staleness explicit.)
+    s_idx = jnp.arange(S)[None, :]
+    region = (s_idx > pos[:, None]) & (s_idx < pos[:, None] + n_entries)
+    pm = jnp.where(region, -1, pm)
+    valid = d_idx[None, :] < n_acc[:, None]
+    dest = jnp.where(valid, pos[:, None] + 1 + d_idx[None, :], S)  # S ⇒ drop
+    b_idx = jnp.broadcast_to(jnp.arange(B)[:, None], dest.shape)
+    k = k.at[b_idx, dest].set(kg, mode="drop")
+    v = v.at[b_idx, dest].set(vg, mode="drop")
+    # A source entry the proposer never wrote (pg < 0, the draft's tail
+    # hole) stays a hole after relocation instead of validating garbage KV.
+    new_pm = jnp.where(pg >= 0, pos[:, None] + 1 + d_idx[None, :], -1)
+    pm = pm.at[b_idx, dest].set(new_pm, mode="drop")
+    return k, v, pm
+
+
+def tree_commit_cache(cache: AttnCache, pos: jax.Array, path: jax.Array,
+                      n_acc: jax.Array, n_entries: int) -> AttnCache:
+    """Relocate a verified tree's winning path onto the canonical linear
+    slots and scrub the losers (dense non-ring caches only).
+
+    Tree entry ``e`` lives at slot ``pos + e`` with logical position
+    ``pos + tree_pos[e]`` — after the verdict, accepted depth ``d`` of the
+    winning path (entry ``path[:, d]``, ``d < n_acc``) must end up where
+    the linear layout keeps it: slot ``pos + 1 + d`` with pos_map
+    ``pos + 1 + d``. Everything else in ``(pos, pos + n_entries)`` gets
+    its pos_map scrubbed to −1 (the pos_map rollback mechanism, plus the
+    relocation the linear path never needs because its slots == positions).
+
+    ``path`` entries at ``d >= n_acc`` are ignored (dropped scatter); done
+    rows pass ``n_acc == 0`` and only scrub."""
+    assert not (isinstance(cache.ring, bool) and cache.ring), \
+        "tree speculation needs a non-ring dense cache"
+    d_max = path.shape[1]
+    k, v, pm = jax.vmap(
+        _tree_commit_layer, in_axes=(0, 0, 0, None, None, None, None, None)
+    )(cache.k, cache.v, cache.pos_map, pos, path, n_acc, n_entries, d_max)
+    return cache._replace(k=k, v=v, pos_map=pm)
 
 
 # --------------------------------------------------------------------------

@@ -337,20 +337,37 @@ class Model:
     def verify_step(self, params, window_tokens: jax.Array, cache,
                     pos: jax.Array, window: int = 0,
                     seq_lens: Optional[jax.Array] = None,
-                    uniform_pos: bool = False):
+                    uniform_pos: bool = False,
+                    slot_off: Optional[jax.Array] = None,
+                    pos_off: Optional[jax.Array] = None,
+                    win_mask: Optional[jax.Array] = None):
         """window_tokens: (B, T). Returns (logits (B,T,V), cache).
         ``seq_lens`` — right-padded batches (prefill): valid length per
-        sequence; exact identity-masking for recurrent (SSM) state."""
+        sequence; exact identity-masking for recurrent (SSM) state.
+        ``slot_off``/``pos_off``/``win_mask`` — tree-speculation window
+        layout (dense/moe attention caches only; see
+        :func:`repro.models.attention.attention_decode`)."""
         return self._window_step(params, window_tokens, cache, pos, window,
-                                 seq_lens, uniform_pos=uniform_pos)
+                                 seq_lens, uniform_pos=uniform_pos,
+                                 slot_off=slot_off, pos_off=pos_off,
+                                 win_mask=win_mask)
 
     def _window_step(self, params, tokens: jax.Array, cache, pos: jax.Array,
                      window: int = 0, seq_lens: Optional[jax.Array] = None,
-                     uniform_pos: bool = False):
+                     uniform_pos: bool = False,
+                     slot_off: Optional[jax.Array] = None,
+                     pos_off: Optional[jax.Array] = None,
+                     win_mask: Optional[jax.Array] = None):
         cfg = self.cfg
         B, T = tokens.shape
         h = params["embed"][tokens]
         w = window or 0
+        tree_args = (slot_off is not None or pos_off is not None
+                     or win_mask is not None)
+        if tree_args and (isinstance(cache, PagedAttnCache)
+                          or cfg.arch_type not in ("dense", "vlm", "moe")):
+            raise NotImplementedError(
+                "tree-speculation windows need a dense/moe AttnCache")
 
         if isinstance(cache, PagedAttnCache):
             # block_table is shared by all layers: closed over, not scanned
@@ -392,7 +409,8 @@ class Model:
                 lp, kc, vc, pm = inp
                 a, kc, vc, pm = attention_decode(
                     rms_norm(h, lp["ln1"], cfg.norm_eps), lp["attn"], cfg,
-                    kc, vc, pm, pos, cache.ring, w, uniform_pos)
+                    kc, vc, pm, pos, cache.ring, w, uniform_pos,
+                    slot_off=slot_off, pos_off=pos_off, win_mask=win_mask)
                 h = h + a
                 h, _ = self._mlp_or_moe(lp, h)
                 return h, (kc, vc, pm)

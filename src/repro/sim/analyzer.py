@@ -148,7 +148,8 @@ class Analyzer:
     # -- feature snapshot (AWC §4.1) -----------------------------------------
 
     def features(self, pair_key: str, target_id: int, rtt_recent_ms: float,
-                 gamma_prev: float) -> "FeatureTuple":
+                 gamma_prev: float,
+                 branches_prev: float = 1.0) -> "FeatureTuple":
         from ..core.window import FeatureSnapshot
         depth = self.queue_depth[target_id] / max(1, self.queue_capacity_hint)
         alpha = self.alpha_recent.get(pair_key)
@@ -160,6 +161,7 @@ class Analyzer:
             tpot_recent_ms=self.tpot_recent.mean(),
             gamma_prev=gamma_prev,
             pipe_hit_recent=pipe.mean() if pipe else 0.0,
+            branches_prev=branches_prev,
         )
 
     # -- summary --------------------------------------------------------------

@@ -161,8 +161,17 @@ class Link:
         return self._rtt.mean_recent_ms(self.spec.rtt_ms)
 
 
-def window_payload_bytes(gamma: int) -> int:
-    """Draft→target payload: token ids (4B) + per-token draft prob (4B) + header."""
+def window_payload_bytes(gamma: int, n_nodes: int | None = None) -> int:
+    """Draft→target payload: token ids (4B) + per-token draft prob (4B) + header.
+
+    Tree windows (``n_nodes`` = grid entries incl. the anchor) are priced
+    per NODE: id + draft prob + a 4B parent index that pins the topology
+    — strictly monotone in ``n_nodes``, and a linear chain shipped as a
+    degenerate tree (n_nodes = γ + 1) costs slightly MORE than the legacy
+    chain framing (the parent table plus the anchor entry are explicit on
+    the wire)."""
+    if n_nodes is not None:
+        return 48 + 12 * n_nodes
     return 48 + 8 * gamma
 
 

@@ -239,6 +239,7 @@ class DSDSimulation:
         target_ctx = 0            # KV tokens cached on the target
         draft_ctx = rec.prompt_length
         gamma_prev = 4.0
+        branches_prev = 1.0
         # cross-round pipelining: True when the previous window was fully
         # accepted, so this round's window was already drafted and shipped
         # during the previous verification (its draft scan + outbound hop
@@ -246,7 +247,8 @@ class DSDSimulation:
         pipelined_credit = False
         while generated < rec.output_length:
             feats = self.analyzer.features(pair_key, target_id,
-                                           link.recent_rtt_ms, gamma_prev)
+                                           link.recent_rtt_ms, gamma_prev,
+                                           branches_prev=branches_prev)
             dec = pol.window.decide(pair_key, feats)
             m.gamma_sequence.append(dec.gamma)
             m.mode_sequence.append(dec.mode)
@@ -284,9 +286,22 @@ class DSDSimulation:
                 generated += chunk
                 draft_ctx = rec.prompt_length + generated
                 gamma_prev = 1.0
+                branches_prev = 1.0
                 pipelined_credit = False   # fused rounds speculate nothing
             else:
                 gamma = dec.gamma
+                # tree speculation: b > 1 widens the window to the
+                # (γ, b) grid — the draft scan stays γ serial steps
+                # (branches advance in LOCKSTEP, one masked pass per
+                # depth), but the wire pays per NODE and the verify pass
+                # computes the whole grid. Pipelining keeps b = 1 (the
+                # real path forbids the combination too).
+                branches = max(1, int(getattr(dec, "branches", 1)))
+                if self.pipeline:
+                    branches = 1
+                n_nodes = 1 + gamma * branches
+                out_bytes = (window_payload_bytes(gamma, n_nodes=n_nodes)
+                             if branches > 1 else window_payload_bytes(gamma))
                 per_step = self.hw.decode_ms(draft_hw, draft_model,
                                              [draft_ctx])
                 draft_scan_ms = gamma * per_step
@@ -295,17 +310,18 @@ class DSDSimulation:
                     # previous window was being verified: neither the
                     # draft scan nor the outbound hop costs time here —
                     # the bytes still crossed the wire
-                    d_out = link.charge(window_payload_bytes(gamma))
+                    d_out = link.charge(out_bytes)
                 else:
                     iter_draft_ms = draft_scan_ms
                     yield env.timeout(draft_scan_ms)
-                    ev = link.transfer(window_payload_bytes(gamma))
+                    ev = link.transfer(out_bytes)
                     d_out = link.last_delay_ms
                     iter_link_ms += d_out
                     yield ev
                 prefill_extra = rec.prompt_length if target_ctx == 0 else 0
                 job = Job(request_id=rec.request_id, kind="verify",
-                          context_len=target_ctx, new_tokens=prefill_extra + gamma,
+                          context_len=target_ctx,
+                          new_tokens=prefill_extra + gamma * branches,
                           done=env.event(), sort_len=target_ctx + prefill_extra)
                 self._enqueue(target_id, job)
                 yield job.done
@@ -338,6 +354,20 @@ class DSDSimulation:
                     link.record_rtt(d_out + link.last_delay_ms)
                     yield ev
                     n_acc, _all = cursor.consume(gamma)
+                    if branches > 1 and n_acc == 0:
+                        # branch-decay rescue replay (mirrors
+                        # core.tree.tree_expected_accepted): the primary
+                        # chain died at its root, so an alternative root
+                        # — the draft's k-th-best token — gets its shot
+                        # with per-rank-decayed probability; a rescued
+                        # branch contributes its root plus a fresh
+                        # (γ−1)-deep chain from the acceptance stream
+                        r = 0.4 * min(0.98, max(0.02, feats.alpha_recent))
+                        rescue_p = 1.0 - (1.0 - r) ** (branches - 1)
+                        if pair_rng.random() < rescue_p:
+                            n_tail = (cursor.consume(gamma - 1)[0]
+                                      if gamma > 1 else 0)
+                            n_acc = 1 + n_tail
                     produced = min(n_acc + 1, rec.output_length - generated)
                 generated += produced
                 target_ctx = rec.prompt_length + generated
@@ -346,6 +376,7 @@ class DSDSimulation:
                 m.draft_tokens_accepted += n_acc
                 self.analyzer.record_acceptance(pair_key, gamma, n_acc)
                 gamma_prev = float(gamma)
+                branches_prev = float(branches)
 
             m.iterations += 1
             m.tokens_generated += produced

@@ -107,9 +107,9 @@ def rtt_predictor(feats):
     return 1.0 if feats[2] > 10.0 else 6.0
 
 
-def make_policy(name: str):
+def make_policy(name: str, branches: int = 1):
     if name == "static":
-        return StaticWindowPolicy(GAMMA)
+        return StaticWindowPolicy(GAMMA, branches=branches)
     if name == "dynamic":
         return DynamicWindowPolicy(gamma0=GAMMA, gmax=6)
     if name == "awc-rtt":
@@ -131,11 +131,15 @@ class Scenario:
     max_new: int = 10
     batch: int = 2
     seed: int = 3
+    max_branches: int = 0     # > 0: tree-speculation session at this bound
+    branches: int = 1         # per-round width the static policy requests
 
     @property
     def id(self) -> str:
+        tree = f"-tree{self.max_branches}x{self.branches}" \
+            if self.max_branches else ""
         return (f"{self.family}-rtt{self.rtt_ms:g}-{self.policy}-"
-                f"{self.mode_policy}")
+                f"{self.mode_policy}{tree}")
 
 
 # RTT × γ-policy × mode-policy × model-pair. Half-duplex vs pipelined vs
@@ -163,6 +167,13 @@ SCENARIOS = [
              mode_policy="pipeline"),
     Scenario(family="hybrid", rtt_ms=20.0, policy="static",
              mode_policy="pipeline"),
+    # tree speculation (attention-family, greedy, non-pipeline only):
+    # the degenerate 1-branch cell anchors bit-identity with the linear
+    # chain; the wide cell checks transport-invariance of real trees.
+    Scenario(family="dense", rtt_ms=0.0, policy="static",
+             mode_policy="distributed", max_branches=1, branches=1),
+    Scenario(family="dense", rtt_ms=20.0, policy="static",
+             mode_policy="distributed", max_branches=3, branches=3),
 ]
 
 
@@ -180,9 +191,10 @@ def run_real(engine: SpecDecodeEngine, scn: Scenario, transport_kind: str):
         else scn.mode_policy
     sess = DecodeSession(engine, capacity=scn.batch, max_new_cap=scn.max_new,
                          gamma_max=scn.gamma_max, sync_every=2, transport=tr,
-                         mode_policy=mode, key=jax.random.PRNGKey(scn.seed))
+                         mode_policy=mode, key=jax.random.PRNGKey(scn.seed),
+                         max_branches=scn.max_branches)
     sess.admit_batch(scenario_prompts(scn), scn.max_new)
-    policy = make_policy(scn.policy)
+    policy = make_policy(scn.policy, branches=scn.branches)
     max_iters = 2 * scn.max_new + 4          # fused tail: 1 token/iter
     while sess.unfinished and sess.iterations < max_iters:
         sess.run_chunk(policy)

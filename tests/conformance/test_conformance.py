@@ -54,6 +54,35 @@ def test_real_vs_real_bit_identity(scn: Scenario):
     np.testing.assert_array_equal(ref_stats.produced, stats_lk.produced)
 
 
+def test_degenerate_tree_matches_linear():
+    """max_branches=1 compiles the grid-tree step, yet its committed
+    greedy stream must be BIT-identical to the linear-chain engine on
+    every transport — the tree accept rule collapses to the masked-window
+    prefix rule when there is one branch."""
+    import dataclasses
+    eng = _engine("dense")
+    lin = Scenario(policy="static", mode_policy="distributed", rtt_ms=0.0)
+    tree = dataclasses.replace(lin, max_branches=1, branches=1)
+    for kind in ("none", "inproc", "link"):
+        ref, ref_stats, _ = run_real(eng, lin, kind)
+        got, got_stats, _ = run_real(eng, tree, kind)
+        np.testing.assert_array_equal(ref, got)
+        np.testing.assert_array_equal(ref_stats.produced, got_stats.produced)
+
+
+def test_wide_tree_commits_on_noised_pair():
+    """A 3-branch tree on a noised-copy pair (α ≈ 0.8) must still match
+    its own run across transports and actually accept draft tokens."""
+    eng = make_noised_engine("dense", gamma_max=6)
+    scn = Scenario(policy="static", mode_policy="distributed", rtt_ms=20.0,
+                   max_new=16, max_branches=3, branches=3)
+    ref, ref_stats, sess = run_real(eng, scn, "none")
+    got, _, _ = run_real(eng, scn, "link")
+    np.testing.assert_array_equal(ref, got)
+    assert sum(map(sum, ref_stats.acceptance_seqs)) > 0, \
+        "noised pair should accept tree tokens"
+
+
 def test_pipeline_hits_preserve_tokens():
     """With a noised-copy draft (α ≈ 0.8) the pipelined path takes BOTH
     branches — kept optimistic windows and rollbacks — and still commits

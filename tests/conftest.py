@@ -1,0 +1,21 @@
+"""Suite-wide fixtures.
+
+The full suite compiles several hundred XLA programs (every model arch
+in test_smoke_archs, every engine/session/transport configuration).  On
+CPU, letting all of those executables accumulate in one process
+eventually segfaults jaxlib's native compiler partway through the run —
+deterministically, and only after ~190 tests — so each module drops the
+jit/pjit executable caches it filled once its tests finish.  Re-running
+a module recompiles from scratch; within-module compile-count tests
+(compile-once gates, zero-recompile invariants) are unaffected because
+the caches are only cleared at module teardown.
+"""
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()

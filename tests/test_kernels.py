@@ -56,6 +56,42 @@ def test_verify_kernel_dtypes(dtype):
                                   np.asarray(out.n_accepted))
 
 
+# --------------------------------------------------------------------- tree
+
+@pytest.mark.parametrize("d_max,b_max,gamma,branches,V",
+                         [(3, 1, 3, 1, 1024), (4, 3, 4, 3, 2000),
+                          (4, 3, 2, 2, 1024), (5, 2, 0, 1, 512),
+                          (3, 4, 3, 4, 50304)])
+@pytest.mark.slow
+def test_tree_verify_kernel_matches_oracle(d_max, b_max, gamma, branches, V):
+    from repro.core.tree import TreeSpec, verify_tree_greedy
+    from repro.kernels.verify.ops import tree_verify_fused
+
+    spec = TreeSpec(d_max, b_max)
+    T = spec.n_entries
+    B = 3
+    rng = np.random.default_rng(d_max * 100 + b_max)
+    toks = rng.integers(0, V, (B, T)).astype(np.int32)
+    logits = rng.normal(size=(B, T, V)).astype(np.float32)
+    # plant accepted edges: target argmax at parent == child's draft token
+    for bi in range(B):
+        for e in range(1, T):
+            if rng.random() < 0.5:
+                logits[bi, spec.parent_np[e], toks[bi, e]] = 50.0
+    nv = spec.node_valid(jnp.asarray(gamma), jnp.asarray(branches))
+    ref = verify_tree_greedy(jnp.asarray(toks), jnp.asarray(logits),
+                             spec.parent_entry, spec.tree_pos, nv,
+                             spec.win_mask, d_max)
+    n_acc, winner, bonus = tree_verify_fused(
+        jnp.asarray(toks), jnp.asarray(logits), spec.parent_entry,
+        spec.tree_pos, nv, spec.win_mask)
+    np.testing.assert_array_equal(np.asarray(n_acc),
+                                  np.asarray(ref.n_accepted))
+    np.testing.assert_array_equal(np.asarray(winner), np.asarray(ref.winner))
+    np.testing.assert_array_equal(np.asarray(bonus),
+                                  np.asarray(ref.next_token))
+
+
 # -------------------------------------------------------------- decode_attn
 
 @pytest.mark.parametrize(

@@ -13,6 +13,7 @@ promises.
 
 import random
 
+import numpy as np
 import pytest
 
 from repro.sim.events import Environment
@@ -108,3 +109,32 @@ def test_verdict_payload_scales_with_gamma():
     for g in (1, 4, 8, 12):
         assert verdict_payload_bytes(g) > verdict_payload_bytes(0)
         assert verdict_payload_bytes(g) < window_payload_bytes(g) + 48
+
+
+def test_window_payload_monotone_in_node_count():
+    """Node-count pricing: strictly monotone in n_nodes at fixed γ, and a
+    degenerate 1-branch tree (T = 1 + γ) costs MORE than the plain chain
+    at the same γ — the tree frame ships a parent table the chain frame
+    doesn't need."""
+    for g in (1, 3, 8):
+        sizes = [window_payload_bytes(g, n_nodes=n) for n in range(1, 40)]
+        assert sizes == sorted(sizes) and len(set(sizes)) == len(sizes)
+        assert window_payload_bytes(g, n_nodes=1 + g) > \
+            window_payload_bytes(g)
+
+
+def test_tree_window_msg_payload_matches_model():
+    """WindowMsg.payload_bytes must equal the analytic node-count price
+    byte for byte, for chains and trees alike, scaled by active rows."""
+    from repro.distributed import WindowMsg
+    for (g, b, n_active) in [(3, 1, 2), (4, 3, 1), (2, 4, 5), (3, 2, 0)]:
+        T = 1 + g * b
+        parent = np.zeros((T,), np.int32)
+        toks = np.zeros((n_active or 1, T), np.int32)
+        tree = WindowMsg(tokens=toks, gamma=g, n_active=n_active,
+                         n_nodes=T, branches=b, parent=parent)
+        assert tree.payload_bytes == \
+            max(1, n_active) * window_payload_bytes(g, n_nodes=T)
+        chain = WindowMsg(tokens=toks[:, :g], gamma=g, n_active=n_active)
+        assert chain.payload_bytes == \
+            max(1, n_active) * window_payload_bytes(g)

@@ -161,6 +161,69 @@ def test_wire_verdict_roundtrip(B, seed, round_id, gamma, n_active):
     assert out.payload_bytes == msg.payload_bytes
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 5), st.integers(1, 4),
+       st.integers(0, 2 ** 31 - 1), st.integers(0, 2 ** 40),
+       st.integers(0, 64))
+def test_wire_tree_window_roundtrip(B, d_max, b_max, seed, round_id,
+                                    n_active):
+    """Tree WindowMsg payloads (token grid + parent table + branch count)
+    survive encode→decode bit for bit, and the framed size matches the
+    node-count-priced analytic payload model exactly."""
+    from repro.distributed import WindowMsg, decode_window, encode_window
+    from repro.sim.network import window_payload_bytes
+    rng = np.random.default_rng(seed)
+    T = 1 + d_max * b_max
+    parent = np.zeros((T,), np.int32)
+    for d in range(d_max):
+        for k in range(b_max):
+            e = 1 + d * b_max + k
+            parent[e] = 0 if d == 0 else 1 + (d - 1) * b_max + k
+    msg = WindowMsg(tokens=rng.integers(0, 2 ** 31 - 1, (B, T),
+                                        dtype=np.int32),
+                    gamma=d_max, n_active=n_active, round_id=round_id,
+                    n_nodes=T, branches=b_max, parent=parent)
+    out = decode_window(encode_window(msg))
+    np.testing.assert_array_equal(out.tokens, msg.tokens)
+    np.testing.assert_array_equal(out.parent, msg.parent)
+    assert (out.gamma, out.n_active, out.round_id, out.n_nodes,
+            out.branches) == (msg.gamma, msg.n_active, msg.round_id,
+                              msg.n_nodes, msg.branches)
+    assert out.payload_bytes == msg.payload_bytes == \
+        max(1, n_active) * window_payload_bytes(d_max, n_nodes=T)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 6), st.integers(0, 2 ** 31 - 1),
+       st.integers(0, 2 ** 40), st.integers(1, 12), st.integers(0, 64))
+def test_wire_tree_verdict_roundtrip(B, D, seed, round_id, gamma, n_active):
+    """Verdicts carrying the winning tree path round-trip exactly."""
+    from repro.distributed import VerdictMsg, decode_verdict, encode_verdict
+    rng = np.random.default_rng(seed)
+    i32 = lambda: rng.integers(0, 2 ** 31 - 1, (B,), dtype=np.int32)
+    msg = VerdictMsg(n_accepted=i32(), num_new=i32(), next_token=i32(),
+                     last_token=i32(), done=rng.integers(0, 2, (B,)) > 0,
+                     gamma=gamma, n_active=n_active, round_id=round_id,
+                     path=rng.integers(0, 2 ** 31 - 1, (B, D),
+                                       dtype=np.int32))
+    out = decode_verdict(encode_verdict(msg))
+    for f in ("n_accepted", "num_new", "next_token", "last_token", "done",
+              "path"):
+        np.testing.assert_array_equal(getattr(out, f), getattr(msg, f))
+    assert (out.gamma, out.n_active, out.round_id) == \
+        (msg.gamma, msg.n_active, msg.round_id)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 64), st.integers(0, 256), st.integers(1, 64))
+def test_payload_bytes_monotone_in_nodes(g, n, dn):
+    """Node-count-priced windows grow strictly with the tree size at any
+    γ — the link charges for every grid entry plus its parent-table row."""
+    from repro.sim.network import window_payload_bytes
+    assert window_payload_bytes(g, n_nodes=n + dn) > \
+        window_payload_bytes(g, n_nodes=n) > 0
+
+
 @settings(max_examples=50, deadline=None)
 @given(st.integers(0, 64), st.integers(1, 64))
 def test_payload_bytes_monotone_in_gamma(g, dg):
