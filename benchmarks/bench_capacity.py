@@ -37,6 +37,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro.analysis import compile_guard
 from repro.configs.base import ModelConfig
 from repro.core.engine import SpecDecodeEngine
 from repro.core.session import DecodeSession
@@ -169,11 +170,16 @@ def main(argv=None) -> int:
     run_stream(engine, prompts, geo, False)          # warmup (compiles)
     run_stream(engine, prompts, geo, True)
     run_stream(engine, prompts, geo, True, quantize=True)
-    dense = min((run_stream(engine, prompts, geo, False)
-                 for _ in range(args.repeats)), key=lambda r: r["ms_per_token"])
-    paged = min((run_stream(engine, prompts, geo, True)
-                 for _ in range(args.repeats)), key=lambda r: r["ms_per_token"])
-    int8 = run_stream(engine, prompts, geo, True, quantize=True)
+    # every variant is warm: the measured repeats must not compile again
+    with compile_guard(allowed=None, what="measured capacity repeats",
+                       track=[engine]) as cg:
+        dense = min((run_stream(engine, prompts, geo, False)
+                     for _ in range(args.repeats)),
+                    key=lambda r: r["ms_per_token"])
+        paged = min((run_stream(engine, prompts, geo, True)
+                     for _ in range(args.repeats)),
+                    key=lambda r: r["ms_per_token"])
+        int8 = run_stream(engine, prompts, geo, True, quantize=True)
     bit_identical = dense["tokens"] == paged["tokens"]
     latency_ratio = paged["ms_per_token"] / max(1e-9, dense["ms_per_token"])
 
@@ -209,6 +215,8 @@ def main(argv=None) -> int:
             "paged_over_dense": round(latency_ratio, 4),
         },
         "bit_identical_tokens": bool(bit_identical),
+        "recompiles_after_warmup": cg.count,
+        "zero_recompiles_after_warmup": cg.count == 0,
     }
     if args.smoke:
         ok = bit_identical and paged_capacity > dense_capacity

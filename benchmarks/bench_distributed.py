@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import compile_guard
 from repro.configs.base import ModelConfig
 from repro.core.awc.model import default_predictor
 from repro.core.engine import SpecDecodeEngine
@@ -456,17 +457,25 @@ def main(argv=None) -> int:
     engine.generate(prompts, max_new, StaticWindowPolicy(4),
                     gamma_max=GAMMA_MAX, sync_every=args.sync_every,
                     transport=InProcessTransport())
-    engine.generate(prompts, 4, StaticWindowPolicy(4), gamma_max=GAMMA_MAX,
-                    sync_every=args.sync_every,
+    # fused warmup must use the CELL geometry: dw_ingest's trace depends
+    # on the chunk shape, so a shorter warmup would leave one program to
+    # compile inside the guarded grid
+    engine.generate(prompts, max_new, StaticWindowPolicy(4),
+                    gamma_max=GAMMA_MAX, sync_every=args.sync_every,
                     transport=InProcessTransport(), mode_policy="fused")
     bit_identical = bit_identity_gate(engine, prompts, max_new,
                                       args.sync_every)
 
+    # every program was warmed above: the whole measured RTT×policy grid
+    # must run compile-free (adaptive γ / mode flips are traced, not
+    # recompiled)
     cells = []
-    for rtt in rtts:
-        for pol in policies:
-            cells.append(run_cell(engine, prompts, max_new,
-                                  args.sync_every, pol, rtt, args.seed))
+    with compile_guard(allowed=None, what="measured RTT×policy cells",
+                       track=[engine]) as cg:
+        for rtt in rtts:
+            for pol in policies:
+                cells.append(run_cell(engine, prompts, max_new,
+                                      args.sync_every, pol, rtt, args.seed))
 
     def cell(pol, rtt):
         return next(c for c in cells
@@ -543,6 +552,8 @@ def main(argv=None) -> int:
         "sim_parity": sim_rows,
         "two_pair": two_pair,
         "checks": {
+            "recompiles_during_cells": cg.count,
+            "zero_recompiles_during_cells": cg.count == 0,
             "awc_adapts_to_link": awc_adapts,
             "distributed_throughput_falls_with_rtt": dist_falls,
             "fused_rtt_insensitive_ratio": round(fused_ratio, 3),
@@ -569,9 +580,10 @@ def main(argv=None) -> int:
     two_ok = (two_ok_smoke
               and two_pair["checks"]["awc_pairs_diverge"]
               and two_pair["checks"]["sim_same_pair_ordering"])
-    ok = ((bit_identical and two_ok_smoke) if args.smoke
+    no_recompiles = cg.count == 0
+    ok = ((bit_identical and two_ok_smoke and no_recompiles) if args.smoke
           else (bit_identical and awc_adapts and dist_falls
-                and pipeline_beats_hd and two_ok))
+                and pipeline_beats_hd and two_ok and no_recompiles))
     print(f"\nbit_identical={bit_identical}  awc_adapts={awc_adapts}  "
           f"dist_falls={dist_falls}  pipeline_beats_hd={pipeline_beats_hd}  "
           f"sim_match={sim_awc_adapts}  "

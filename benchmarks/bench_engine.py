@@ -24,6 +24,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro.analysis import compile_guard
 from repro.configs.base import ModelConfig
 from repro.core.engine import SpecDecodeEngine
 from repro.core.session import DecodeSession
@@ -66,15 +67,17 @@ def run_workload(engine: SpecDecodeEngine, prompts, max_new: int,
     compiles = engine.compiled_programs() - c0
 
     decode_s, tokens, iters, per_iter_ms = [], 0, 0, []
-    for _ in range(repeats):
-        _, stats = engine.generate(prompts, max_new, make_policy(),
-                                   gamma_max=gamma_max)
-        d = stats.wall_s - stats.prefill_s
-        decode_s.append(d)
-        tokens += stats.tokens
-        iters += stats.iterations
-        per_iter_ms.append(d * 1e3 / max(1, stats.iterations))
-    recompiles = engine.compiled_programs() - c0 - compiles
+    with compile_guard(allowed=None, what="post-warmup repeats",
+                       track=[engine]) as guard:
+        for _ in range(repeats):
+            _, stats = engine.generate(prompts, max_new, make_policy(),
+                                       gamma_max=gamma_max)
+            d = stats.wall_s - stats.prefill_s
+            decode_s.append(d)
+            tokens += stats.tokens
+            iters += stats.iterations
+            per_iter_ms.append(d * 1e3 / max(1, stats.iterations))
+    recompiles = guard.count
     total_decode = sum(decode_s)
     return {
         "warmup_s": round(warmup_s, 4),
@@ -115,13 +118,15 @@ def run_session_workload(engine: SpecDecodeEngine, prompts, max_new: int,
     compiles = engine.compiled_programs() - c0
     tokens = 0
     decode_s = 0.0
-    for _ in range(repeats):
-        t, d = one_pass()
-        tokens += t
-        decode_s += d
+    with compile_guard(allowed=None, what="post-warmup session repeats",
+                       track=[engine]) as g:
+        for _ in range(repeats):
+            t, d = one_pass()
+            tokens += t
+            decode_s += d
     return {
         "compiles": compiles,
-        "recompiles_after_warmup": engine.compiled_programs() - c0 - compiles,
+        "recompiles_after_warmup": g.count,
         "repeats": repeats,
         "decode_s": round(decode_s, 4),
         "tokens": tokens,

@@ -33,6 +33,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro.analysis import compile_guard
 from repro.configs.base import ModelConfig
 from repro.core.engine import SpecDecodeEngine
 from repro.core.window import StaticWindowPolicy
@@ -71,9 +72,10 @@ def serve_stream(server_cls, engine, policy, cfg: ServerConfig,
     for r in stream:
         srv.submit(ServeRequest(r.request_id, r.prompt, r.max_new_tokens,
                                 arrival_s=r.arrival_s))
-    c0 = engine.compiled_programs()
     t0 = time.perf_counter()
-    results = srv.run()
+    with compile_guard(allowed=None, track=[engine],
+                       what=f"{server_cls.__name__} stream") as guard:
+        results = srv.run()
     wall_s = time.perf_counter() - t0
     tokens = int(sum(len(r.tokens) for r in results))
     ttfts = [r.ttft_ms for r in results]
@@ -90,7 +92,7 @@ def serve_stream(server_cls, engine, policy, cfg: ServerConfig,
                                               for r in results])), 2),
         "mean_acceptance": round(float(np.mean([r.acceptance_rate
                                                 for r in results])), 4),
-        "compiles_during_run": engine.compiled_programs() - c0,
+        "compiles_during_run": guard.count,
     }
 
 

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import compile_guard
 from repro.configs.base import ModelConfig
 from repro.core.engine import SpecDecodeEngine
 from repro.core.session import DecodeSession
@@ -157,12 +158,13 @@ def main(argv=None) -> int:
     # in ONE session, chunk by chunk: the program count must not move.
     warm = run_cell(engine, prompts, args.max_new, B_MAX,
                     [StaticWindowPolicy(GAMMA, branches=B_MAX)])
-    before = engine.compiled_programs()
     sweep = [StaticWindowPolicy(g, branches=b)
              for g in range(1, GAMMA_MAX + 1)
              for b in range(1, B_MAX + 1)]
-    run_cell(engine, prompts, args.max_new, B_MAX, sweep)
-    recompiles = engine.compiled_programs() - before
+    with compile_guard(allowed=None, what="(γ, b) shape sweep",
+                       track=[engine]) as guard:
+        run_cell(engine, prompts, args.max_new, B_MAX, sweep)
+    recompiles = guard.count
     recompile_ok = recompiles == 0
 
     # -- gate 3: degenerate 1-branch tree ≡ linear engine ------------------

@@ -1,0 +1,47 @@
+"""Repo-invariant static analysis + runtime sanitizers.
+
+The stack's performance claims hang on invariants the design forces but
+nothing used to machine-check:
+
+- the compile-once masked-γ loop (PR 1/7) — zero recompiles across
+  adaptive-γ / tree-shape / admission churn;
+- donation safety on ``donate_argnums`` buffers (a donated buffer is dead
+  the moment the call dispatches);
+- byte-exact ``WindowMsg``/``VerdictMsg`` codecs (the multi-process
+  transport seam serializes through them);
+- full-duplex post/recv/discard ordering in pipelined speculation.
+
+Two layers enforce them:
+
+- :mod:`repro.analysis.lint` — an AST lint engine
+  (``python -m repro.analysis.lint src``) with ``DSD0xx`` rules: traced-
+  value leaks in jit-reachable code, donated-buffer reuse, wire-schema
+  parity, Pallas interpret routing and grid-divisibility hygiene.
+- :mod:`repro.analysis.sanitize` / :mod:`repro.analysis.protocol` —
+  runtime sanitizers: :func:`compile_guard` (counts XLA backend compiles
+  via jax's monitoring events; the one recompile counter every bench
+  shares) and :class:`CheckedTransport` (validates the full-duplex
+  protocol state machine per round id across the conformance matrix).
+
+Imports here are lazy so the lint CLI stays jax-free (CI runs it before
+installing heavyweight deps compile).
+"""
+
+from __future__ import annotations
+
+_SANITIZE = ("CompileGuard", "RecompileError", "compile_guard",
+             "install_compile_listener", "jit_cache_programs",
+             "total_backend_compiles")
+_PROTOCOL = ("CheckedTransport", "ProtocolViolation")
+
+__all__ = list(_SANITIZE + _PROTOCOL)
+
+
+def __getattr__(name: str):
+    if name in _SANITIZE:
+        from . import sanitize
+        return getattr(sanitize, name)
+    if name in _PROTOCOL:
+        from . import protocol
+        return getattr(protocol, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

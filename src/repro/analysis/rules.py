@@ -1,0 +1,740 @@
+"""DSD lint rules.
+
+- DSD001  traced-value leak in jit-reachable code (``int()``/``float()``/
+          ``.item()``/``np.*``/Python ``if`` on a traced array inside a
+          function reachable from a ``jax.jit``/``kernel_op`` entry point)
+- DSD002  donated-buffer reuse after a ``donate_argnums`` call site
+- DSD003  wire-schema parity (``encode_*``/``decode_*`` must cover every
+          field of the matching ``*Msg`` dataclass; device pass-through
+          fields opt out with a ``wire-passthrough`` comment)
+- DSD004  Pallas interpret routing (every ``pallas_call`` wrapper passes
+          ``interpret=`` and resolves it via ``resolve_interpret``)
+- DSD005  Pallas grid divisibility (a ``//``-tiled grid requires a
+          matching ``assert X % tile == 0`` in the wrapper)
+
+All rules are pure-AST: nothing here imports jax, so the linter runs in
+environments without the runtime stack.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Iterator
+
+from .lint import Finding, ModuleInfo, Project, display_path, rule
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+def _dotted(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+_DEFS = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _own_nodes(func: ast.AST) -> Iterator[ast.AST]:
+    """Walk a function's nodes, not descending into nested defs/classes."""
+    stack = list(ast.iter_child_nodes(func))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, _DEFS + (ast.ClassDef, ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    module: ModuleInfo
+    qualname: str
+    node: ast.FunctionDef | ast.AsyncFunctionDef
+    is_root: bool = False
+    root_via: str = ""
+
+
+def _is_package(mod: ModuleInfo) -> bool:
+    return mod.path.name == "__init__.py"
+
+
+def _resolve_from(mod: ModuleInfo, node: ast.ImportFrom) -> str:
+    if node.level == 0:
+        return node.module or ""
+    parts = mod.name.split(".")
+    drop = node.level - 1 if _is_package(mod) else node.level
+    parts = parts[:len(parts) - drop] if drop <= len(parts) else []
+    if node.module:
+        parts = parts + node.module.split(".")
+    return ".".join(parts)
+
+
+def _import_table(mod: ModuleInfo) -> dict[str, str]:
+    """Local binding name -> absolute dotted target it refers to."""
+    table: dict[str, str] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    table[a.asname] = a.name
+                else:
+                    head = a.name.split(".")[0]
+                    table[head] = head
+        elif isinstance(node, ast.ImportFrom):
+            base = _resolve_from(mod, node)
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                target = f"{base}.{a.name}" if base else a.name
+                table[a.asname or a.name] = target
+    return table
+
+
+def _full_name(d: str | None, imports: dict[str, str]) -> str | None:
+    """Expand a dotted source name through the module's import aliases."""
+    if not d:
+        return None
+    head, _, rest = d.partition(".")
+    target = imports.get(head)
+    if target is None:
+        return d
+    return f"{target}.{rest}" if rest else target
+
+
+_JIT_SUFFIXES = (".jit", ".pjit")
+
+
+def _is_jit_name(full: str | None) -> bool:
+    return full is not None and (
+        full in ("jit", "pjit", "kernel_op")
+        or full.endswith(_JIT_SUFFIXES)
+        or full.endswith(".kernel_op"))
+
+
+def _decorator_is_jit(dec: ast.AST, imports: dict[str, str]) -> bool:
+    if isinstance(dec, ast.Call):
+        full = _full_name(_dotted(dec.func), imports)
+        if _is_jit_name(full):
+            return True
+        if full is not None and full.endswith("partial"):
+            return any(_is_jit_name(_full_name(_dotted(a), imports))
+                       for a in dec.args)
+        return False
+    return _is_jit_name(_full_name(_dotted(dec), imports))
+
+
+def _collect_functions(mod: ModuleInfo) -> list[FuncInfo]:
+    imports = _import_table(mod)
+    funcs: list[FuncInfo] = []
+
+    def visit(node: ast.AST, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, _DEFS):
+                qual = f"{prefix}.{child.name}" if prefix else child.name
+                info = FuncInfo(mod, qual, child)
+                if any(_decorator_is_jit(d, imports)
+                       for d in child.decorator_list):
+                    info.is_root = True
+                    info.root_via = f"@jit {qual}"
+                funcs.append(info)
+                visit(child, qual)
+            elif isinstance(child, ast.ClassDef):
+                cls_prefix = f"{prefix}.{child.name}" if prefix else child.name
+                visit(child, cls_prefix)
+            else:
+                visit(child, prefix)
+
+    visit(mod.tree, "")
+
+    # jax.jit(fn, ...) call sites mark local fn(s) as entry points too.
+    by_simple: dict[str, list[FuncInfo]] = {}
+    for f in funcs:
+        by_simple.setdefault(f.node.name, []).append(f)
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            full = _full_name(_dotted(node.func), imports)
+            if _is_jit_name(full) and node.args:
+                target = node.args[0]
+                if isinstance(target, ast.Name):
+                    for f in by_simple.get(target.id, []):
+                        f.is_root = True
+                        f.root_via = f.root_via or f"jit({target.id}) call"
+    return funcs
+
+
+class _Index:
+    """Project-wide function index + call-graph edges for reachability."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.funcs: list[FuncInfo] = []
+        self.by_key: dict[tuple[str, str], list[FuncInfo]] = {}
+        self.imports: dict[str, dict[str, str]] = {}
+        for mod in project.modules.values():
+            self.imports[mod.name] = _import_table(mod)
+            for f in _collect_functions(mod):
+                self.funcs.append(f)
+                self.by_key.setdefault((mod.name, f.node.name), []).append(f)
+
+    def _lookup_dotted(self, full: str) -> list[FuncInfo]:
+        parts = full.split(".")
+        if len(parts) < 2:
+            return []
+        modname, fname = ".".join(parts[:-1]), parts[-1]
+        mod = self.project.resolve_module(modname)
+        if mod is None:
+            return []
+        return self.by_key.get((mod.name, fname), [])
+
+    def callees(self, f: FuncInfo) -> list[FuncInfo]:
+        mod = f.module
+        imports = self.imports[mod.name]
+        out: list[FuncInfo] = []
+        # nested defs are reachable with their parent (loop bodies etc.)
+        for child in ast.iter_child_nodes(f.node):
+            for sub in ast.walk(child):
+                if isinstance(sub, _DEFS):
+                    out.extend(self.by_key.get((mod.name, sub.name), []))
+        for node in _own_nodes(f.node):
+            name: str | None = None
+            if isinstance(node, ast.Call):
+                name = _dotted(node.func)
+            elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                name = node.id
+            if not name:
+                continue
+            parts = name.split(".")
+            if parts[0] in ("self", "cls"):
+                out.extend(self.by_key.get((mod.name, parts[-1]), []))
+                continue
+            if len(parts) == 1:
+                local = self.by_key.get((mod.name, name), [])
+                if local:
+                    out.extend(local)
+                    continue
+                target = imports.get(name)
+                if target:
+                    out.extend(self._lookup_dotted(target))
+                continue
+            full = _full_name(name, imports)
+            if full:
+                out.extend(self._lookup_dotted(full))
+        return out
+
+    def reachable_from_jit(self) -> dict[int, FuncInfo]:
+        seen: dict[int, FuncInfo] = {}
+        frontier = [f for f in self.funcs if f.is_root]
+        for f in frontier:
+            seen[id(f)] = f
+        while frontier:
+            nxt: list[FuncInfo] = []
+            for f in frontier:
+                for callee in self.callees(f):
+                    if id(callee) not in seen:
+                        callee.root_via = callee.root_via or f.root_via
+                        seen[id(callee)] = callee
+                        nxt.append(callee)
+            frontier = nxt
+        return seen
+
+
+# ---------------------------------------------------------------------------
+# DSD001 — traced-value leaks in jit-reachable code
+# ---------------------------------------------------------------------------
+
+_SAFE_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "sharding"}
+_SAFE_CALLS = {"len", "isinstance", "hasattr", "getattr", "type",
+               "issubclass", "callable", "repr", "str", "format", "id"}
+# jax.* calls that do NOT return traced values
+_NONTRACED_JAX = {
+    "jax.jit", "jax.pjit", "jax.vmap", "jax.grad", "jax.value_and_grad",
+    "jax.devices", "jax.local_devices", "jax.device_count",
+    "jax.default_backend", "jax.named_scope", "jax.clear_caches",
+    "jax.tree_util.tree_structure", "jax.eval_shape", "jax.ShapeDtypeStruct",
+    "jax.random.PRNGKey",  # key objects never leak through int()/np.*
+}
+
+
+def _is_jax_producer(call: ast.Call, imports: dict[str, str]) -> bool:
+    full = _full_name(_dotted(call.func), imports)
+    if not full:
+        return False
+    if full in _NONTRACED_JAX or full.endswith(".astype"):
+        return False
+    return full == "jax" or full.startswith("jax.")
+
+
+def _expr_traced(e: ast.AST, traced: set[str], imports: dict[str, str]) -> bool:
+    if isinstance(e, ast.Name):
+        return e.id in traced
+    if isinstance(e, ast.Attribute):
+        if e.attr in _SAFE_ATTRS:
+            return False
+        return _expr_traced(e.value, traced, imports)
+    if isinstance(e, ast.Call):
+        if _is_jax_producer(e, imports):
+            return True
+        if isinstance(e.func, ast.Name) and e.func.id in _SAFE_CALLS:
+            return False
+        return (_expr_traced(e.func, traced, imports)
+                or any(_expr_traced(a, traced, imports) for a in e.args)
+                or any(_expr_traced(k.value, traced, imports)
+                       for k in e.keywords))
+    if isinstance(e, ast.BinOp):
+        return (_expr_traced(e.left, traced, imports)
+                or _expr_traced(e.right, traced, imports))
+    if isinstance(e, ast.UnaryOp):
+        return _expr_traced(e.operand, traced, imports)
+    if isinstance(e, ast.BoolOp):
+        return any(_expr_traced(v, traced, imports) for v in e.values)
+    if isinstance(e, ast.Compare):
+        return (_expr_traced(e.left, traced, imports)
+                or any(_expr_traced(c, traced, imports) for c in e.comparators))
+    if isinstance(e, ast.IfExp):
+        return any(_expr_traced(x, traced, imports)
+                   for x in (e.test, e.body, e.orelse))
+    if isinstance(e, ast.Subscript):
+        return _expr_traced(e.value, traced, imports)
+    if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+        return any(_expr_traced(x, traced, imports) for x in e.elts)
+    if isinstance(e, ast.Starred):
+        return _expr_traced(e.value, traced, imports)
+    return False
+
+
+def _static_test(test: ast.AST) -> bool:
+    """True for tests that inspect identity/structure, not traced values."""
+    if isinstance(test, ast.Compare):
+        return all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops)
+    if isinstance(test, ast.BoolOp):
+        return all(_static_test(v) for v in test.values)
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _static_test(test.operand)
+    return False
+
+
+def _assign_targets(node: ast.AST) -> Iterator[str]:
+    if isinstance(node, ast.Name):
+        yield node.id
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        for elt in node.elts:
+            yield from _assign_targets(elt)
+    elif isinstance(node, ast.Starred):
+        yield from _assign_targets(node.value)
+
+
+def _static_params(f: FuncInfo, imports: dict[str, str]) -> set[str]:
+    """Param names jit treats as static: kernel_op(...) names,
+    static_argnames, and the conventional interpret flag."""
+    static = {"interpret", "self", "cls"}
+    for dec in f.node.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        full = _full_name(_dotted(dec.func), imports) or ""
+        names: list[ast.AST] = []
+        if full.endswith("kernel_op"):
+            names = list(dec.args)
+        for kw in dec.keywords:
+            if kw.arg == "static_argnames":
+                names.extend(kw.value.elts if isinstance(
+                    kw.value, (ast.Tuple, ast.List)) else [kw.value])
+        for n in names:
+            if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                static.add(n.value)
+    return static
+
+
+class _LeakScan:
+    def __init__(self, f: FuncInfo, imports: dict[str, str]):
+        self.f = f
+        self.imports = imports
+        self.traced: set[str] = set()
+        # params of a jit-reachable function carry traced arrays unless
+        # declared static; they count for host-forcing checks (int()/
+        # .item()/np.*) but not for the stricter if-on-traced check,
+        # where scalar/flag params are routine.
+        static = _static_params(f, imports)
+        args = f.node.args
+        params = [a.arg for a in (args.posonlyargs + args.args
+                                  + args.kwonlyargs)]
+        self.maybe: set[str] = {p for p in params if p not in static}
+        self.findings: list[Finding] = []
+
+    def _emit(self, node: ast.AST, what: str) -> None:
+        path = display_path(self.f.module.path)
+        via = f" (reachable via {self.f.root_via})" if self.f.root_via else ""
+        self.findings.append(Finding(
+            path, node.lineno, node.col_offset, "DSD001",
+            f"{what} inside jit-compiled code in `{self.f.qualname}`{via}"))
+
+    def _check_expr(self, expr: ast.AST | None) -> None:
+        if expr is None:
+            return
+        wide = self.traced | self.maybe
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            d = _dotted(node.func)
+            if d in ("int", "float", "bool", "complex"):
+                if any(_expr_traced(a, wide, self.imports)
+                       for a in node.args):
+                    self._emit(node, f"Python {d}() forces a traced value "
+                                     "to the host")
+                continue
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ("item", "tolist")
+                    and _expr_traced(node.func.value, wide, self.imports)):
+                self._emit(node, f".{node.func.attr}() on a traced value")
+                continue
+            full = _full_name(d, self.imports)
+            if full and (full == "numpy" or full.startswith("numpy.")):
+                if (any(_expr_traced(a, wide, self.imports)
+                        for a in node.args)
+                        or any(_expr_traced(k.value, wide, self.imports)
+                               for k in node.keywords)):
+                    self._emit(node, f"numpy call `{d}` on a traced value")
+
+    def _mark(self, target: ast.AST) -> None:
+        for name in _assign_targets(target):
+            self.traced.add(name)
+
+    def scan(self, stmts: list[ast.stmt]) -> None:
+        for s in stmts:
+            if isinstance(s, _DEFS + (ast.ClassDef,)):
+                continue
+            if isinstance(s, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                self._check_expr(s.value)
+                if s.value is not None and _expr_traced(
+                        s.value, self.traced, self.imports):
+                    targets = s.targets if isinstance(s, ast.Assign) \
+                        else [s.target]
+                    for t in targets:
+                        self._mark(t)
+            elif isinstance(s, (ast.If, ast.While)):
+                self._check_expr(s.test)
+                if (_expr_traced(s.test, self.traced, self.imports)
+                        and not _static_test(s.test)):
+                    self._emit(s, "Python control flow on a traced value "
+                                  "(use lax.cond/jnp.where)")
+                self.scan(s.body)
+                self.scan(s.orelse)
+            elif isinstance(s, ast.For):
+                self._check_expr(s.iter)
+                if _expr_traced(s.iter, self.traced, self.imports):
+                    self._mark(s.target)
+                self.scan(s.body)
+                self.scan(s.orelse)
+            elif isinstance(s, ast.With):
+                for item in s.items:
+                    self._check_expr(item.context_expr)
+                self.scan(s.body)
+            elif isinstance(s, ast.Try):
+                self.scan(s.body)
+                for h in s.handlers:
+                    self.scan(h.body)
+                self.scan(s.orelse)
+                self.scan(s.finalbody)
+            elif isinstance(s, ast.Return):
+                self._check_expr(s.value)
+                if s.value is not None and _expr_traced(
+                        s.value, self.traced, self.imports):
+                    pass  # returning traced values is the point of jit
+            elif isinstance(s, ast.Expr):
+                self._check_expr(s.value)
+            elif isinstance(s, (ast.Assert, ast.Raise, ast.Delete)):
+                for child in ast.iter_child_nodes(s):
+                    self._check_expr(child)
+
+
+@rule("DSD001")
+def check_traced_leaks(project: Project) -> Iterator[Finding]:
+    index = _Index(project)
+    for f in index.reachable_from_jit().values():
+        scan = _LeakScan(f, index.imports[f.module.name])
+        scan.scan(f.node.body)
+        yield from scan.findings
+
+
+# ---------------------------------------------------------------------------
+# DSD002 — donated-buffer reuse after a donate_argnums call site
+# ---------------------------------------------------------------------------
+
+def _donated_positions(call: ast.Call) -> set[int] | None:
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        vals: list[ast.AST]
+        if isinstance(kw.value, (ast.Tuple, ast.List)):
+            vals = list(kw.value.elts)
+        else:
+            vals = [kw.value]
+        out = set()
+        for v in vals:
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                out.add(v.value)
+        return out
+    return None
+
+
+class _DonationScan:
+    def __init__(self, f: FuncInfo, imports: dict[str, str]):
+        self.f = f
+        self.imports = imports
+        self.donors: dict[str, set[int]] = {}
+        self.dead: dict[str, int] = {}  # var -> donation line
+        self.findings: list[Finding] = []
+
+    def _emit(self, node: ast.AST, name: str, where: int) -> None:
+        self.findings.append(Finding(
+            display_path(self.f.module.path), node.lineno, node.col_offset,
+            "DSD002",
+            f"`{name}` reused after being donated at line {where} "
+            f"(donate_argnums invalidates the buffer) in "
+            f"`{self.f.qualname}`"))
+
+    def _loads(self, stmt: ast.stmt) -> Iterator[ast.AST]:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                yield node
+            elif isinstance(node, ast.Attribute) and isinstance(
+                    node.ctx, ast.Load):
+                yield node
+
+    def scan(self, stmts: list[ast.stmt]) -> None:
+        for s in stmts:
+            if isinstance(s, _DEFS + (ast.ClassDef,)):
+                continue
+            # 1. any read of a dead buffer?
+            for node in self._loads(s):
+                key = node.id if isinstance(node, ast.Name) else _dotted(node)
+                if key in self.dead:
+                    self._emit(node, key, self.dead[key])
+                    del self.dead[key]  # report each donation once
+            # 2. donating call sites kill their donated args
+            for node in ast.walk(s):
+                if not isinstance(node, ast.Call):
+                    continue
+                full = _full_name(_dotted(node.func), self.imports)
+                if _is_jit_name(full):
+                    pos = _donated_positions(node)
+                    if pos and isinstance(s, ast.Assign):
+                        for t in s.targets:
+                            if isinstance(t, ast.Name):
+                                self.donors[t.id] = pos
+                    continue
+                name = _dotted(node.func)
+                if name in self.donors:
+                    for i in self.donors[name]:
+                        if i < len(node.args):
+                            key = _dotted(node.args[i])
+                            if key:
+                                self.dead[key] = node.lineno
+            # 3. reassignment revives the name
+            if isinstance(s, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                targets = s.targets if isinstance(s, ast.Assign) else [s.target]
+                for t in targets:
+                    for name in _assign_targets(t):
+                        self.dead.pop(name, None)
+                    key = _dotted(t)
+                    if key:
+                        self.dead.pop(key, None)
+            # recurse into compound statements sharing state (overapprox)
+            for attr in ("body", "orelse", "finalbody"):
+                sub = getattr(s, attr, None)
+                if isinstance(sub, list) and sub and isinstance(
+                        sub[0], ast.stmt):
+                    self.scan(sub)
+            for h in getattr(s, "handlers", []):
+                self.scan(h.body)
+
+
+@rule("DSD002")
+def check_donation_reuse(project: Project) -> Iterator[Finding]:
+    for mod in project.modules.values():
+        imports = _import_table(mod)
+        for f in _collect_functions(mod):
+            scan = _DonationScan(f, imports)
+            scan.scan(f.node.body)
+            yield from scan.findings
+
+
+# ---------------------------------------------------------------------------
+# DSD003 — wire-schema parity
+# ---------------------------------------------------------------------------
+
+def _snake(name: str) -> str:
+    return re.sub(r"(?<!^)(?=[A-Z])", "_", name).lower()
+
+
+def _msg_classes(mod: ModuleInfo) -> Iterator[tuple[ast.ClassDef, list[str],
+                                                    set[str]]]:
+    for node in mod.tree.body:
+        if not isinstance(node, ast.ClassDef) or not node.name.endswith("Msg"):
+            continue
+        is_dc = any(
+            (_dotted(d) or _dotted(getattr(d, "func", ast.Pass())) or "")
+            .split(".")[-1] == "dataclass"
+            for d in node.decorator_list)
+        if not is_dc:
+            continue
+        fields: list[str] = []
+        passthrough: set[str] = set()
+        for item in node.body:
+            if isinstance(item, ast.AnnAssign) and isinstance(
+                    item.target, ast.Name):
+                fields.append(item.target.id)
+                if "wire-passthrough" in mod.source_line(item.lineno):
+                    passthrough.add(item.target.id)
+        yield node, fields, passthrough
+
+
+@rule("DSD003")
+def check_wire_parity(project: Project) -> Iterator[Finding]:
+    for mod in project.modules.values():
+        path = display_path(mod.path)
+        top_funcs = {n.name: n for n in mod.tree.body if isinstance(n, _DEFS)}
+        for cls, fields, passthrough in _msg_classes(mod):
+            stem = _snake(cls.name[:-len("Msg")])
+            enc = top_funcs.get(f"encode_{stem}")
+            dec = top_funcs.get(f"decode_{stem}")
+            if enc is None and dec is None:
+                continue  # not a wire type
+            required = [f for f in fields if f not in passthrough]
+            if enc is None:
+                yield Finding(path, cls.lineno, cls.col_offset, "DSD003",
+                              f"`{cls.name}` has decode_{stem} but no "
+                              f"encode_{stem}")
+            else:
+                arg = enc.args.args[0].arg if enc.args.args else None
+                seen = {n.attr for n in ast.walk(enc)
+                        if isinstance(n, ast.Attribute)
+                        and isinstance(n.value, ast.Name)
+                        and n.value.id == arg}
+                for f in required:
+                    if f not in seen:
+                        yield Finding(
+                            path, enc.lineno, enc.col_offset, "DSD003",
+                            f"encode_{stem} does not serialize "
+                            f"`{cls.name}.{f}` (mark wire-passthrough if "
+                            f"intentionally device-local)")
+            if dec is None:
+                yield Finding(path, cls.lineno, cls.col_offset, "DSD003",
+                              f"`{cls.name}` has encode_{stem} but no "
+                              f"decode_{stem}")
+            else:
+                ctor = None
+                for n in ast.walk(dec):
+                    if isinstance(n, ast.Call) and (
+                            _dotted(n.func) or "").split(".")[-1] == cls.name:
+                        ctor = n
+                        break
+                if ctor is None:
+                    yield Finding(path, dec.lineno, dec.col_offset, "DSD003",
+                                  f"decode_{stem} never constructs "
+                                  f"`{cls.name}`")
+                    continue
+                provided = set(fields[:len(ctor.args)])
+                provided |= {kw.arg for kw in ctor.keywords if kw.arg}
+                for f in required:
+                    if f not in provided:
+                        yield Finding(
+                            path, ctor.lineno, ctor.col_offset, "DSD003",
+                            f"decode_{stem} does not reconstruct "
+                            f"`{cls.name}.{f}`")
+
+
+# ---------------------------------------------------------------------------
+# DSD004 / DSD005 — Pallas kernel hygiene
+# ---------------------------------------------------------------------------
+
+def _pallas_calls(f: FuncInfo) -> list[ast.Call]:
+    return [n for n in _own_nodes(f.node)
+            if isinstance(n, ast.Call)
+            and (_dotted(n.func) or "").split(".")[-1] == "pallas_call"]
+
+
+def _grid_exprs(f: FuncInfo) -> list[ast.AST]:
+    """grid= expressions fed to pallas_call or a *GridSpec, with one level
+    of local-variable indirection resolved."""
+    assigns: dict[str, ast.AST] = {}
+    for n in _own_nodes(f.node):
+        if isinstance(n, ast.Assign) and n.value is not None:
+            for t in n.targets:
+                if isinstance(t, ast.Name):
+                    assigns[t.id] = n.value
+    out: list[ast.AST] = []
+    for n in _own_nodes(f.node):
+        if not isinstance(n, ast.Call):
+            continue
+        callee = (_dotted(n.func) or "").split(".")[-1]
+        if callee != "pallas_call" and not callee.endswith("GridSpec"):
+            continue
+        for kw in n.keywords:
+            if kw.arg == "grid":
+                expr = kw.value
+                if isinstance(expr, ast.Name) and expr.id in assigns:
+                    expr = assigns[expr.id]
+                out.append(expr)
+    return out
+
+
+@rule("DSD004")
+def check_pallas_interpret(project: Project) -> Iterator[Finding]:
+    for mod in project.modules.values():
+        path = display_path(mod.path)
+        for f in _collect_functions(mod):
+            calls = _pallas_calls(f)
+            if not calls:
+                continue
+            resolves = any(
+                isinstance(n, ast.Call)
+                and (_dotted(n.func) or "").split(".")[-1]
+                == "resolve_interpret"
+                for n in _own_nodes(f.node))
+            for call in calls:
+                kwargs = {kw.arg for kw in call.keywords}
+                if "interpret" not in kwargs:
+                    yield Finding(
+                        path, call.lineno, call.col_offset, "DSD004",
+                        f"pallas_call in `{f.qualname}` does not pass "
+                        f"interpret= (route through kernel_op/"
+                        f"resolve_interpret)")
+                elif not resolves:
+                    yield Finding(
+                        path, call.lineno, call.col_offset, "DSD004",
+                        f"`{f.qualname}` passes interpret= without calling "
+                        f"resolve_interpret() first")
+
+
+@rule("DSD005")
+def check_pallas_grid_divisibility(project: Project) -> Iterator[Finding]:
+    for mod in project.modules.values():
+        path = display_path(mod.path)
+        for f in _collect_functions(mod):
+            calls = _pallas_calls(f)
+            if not calls:
+                continue
+            tiled = any(
+                isinstance(sub, ast.BinOp)
+                and isinstance(sub.op, ast.FloorDiv)
+                for g in _grid_exprs(f) for sub in ast.walk(g))
+            if not tiled:
+                continue
+            has_assert = any(
+                isinstance(n, ast.Assert)
+                and any(isinstance(sub, ast.BinOp)
+                        and isinstance(sub.op, ast.Mod)
+                        for sub in ast.walk(n.test))
+                for n in _own_nodes(f.node))
+            if not has_assert:
+                yield Finding(
+                    path, calls[0].lineno, calls[0].col_offset, "DSD005",
+                    f"`{f.qualname}` tiles its grid with `//` but has no "
+                    f"divisibility assert (`assert X % tile == 0`)")

@@ -459,13 +459,8 @@ class SpecDecodeEngine:
     def compiled_programs(self) -> int:
         """Number of distinct XLA step programs compiled so far (the
         compile-once invariant: adaptive-γ generation keeps this at 1)."""
-        total = 0
-        for fn in self._jit_cache.values():
-            try:
-                total += fn._cache_size()
-            except Exception:       # pragma: no cover — older jax
-                total += 1
-        return total
+        from ..analysis.sanitize import jit_cache_programs
+        return jit_cache_programs(self._jit_cache.values())
 
     def _policy_gamma_bound(self, policy) -> int:
         """Static window bound to compile the step at: the policy's own

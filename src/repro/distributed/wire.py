@@ -64,7 +64,8 @@ class WindowMsg:
     tokens: np.ndarray            # (B, gamma_max | n_nodes) int32 proposals
     gamma: int                    # active window size this round (≤ gamma_max)
     n_active: int                 # slots actually decoding (payload scaling)
-    q_probs: Any = None           # (B, gamma_max, V) draft dists (temp > 0)
+    q_probs: Any = None           # wire-passthrough: (B, gamma_max, V) draft
+                                  # dists stay on device, never serialized
     round_id: int = 0             # exchange ordinal (pairs with its verdict)
     speculative: bool = False     # optimistic pipeline window (invalidatable)
     n_nodes: int = 0              # tree entries incl. anchor (0 = linear)

@@ -18,8 +18,8 @@ def default_interpret() -> bool:
     return _jax.default_backend() != "tpu"
 
 
-def resolve_interpret(flag) -> bool:
-    return default_interpret() if flag is None else bool(flag)
+def resolve_interpret(interpret) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
 
 
 def kernel_op(*static_argnames):

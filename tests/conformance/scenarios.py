@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import CheckedTransport
 from repro.configs.base import ModelConfig
 from repro.core.engine import SpecDecodeEngine
 from repro.core.session import DecodeSession
@@ -87,14 +88,22 @@ def make_noised_engine(family: str = "dense", noise: float = 0.01,
 
 def make_transport(kind: str, rtt_ms: float = 20.0, seed: int = 0):
     """'inproc' (zero delay), 'link' (emulated, virtual clock — fast and
-    deterministic) or 'link-sleep' (emulated, real wall-clock sleeps)."""
+    deterministic) or 'link-sleep' (emulated, real wall-clock sleeps).
+
+    Every conformance transport is wrapped in
+    :class:`repro.analysis.CheckedTransport`: the whole matrix runs with
+    the full-duplex protocol state machine validated per round id, so an
+    out-of-order post/recv/discard fails the suite at the violating call,
+    not as a downstream token mismatch."""
     if kind == "inproc":
-        return InProcessTransport()
+        return CheckedTransport(InProcessTransport())
     spec = LinkSpec(rtt_ms=rtt_ms, jitter_ms=max(0.5, rtt_ms * 0.08))
     if kind == "link":
-        return EmulatedLinkTransport(spec, seed=seed, sleep=False)
+        return CheckedTransport(EmulatedLinkTransport(spec, seed=seed,
+                                                      sleep=False))
     if kind == "link-sleep":
-        return EmulatedLinkTransport(spec, seed=seed, sleep=True)
+        return CheckedTransport(EmulatedLinkTransport(spec, seed=seed,
+                                                      sleep=True))
     raise ValueError(kind)
 
 
@@ -199,4 +208,9 @@ def run_real(engine: SpecDecodeEngine, scn: Scenario, transport_kind: str):
     while sess.unfinished and sess.iterations < max_iters:
         sess.run_chunk(policy)
     tokens, stats = sess.snapshot()
+    if isinstance(tr, CheckedTransport):
+        # chunk boundaries drain the wire: a miss discards its superseded
+        # speculative window before the chunk returns, so nothing may be
+        # left in flight here
+        tr.assert_drained()
     return tokens, stats, sess

@@ -9,13 +9,42 @@ jit/pjit executable caches it filled once its tests finish.  Re-running
 a module recompiles from scratch; within-module compile-count tests
 (compile-once gates, zero-recompile invariants) are unaffected because
 the caches are only cleared at module teardown.
+
+Set ``DSD_CLEAR_JIT_CACHES=0`` to disable the workaround (e.g. to check
+whether an upstream jaxlib fixed the crash, or to profile cache reuse
+across modules).  With the workaround off, a warning reports the
+accumulated backend-compile count once it enters the known segfault
+regime so the crash stays diagnosable rather than mysterious.
 """
+
+import os
+import warnings
 
 import jax
 import pytest
+
+from repro.analysis.sanitize import (install_compile_listener,
+                                     total_backend_compiles)
+
+_CLEAR_CACHES = os.environ.get("DSD_CLEAR_JIT_CACHES", "1") != "0"
+# the deterministic jaxlib CPU segfault lands around ~190 accumulated
+# programs; start warning below that so the report precedes the crash
+_SEGFAULT_REGIME = 150
+
+install_compile_listener()
 
 
 @pytest.fixture(autouse=True, scope="module")
 def _clear_jax_caches_per_module():
     yield
-    jax.clear_caches()
+    if _CLEAR_CACHES:
+        jax.clear_caches()
+        return
+    accumulated = total_backend_compiles()
+    if accumulated >= _SEGFAULT_REGIME:
+        warnings.warn(
+            f"DSD_CLEAR_JIT_CACHES=0: {accumulated} XLA programs have "
+            f"accumulated in this process — jaxlib's CPU compiler is known "
+            f"to segfault around ~190; a crash past this point is the "
+            f"known executable-cache bug, not the test that was running",
+            ResourceWarning, stacklevel=0)

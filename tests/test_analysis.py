@@ -1,0 +1,526 @@
+"""repro.analysis: lint rules (each DSD0xx flags its seeded-bad fixture
+and passes the minimally-fixed twin), the engine CLI/baseline contract,
+the self-scan (src/repro stays clean or explicitly baselined), the
+compile_guard sentry and the CheckedTransport protocol state machine."""
+
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import (CheckedTransport, CompileGuard, ProtocolViolation,
+                            RecompileError, compile_guard)
+from repro.analysis import lint
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def lint_snippet(tmp_path, source, name="snippet.py"):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(source))
+    return lint.run_paths([p])
+
+
+def codes(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------- DSD001
+
+BAD_TRACED_IF = """
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def step(x):
+        y = jnp.cumsum(x)
+        if y > 0:
+            return y
+        return -y
+"""
+
+FIXED_TRACED_IF = """
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def step(x):
+        y = jnp.cumsum(x)
+        return jnp.where(y > 0, y, -y)
+"""
+
+BAD_HOST_LEAKS = """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    @jax.jit
+    def step(x):
+        return helper(jnp.cumsum(x))
+
+    def helper(y):
+        n = int(y)                  # host-forcing cast
+        z = np.asarray(y)           # numpy on a traced array
+        return y.item() + n + z
+"""
+
+FIXED_HOST_LEAKS = """
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def step(x):
+        return helper(jnp.cumsum(x))
+
+    def helper(y):
+        return y + y.sum()
+"""
+
+
+def test_dsd001_flags_traced_if(tmp_path):
+    findings = lint_snippet(tmp_path, BAD_TRACED_IF)
+    assert codes(findings) == ["DSD001"]
+    assert "control flow" in findings[0].message
+
+
+def test_dsd001_fixed_twin_passes(tmp_path):
+    assert lint_snippet(tmp_path, FIXED_TRACED_IF) == []
+
+
+def test_dsd001_flags_host_leaks_in_reachable_helper(tmp_path):
+    findings = lint_snippet(tmp_path, BAD_HOST_LEAKS)
+    assert codes(findings) == ["DSD001"]
+    msgs = " | ".join(f.message for f in findings)
+    assert "int()" in msgs and ".item()" in msgs and "numpy" in msgs
+
+
+def test_dsd001_fixed_helper_passes(tmp_path):
+    assert lint_snippet(tmp_path, FIXED_HOST_LEAKS) == []
+
+
+def test_dsd001_ignores_unreachable_host_code(tmp_path):
+    # same leaks, but nothing jit-compiles this function: not a finding
+    assert lint_snippet(tmp_path, """
+        import numpy as np
+
+        def postprocess(y):
+            if y > 0:
+                return int(y)
+            return np.asarray(y)
+    """) == []
+
+
+# ---------------------------------------------------------------- DSD002
+
+BAD_DONATION = """
+    import jax
+
+    def run(state):
+        step = jax.jit(lambda s: s, donate_argnums=(0,))
+        out = step(state)
+        loss = state.sum()          # state's buffer was donated away
+        return out, loss
+"""
+
+FIXED_DONATION = """
+    import jax
+
+    def run(state):
+        step = jax.jit(lambda s: s, donate_argnums=(0,))
+        state = step(state)
+        loss = state.sum()
+        return state, loss
+"""
+
+
+def test_dsd002_flags_donated_reuse(tmp_path):
+    findings = lint_snippet(tmp_path, BAD_DONATION)
+    assert codes(findings) == ["DSD002"]
+    assert "`state`" in findings[0].message
+
+
+def test_dsd002_fixed_twin_passes(tmp_path):
+    assert lint_snippet(tmp_path, FIXED_DONATION) == []
+
+
+# ---------------------------------------------------------------- DSD003
+
+BAD_WIRE = """
+    import dataclasses
+
+    @dataclasses.dataclass
+    class PingMsg:
+        token: int
+        round_id: int
+        flags: int
+
+    def encode_ping(msg):
+        return bytes([msg.token, msg.round_id])     # drops flags
+
+    def decode_ping(blob):
+        return PingMsg(token=blob[0], round_id=blob[1], flags=0)
+"""
+
+FIXED_WIRE = """
+    import dataclasses
+
+    @dataclasses.dataclass
+    class PingMsg:
+        token: int
+        round_id: int
+        flags: int
+
+    def encode_ping(msg):
+        return bytes([msg.token, msg.round_id, msg.flags])
+
+    def decode_ping(blob):
+        return PingMsg(token=blob[0], round_id=blob[1], flags=blob[2])
+"""
+
+PASSTHROUGH_WIRE = """
+    import dataclasses
+
+    @dataclasses.dataclass
+    class PingMsg:
+        token: int
+        device_blob: object = None   # wire-passthrough: stays on device
+
+    def encode_ping(msg):
+        return bytes([msg.token])
+
+    def decode_ping(blob):
+        return PingMsg(token=blob[0])
+"""
+
+
+def test_dsd003_flags_dropped_field(tmp_path):
+    findings = lint_snippet(tmp_path, BAD_WIRE)
+    assert codes(findings) == ["DSD003"]
+    assert any("encode_ping" in f.message and "flags" in f.message
+               for f in findings)
+
+
+def test_dsd003_fixed_twin_passes(tmp_path):
+    assert lint_snippet(tmp_path, FIXED_WIRE) == []
+
+
+def test_dsd003_passthrough_comment_exempts(tmp_path):
+    assert lint_snippet(tmp_path, PASSTHROUGH_WIRE) == []
+
+
+def test_dsd003_missing_decode_flagged(tmp_path):
+    findings = lint_snippet(tmp_path, """
+        import dataclasses
+
+        @dataclasses.dataclass
+        class PingMsg:
+            token: int
+
+        def encode_ping(msg):
+            return bytes([msg.token])
+    """)
+    assert codes(findings) == ["DSD003"]
+    assert "no decode_ping" in findings[0].message
+
+
+# ---------------------------------------------------------------- DSD004
+
+BAD_PALLAS_INTERPRET = """
+    from jax.experimental import pallas as pl
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def my_call(x, interpret=None):
+        return pl.pallas_call(kernel, grid=(4,))(x)
+"""
+
+FIXED_PALLAS_INTERPRET = """
+    from jax.experimental import pallas as pl
+    from repro.kernels import resolve_interpret
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def my_call(x, interpret=None):
+        interpret = resolve_interpret(interpret)
+        return pl.pallas_call(kernel, grid=(4,), interpret=interpret)(x)
+"""
+
+
+def test_dsd004_flags_unrouted_interpret(tmp_path):
+    findings = lint_snippet(tmp_path, BAD_PALLAS_INTERPRET)
+    assert codes(findings) == ["DSD004"]
+
+
+def test_dsd004_fixed_twin_passes(tmp_path):
+    assert lint_snippet(tmp_path, FIXED_PALLAS_INTERPRET) == []
+
+
+def test_dsd004_interpret_without_resolve_flagged(tmp_path):
+    findings = lint_snippet(tmp_path, """
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def my_call(x, interpret=None):
+            return pl.pallas_call(kernel, grid=(4,),
+                                  interpret=interpret)(x)
+    """)
+    assert codes(findings) == ["DSD004"]
+    assert "resolve_interpret" in findings[0].message
+
+
+# ---------------------------------------------------------------- DSD005
+
+BAD_GRID = """
+    from jax.experimental import pallas as pl
+    from repro.kernels import resolve_interpret
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def my_call(x, tile, interpret=None):
+        interpret = resolve_interpret(interpret)
+        V = x.shape[0]
+        grid = (V // tile,)
+        return pl.pallas_call(kernel, grid=grid, interpret=interpret)(x)
+"""
+
+FIXED_GRID = """
+    from jax.experimental import pallas as pl
+    from repro.kernels import resolve_interpret
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def my_call(x, tile, interpret=None):
+        interpret = resolve_interpret(interpret)
+        V = x.shape[0]
+        assert V % tile == 0, (V, tile)
+        grid = (V // tile,)
+        return pl.pallas_call(kernel, grid=grid, interpret=interpret)(x)
+"""
+
+
+def test_dsd005_flags_tiled_grid_without_assert(tmp_path):
+    findings = lint_snippet(tmp_path, BAD_GRID)
+    assert codes(findings) == ["DSD005"]
+
+
+def test_dsd005_fixed_twin_passes(tmp_path):
+    assert lint_snippet(tmp_path, FIXED_GRID) == []
+
+
+def test_dsd005_untiled_grid_needs_no_assert(tmp_path):
+    # grid with no // (e.g. one program per row) is exempt, matching
+    # tree_accept_call / the paged decode kernel
+    assert lint_snippet(tmp_path, """
+        from jax.experimental import pallas as pl
+        from repro.kernels import resolve_interpret
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def my_call(x, interpret=None):
+            interpret = resolve_interpret(interpret)
+            B = x.shape[0]
+            return pl.pallas_call(kernel, grid=(B,),
+                                  interpret=interpret)(x)
+    """) == []
+
+
+# ------------------------------------------------------- engine + baseline
+
+def test_noqa_suppresses(tmp_path):
+    src = BAD_TRACED_IF.replace("if y > 0:", "if y > 0:  # noqa: DSD001")
+    assert lint_snippet(tmp_path, src) == []
+    other = BAD_TRACED_IF.replace("if y > 0:", "if y > 0:  # noqa: DSD004")
+    assert codes(lint_snippet(tmp_path, other)) == ["DSD001"]
+
+
+def test_cli_exit_codes_and_baseline(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(BAD_TRACED_IF))
+    baseline = tmp_path / "baseline.json"
+
+    assert lint.main([str(bad), "--baseline", str(baseline)]) == 1
+    out = capsys.readouterr().out
+    assert "DSD001" in out and "bad.py" in out
+
+    assert lint.main([str(bad), "--baseline", str(baseline),
+                      "--write-baseline"]) == 0
+    assert baseline.exists()
+    # baselined findings no longer fail the run...
+    assert lint.main([str(bad), "--baseline", str(baseline)]) == 0
+    capsys.readouterr()
+    # ...but a NEW finding in the same file still does
+    bad.write_text(textwrap.dedent(BAD_TRACED_IF) + textwrap.dedent("""
+        @jax.jit
+        def step2(x):
+            q = jnp.cumsum(x)
+            if q < 0:
+                return q
+            return -q
+    """))
+    assert lint.main([str(bad), "--baseline", str(baseline)]) == 1
+
+
+def test_select_filters_rules(tmp_path):
+    bad = tmp_path / "both.py"
+    bad.write_text(textwrap.dedent(BAD_TRACED_IF)
+                   + textwrap.dedent(BAD_DONATION))
+    all_codes = codes(lint.run_paths([bad]))
+    assert all_codes == ["DSD001", "DSD002"]
+    only = lint.run_paths([bad], select={"DSD002"})
+    assert codes(only) == ["DSD002"]
+
+
+def test_self_scan_repo_clean_or_baselined():
+    """src/repro must stay lint-clean (or every finding explicitly
+    baselined in .dsd-lint-baseline.json) — the CI lint step's contract."""
+    project = lint.load_project([REPO / "src"])
+    findings = lint.run_project(project)
+    baseline = lint.load_baseline(REPO / ".dsd-lint-baseline.json")
+    fps = lint._fingerprints(findings, project)
+    fresh = [f.format() for f, fp in zip(findings, fps) if fp not in baseline]
+    assert fresh == []
+
+
+# ----------------------------------------------------------- compile_guard
+
+def test_compile_guard_steady_state_clean():
+    import jax
+    import jax.numpy as jnp
+    f = jax.jit(lambda x: x * 2 + 1)
+    f(jnp.ones(8)).block_until_ready()            # warm
+    with compile_guard(allowed=0, what="steady") as g:
+        for _ in range(3):
+            f(jnp.ones(8)).block_until_ready()
+    assert g.count == 0
+
+
+def test_compile_guard_raises_on_recompile():
+    import jax
+    import jax.numpy as jnp
+    f = jax.jit(lambda x: x * 3)
+    f(jnp.ones(4)).block_until_ready()
+    with pytest.raises(RecompileError, match="compile-once"):
+        with compile_guard(allowed=0):
+            f(jnp.ones(16)).block_until_ready()   # new shape → recompile
+
+
+def test_compile_guard_count_only_mode():
+    import jax
+    import jax.numpy as jnp
+    f = jax.jit(lambda x: x - 1)
+    with compile_guard(allowed=None, what="warmup") as g:
+        f(jnp.ones(32)).block_until_ready()
+    assert g.count >= 1                            # counted, did not raise
+
+
+def test_compile_guard_does_not_mask_exceptions():
+    import jax
+    import jax.numpy as jnp
+    f = jax.jit(lambda x: x)
+    with pytest.raises(ValueError, match="inner"):
+        with compile_guard(allowed=0):
+            f(jnp.ones(64)).block_until_ready()   # would trip the guard...
+            raise ValueError("inner")             # ...but this wins
+
+
+def test_engine_compiled_programs_delegates():
+    from repro.analysis.sanitize import jit_cache_programs
+    import jax
+    import jax.numpy as jnp
+    f = jax.jit(lambda x: x + 2)
+    assert jit_cache_programs([f]) == 0
+    f(jnp.ones(3))
+    f(jnp.ones(5))
+    assert jit_cache_programs([f]) == 2
+
+
+# ------------------------------------------------------- CheckedTransport
+
+def _win(rid, spec=False):
+    from repro.distributed.wire import WindowMsg
+    return WindowMsg(tokens=np.zeros((1, 2), np.int32), gamma=2, n_active=1,
+                     round_id=rid, speculative=spec)
+
+
+def _verd(rid):
+    from repro.distributed.wire import VerdictMsg
+    z = np.zeros(1, np.int32)
+    return VerdictMsg(n_accepted=z, num_new=z, next_token=z, last_token=z,
+                      done=np.zeros(1, bool), gamma=2, n_active=1,
+                      round_id=rid)
+
+
+def _checked():
+    from repro.distributed.transport import InProcessTransport
+    return CheckedTransport(InProcessTransport())
+
+
+def test_checked_transport_happy_path_transparent():
+    tr = _checked()
+    tr.post_window(_win(0))
+    msg, waited = tr.recv_window()
+    assert msg.round_id == 0 and waited == 0.0
+    tr.post_verdict(_verd(0))
+    tr.recv_verdict()
+    tr.send_window(_win(1))
+    tr.send_verdict(_verd(1))
+    tr.post_window(_win(2, spec=True))
+    tr.discard_window()
+    tr.assert_drained()
+    assert tr.in_flight == 0                       # delegated accounting
+    assert tr.messages_sent == 5
+    assert tr.discarded_messages == 1
+
+
+def test_checked_transport_verdict_before_window():
+    tr = _checked()
+    tr.post_window(_win(0))                        # posted but NOT received
+    with pytest.raises(ProtocolViolation, match="before its window"):
+        tr.post_verdict(_verd(0))
+
+
+def test_checked_transport_double_recv():
+    tr = _checked()
+    tr.post_window(_win(0))
+    tr.recv_window()
+    with pytest.raises(ProtocolViolation, match="no window in flight"):
+        tr.recv_window()
+
+
+def test_checked_transport_double_verdict():
+    tr = _checked()
+    tr.send_window(_win(0))
+    tr.send_verdict(_verd(0))
+    with pytest.raises(ProtocolViolation, match="posted twice"):
+        tr.post_verdict(_verd(0))
+
+
+def test_checked_transport_discard_rules():
+    tr = _checked()
+    with pytest.raises(ProtocolViolation, match="no window in flight"):
+        tr.discard_window()
+    tr.post_window(_win(0))                        # non-speculative
+    with pytest.raises(ProtocolViolation, match="NON-speculative"):
+        tr.discard_window()
+
+
+def test_checked_transport_undrained_speculative_window():
+    tr = _checked()
+    tr.post_window(_win(0, spec=True))
+    with pytest.raises(ProtocolViolation, match="never discarded"):
+        tr.assert_drained()
+
+
+def test_checked_transport_duplicate_round_id():
+    tr = _checked()
+    tr.send_window(_win(0))
+    with pytest.raises(ProtocolViolation, match="posted twice"):
+        tr.post_window(_win(0))
