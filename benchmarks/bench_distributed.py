@@ -402,6 +402,106 @@ def run_two_pair_arm(tparams, B: int, max_new: int,
     }
 
 
+def two_pair_procs_spec(B: int, max_new: int, sync_every: int,
+                        seed: int, rtt_ms: float = 60.0) -> "topo.ClusterSpec":
+    """Homogeneous 2-pair PROCESS topology: two edge drafts sharing one
+    cloud target model, equal links, static γ, every pair in its own
+    draft+target process pair over SocketTransports. Equal links make the
+    parallelism win unambiguous: a single-threaded interleaved server
+    must serialize both pairs' link waits, processes overlap them."""
+    return topo.ClusterSpec(
+        nodes=[
+            topo.NodeSpec("edge-a", "draft", "bench-dist-target"),
+            topo.NodeSpec("edge-b", "draft", "bench-dist-target"),
+            topo.NodeSpec("cloud", "target", "bench-dist-target"),
+        ],
+        pairs=[
+            topo.PairSpec("proc-a", "edge-a", "cloud",
+                          link=LinkSpec(rtt_ms=rtt_ms, jitter_ms=0.0),
+                          window=topo.WindowSpec("static", 4),
+                          mode_policy="distributed", process=True),
+            topo.PairSpec("proc-b", "edge-b", "cloud",
+                          link=LinkSpec(rtt_ms=rtt_ms, jitter_ms=0.0),
+                          window=topo.WindowSpec("static", 4),
+                          mode_policy="distributed", process=True),
+        ],
+        serving=topo.ServingSpec(max_batch=B, gamma_max=4,
+                                 sync_every=sync_every, temperature=0.0,
+                                 server="continuous", max_new_cap=max_new),
+        workload=topo.WorkloadSpec(num_requests=2 * B, max_new=max_new),
+        seed=seed)
+
+
+def run_two_pair_procs_arm(B: int, max_new: int, prompt_len: int,
+                           sync_every: int, seed: int) -> dict:
+    """The truly-parallel arm: serve one request stream through two
+    process-backed pairs (4 worker processes, every round a framed
+    window/verdict exchange over TCP), then the IDENTICAL topology with
+    ``process: false`` through the single-threaded interleaved server.
+
+    Checks: committed greedy tokens are bit-identical across the process
+    boundary (the hosts rebuild params from the spec seed), and the
+    aggregate tokens/s of the parallel arm clears 1.5× the interleaved
+    baseline — the two pairs' link waits overlap instead of serializing.
+    Each arm serves the stream twice and measures the second pass, so
+    compiles (guarded to wave 0 inside the hosts by the recompile sentry)
+    stay out of the measured window."""
+    import dataclasses
+
+    from repro.serving import ServeRequest
+
+    spec = two_pair_procs_spec(B, max_new, sync_every, seed)
+    rng = np.random.default_rng(seed)
+    reqs = [(i, rng.integers(0, TARGET.vocab, prompt_len).astype(np.int32))
+            for i in range(spec.workload.num_requests)]
+
+    def serve(s):
+        dep = topo.build_deployment(
+            s, model_configs={"bench-dist-target": TARGET})
+        try:
+            results, wall = [], 0.0
+            for _ in range(2):          # warm pass, then the measured pass
+                srv = dep.build_server()
+                for i, p in reqs:
+                    srv.submit(ServeRequest(i, p, max_new))
+                t0 = time.perf_counter()
+                results = srv.run()
+                wall = time.perf_counter() - t0
+            return results, wall, srv.pair_summaries()
+        finally:
+            dep.shutdown()
+
+    procs_res, procs_wall, procs_pairs = serve(spec)
+    base_spec = dataclasses.replace(
+        spec, pairs=[dataclasses.replace(p, process=False)
+                     for p in spec.pairs])
+    base_res, base_wall, _ = serve(base_spec)
+
+    got = {r.request_id: r.tokens for r in procs_res}
+    ref = {r.request_id: r.tokens for r in base_res}
+    tokens_match = (set(got) == set(ref)
+                    and all(np.array_equal(got[k], ref[k]) for k in ref))
+    procs_tps = sum(len(t) for t in got.values()) / max(1e-9, procs_wall)
+    base_tps = sum(len(t) for t in ref.values()) / max(1e-9, base_wall)
+    speedup = procs_tps / max(1e-9, base_tps)
+    return {
+        "spec": spec.to_dict(),
+        "requests": len(procs_res),
+        "procs_wall_s": round(procs_wall, 3),
+        "interleaved_wall_s": round(base_wall, 3),
+        "procs_tokens_per_s": round(procs_tps, 2),
+        "interleaved_tokens_per_s": round(base_tps, 2),
+        "aggregate_speedup": round(speedup, 3),
+        "pairs": procs_pairs,
+        "checks": {
+            "tokens_match_across_arms": bool(tokens_match),
+            "both_pairs_served": all(
+                procs_pairs[p]["requests"] > 0 for p in ("proc-a", "proc-b")),
+            "aggregate_speedup_ok": bool(speedup >= 1.5),
+        },
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=4,
@@ -427,9 +527,37 @@ def main(argv=None) -> int:
                     help="tiny CI-lane variant (RTT {0,20}, fewer tokens); "
                          "exit nonzero iff the zero-delay transport is not "
                          "bit-identical to the colocated path")
+    ap.add_argument("--no-procs", dest="procs", action="store_false",
+                    default=True,
+                    help="skip the process-backed 2-pair arm (4 worker "
+                         "subprocesses)")
+    ap.add_argument("--procs-only", action="store_true",
+                    help="run ONLY the process-backed 2-pair arm: draft + "
+                         "target hosts as subprocesses over socket pairs, "
+                         "gated on cross-process bit-identity and the "
+                         "≥1.5× aggregate-throughput win")
     ap.add_argument("--out", default=str(Path(__file__).resolve().parent.parent
                                          / "BENCH_distributed.json"))
     args = ap.parse_args(argv)
+
+    if args.procs_only:
+        B, mn = (2, 16) if args.smoke else (args.requests,
+                                           min(args.max_new, 32))
+        procs = run_two_pair_procs_arm(B, mn, args.prompt_len,
+                                       args.sync_every, args.seed)
+        out = {"bench": "distributed_two_pair_procs",
+               "config": {"max_batch": B, "max_new": mn,
+                          "prompt_len": args.prompt_len,
+                          "sync_every": args.sync_every, "smoke": args.smoke,
+                          "backend": jax.default_backend(),
+                          "jax": jax.__version__,
+                          "platform": platform.platform()},
+               "two_pair_procs": procs}
+        Path(args.out).write_text(json.dumps(out, indent=2) + "\n")
+        print(json.dumps(out, indent=2))
+        ok = all(procs["checks"].values())
+        print(f"\ntwo_pair_procs={procs['checks']}  ok={ok}")
+        return 0 if ok else 1
 
     if args.smoke:
         rtts = (0.0, 20.0)
@@ -495,6 +623,15 @@ def main(argv=None) -> int:
                                 args.prompt_len, args.sync_every,
                                 args.seed)
 
+    # truly-parallel arm: the same 2-pair shape with every pair in its own
+    # draft+target process pair over framed TCP streams, vs the identical
+    # topology interleaved on one thread
+    two_pair_procs = None
+    if args.procs:
+        B_p, mn_p = (2, 16) if args.smoke else (n_req, min(max_new, 32))
+        two_pair_procs = run_two_pair_procs_arm(
+            B_p, mn_p, args.prompt_len, args.sync_every, args.seed)
+
     lo, hi = rtts[0], rtts[-1]
     mid = 20.0 if 20.0 in rtts else hi
     awc_lo, awc_hi = cell("awc", lo), cell("awc", hi)
@@ -551,6 +688,7 @@ def main(argv=None) -> int:
         "cells": cells,
         "sim_parity": sim_rows,
         "two_pair": two_pair,
+        "two_pair_procs": two_pair_procs,
         "checks": {
             "recompiles_during_cells": cg.count,
             "zero_recompiles_during_cells": cg.count == 0,
@@ -567,6 +705,8 @@ def main(argv=None) -> int:
             "two_pair_awc_diverges": two_pair["checks"]["awc_pairs_diverge"],
             "two_pair_sim_same_ordering":
                 two_pair["checks"]["sim_same_pair_ordering"],
+            "two_pair_procs": (two_pair_procs["checks"]
+                               if two_pair_procs else "skipped"),
         },
     }
     Path(args.out).write_text(json.dumps(out, indent=2) + "\n")
@@ -581,13 +721,19 @@ def main(argv=None) -> int:
               and two_pair["checks"]["awc_pairs_diverge"]
               and two_pair["checks"]["sim_same_pair_ordering"])
     no_recompiles = cg.count == 0
-    ok = ((bit_identical and two_ok_smoke and no_recompiles) if args.smoke
+    procs_ok = (all(two_pair_procs["checks"].values())
+                if two_pair_procs else True)
+    ok = ((bit_identical and two_ok_smoke and no_recompiles and procs_ok)
+          if args.smoke
           else (bit_identical and awc_adapts and dist_falls
-                and pipeline_beats_hd and two_ok and no_recompiles))
+                and pipeline_beats_hd and two_ok and no_recompiles
+                and procs_ok))
     print(f"\nbit_identical={bit_identical}  awc_adapts={awc_adapts}  "
           f"dist_falls={dist_falls}  pipeline_beats_hd={pipeline_beats_hd}  "
           f"sim_match={sim_awc_adapts}  "
-          f"two_pair={two_pair['checks']}  ok={ok}")
+          f"two_pair={two_pair['checks']}  "
+          f"procs={two_pair_procs['checks'] if two_pair_procs else 'skipped'}"
+          f"  ok={ok}")
     return 0 if ok else 1
 
 

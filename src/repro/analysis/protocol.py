@@ -33,6 +33,16 @@ class ProtocolViolation(AssertionError):
     """The full-duplex window/verdict protocol was driven out of order."""
 
 
+try:
+    # jax-free by design: repro.distributed.wire only needs numpy + the sim
+    # payload models, so the checker can translate transport-level protocol
+    # errors without dragging the transport/worker stack (and jax) in.
+    from ..distributed.wire import TransportProtocolError as _TransportError
+except Exception:  # pragma: no cover - keeps the checker importable alone
+    class _TransportError(Exception):
+        """Placeholder when repro.distributed is unavailable."""
+
+
 class CheckedTransport:
     """Protocol-validating proxy around a Transport instance."""
 
@@ -45,6 +55,16 @@ class CheckedTransport:
         self._verdict_posted: set = set()
         self.checked_ops = 0
 
+    def _delegate(self, fn, *args):
+        """Run an inner-transport primitive; a transport-level protocol
+        error (empty-stream recv, malformed frame, peer hangup) is the
+        same class of bug this checker exists to catch — re-raise it as a
+        :class:`ProtocolViolation` so the suite fails at the call site."""
+        try:
+            return fn(*args)
+        except _TransportError as e:
+            raise ProtocolViolation(f"transport protocol error: {e}") from e
+
     # -- checked protocol surface -------------------------------------------
 
     def post_window(self, msg):
@@ -56,7 +76,7 @@ class CheckedTransport:
                 f"per stream)")
         self._window_rounds.add(rid)
         self._windows.append((rid, bool(msg.speculative)))
-        return self._inner.post_window(msg)
+        return self._delegate(self._inner.post_window, msg)
 
     def _check_recv_window(self) -> None:
         self.checked_ops += 1
@@ -69,7 +89,7 @@ class CheckedTransport:
 
     def recv_window(self):
         self._check_recv_window()
-        return self._inner.recv_window()
+        return self._delegate(self._inner.recv_window)
 
     def post_verdict(self, msg):
         self.checked_ops += 1
@@ -82,7 +102,7 @@ class CheckedTransport:
                 f"received (windows seen: {sorted(self._window_received)})")
         self._verdict_posted.add(rid)
         self._verdicts.append(rid)
-        return self._inner.post_verdict(msg)
+        return self._delegate(self._inner.post_verdict, msg)
 
     def _check_recv_verdict(self) -> None:
         self.checked_ops += 1
@@ -94,7 +114,7 @@ class CheckedTransport:
 
     def recv_verdict(self):
         self._check_recv_verdict()
-        return self._inner.recv_verdict()
+        return self._delegate(self._inner.recv_verdict)
 
     def discard_window(self):
         self.checked_ops += 1
@@ -105,18 +125,18 @@ class CheckedTransport:
             raise ProtocolViolation(
                 f"discard_window dropped NON-speculative window round {rid} "
                 f"— only superseded optimistic drafts may be discarded")
-        return self._inner.discard_window()
+        return self._delegate(self._inner.discard_window)
 
     # half-duplex convenience paths: same checks, same base-class semantics
     def send_window(self, msg):
         self.post_window(msg)
         self._check_recv_window()
-        return self._inner._recv(_FWD)[1]
+        return self._delegate(self._inner._recv, _FWD)[1]
 
     def send_verdict(self, msg):
         self.post_verdict(msg)
         self._check_recv_verdict()
-        return self._inner._recv(_BWD)[1]
+        return self._delegate(self._inner._recv, _BWD)[1]
 
     # -- certification -------------------------------------------------------
 

@@ -648,6 +648,46 @@ def check_wire_parity(project: Project) -> Iterator[Finding]:
                             path, ctor.lineno, ctor.col_offset, "DSD003",
                             f"decode_{stem} does not reconstruct "
                             f"`{cls.name}.{f}`")
+        yield from _check_frame_tables(mod, path)
+
+
+def _check_frame_tables(mod: ModuleInfo, path: str) -> Iterator[Finding]:
+    """Length-prefix framing parity: a module declaring ``FRAME_*`` kind
+    constants (the socket transport's frame-kind tags) must route EVERY
+    kind through both codec tables — a kind missing from
+    ``FRAME_ENCODERS``/``FRAME_DECODERS`` is a frame the wire can carry
+    but one side cannot (de)serialize."""
+    consts: dict[str, ast.Assign] = {}
+    tables: dict[str, ast.Assign] = {}
+    for node in mod.tree.body:
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            continue
+        name = node.targets[0].id
+        if re.fullmatch(r"FRAME_[A-Z_]+", name) \
+                and name not in ("FRAME_ENCODERS", "FRAME_DECODERS") \
+                and isinstance(node.value, ast.Constant) \
+                and isinstance(node.value.value, int):
+            consts[name] = node
+        elif name in ("FRAME_ENCODERS", "FRAME_DECODERS") \
+                and isinstance(node.value, ast.Dict):
+            tables[name] = node
+    if not consts:
+        return
+    for tbl in ("FRAME_ENCODERS", "FRAME_DECODERS"):
+        node = tables.get(tbl)
+        if node is None:
+            first = min(consts.values(), key=lambda n: n.lineno)
+            yield Finding(path, first.lineno, first.col_offset, "DSD003",
+                          f"module declares frame kinds "
+                          f"{sorted(consts)} but no {tbl} codec table")
+            continue
+        keys = {k.id for k in node.value.keys if isinstance(k, ast.Name)}
+        for name in sorted(set(consts) - keys):
+            yield Finding(path, node.lineno, node.col_offset, "DSD003",
+                          f"{tbl} does not route frame kind {name} — a "
+                          f"framed message of that kind cannot cross the "
+                          f"wire")
 
 
 # ---------------------------------------------------------------------------

@@ -11,15 +11,20 @@ pipelined session keeps a speculative window for round k+1 in flight
 while round k's verdict travels the other way.
 """
 
+from .socket_transport import (FRAME_CONTROL, FRAME_VERDICT, FRAME_WINDOW,
+                               SocketTransport, recv_frame, send_frame)
 from .transport import (CONTROL_PAYLOAD_BYTES, EmulatedLinkTransport,
                         InProcessTransport, Transport, make_transport)
-from .wire import (VerdictMsg, WindowMsg, decode_verdict, decode_window,
-                   encode_verdict, encode_window)
+from .wire import (TransportProtocolError, VerdictMsg, WindowMsg,
+                   decode_verdict, decode_window, encode_verdict,
+                   encode_window)
 from .workers import DraftWorker, TargetWorker
 
 __all__ = [
-    "CONTROL_PAYLOAD_BYTES", "EmulatedLinkTransport", "InProcessTransport",
-    "Transport", "VerdictMsg", "WindowMsg", "DraftWorker", "TargetWorker",
-    "decode_verdict", "decode_window", "encode_verdict", "encode_window",
-    "make_transport",
+    "CONTROL_PAYLOAD_BYTES", "EmulatedLinkTransport", "FRAME_CONTROL",
+    "FRAME_VERDICT", "FRAME_WINDOW", "InProcessTransport", "SocketTransport",
+    "Transport", "TransportProtocolError", "VerdictMsg", "WindowMsg",
+    "DraftWorker", "TargetWorker", "decode_verdict", "decode_window",
+    "encode_verdict", "encode_window", "make_transport", "recv_frame",
+    "send_frame",
 ]

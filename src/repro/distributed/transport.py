@@ -45,7 +45,7 @@ from collections import deque
 
 from ..sim.network import (LinkSpec, RttTracker, expected_rtt_ms,
                            sample_one_way_ms)
-from .wire import VerdictMsg, WindowMsg
+from .wire import TransportProtocolError, VerdictMsg, WindowMsg
 
 CONTROL_PAYLOAD_BYTES = 64   # fused-mode chunk flush / control messages
 
@@ -118,7 +118,12 @@ class Transport:
         the part of its flight not already hidden by the caller's compute.
         Returns ``(msg, waited_ms)`` — ``waited_ms`` is the UNHIDDEN link
         time actually imposed on the caller."""
-        msg, ready_s = self._queues[direction].popleft()
+        try:
+            msg, ready_s = self._queues[direction].popleft()
+        except IndexError:
+            raise TransportProtocolError(
+                f"recv on empty {direction!r} stream: nothing in flight "
+                f"(recv-before-post or double-recv)") from None
         wait_s = ready_s - self._now_s()
         if wait_s <= 0.0:
             return msg, 0.0
@@ -148,7 +153,12 @@ class Transport:
         a verdict invalidated the speculative window it answers. The bytes
         were already spent on the wire (they stay counted); the pending
         RTT half-pair is cleared so it can never mismatch a later verdict."""
-        msg, _ready = self._queues[FWD].popleft()
+        try:
+            msg, _ready = self._queues[FWD].popleft()
+        except IndexError:
+            raise TransportProtocolError(
+                "discard_window on empty 'window' stream: no superseded "
+                "speculative window in flight") from None
         self.discarded_messages += 1
         rid = getattr(msg, "round_id", None)
         if rid is not None:

@@ -51,6 +51,15 @@ import numpy as np
 from ..sim.network import verdict_payload_bytes, window_payload_bytes
 
 
+class TransportProtocolError(RuntimeError):
+    """The transport delivery contract was broken: a recv/discard on an
+    empty stream, a malformed or truncated frame off a real socket, or a
+    peer that hung up mid-exchange. Deliberately defined HERE (the only
+    jax-free module of the transport stack) so the protocol checker in
+    :mod:`repro.analysis.protocol` can translate it into a
+    ``ProtocolViolation`` without importing the transports."""
+
+
 @dataclass
 class WindowMsg:
     """Draft → target: one speculation window for the whole slot batch.
@@ -119,7 +128,18 @@ _VERDICT_MAGIC = b"DSDV"
 def encode_window(msg: WindowMsg) -> bytes:
     """Serialize a window to bytes (token ids only — ``q_probs`` is the
     documented device pass-through and does not cross this seam). Tree
-    windows append the (n_nodes,) int32 parent table after the tokens."""
+    windows append the (n_nodes,) int32 parent table after the tokens.
+
+    A window carrying ``q_probs`` is REFUSED: those are the draft
+    distributions the stochastic accept rule needs at temperature > 0,
+    and silently dropping them here would make a byte-serializing
+    transport decode wrong tokens downstream. Sampled decoding stays on
+    device-passthrough transports until distribution shipping lands."""
+    if msg.q_probs is not None:
+        raise ValueError(
+            "encode_window: window carries q_probs (temperature > 0 "
+            "sampling); draft distributions do not cross the byte seam — "
+            "use an in-process transport for sampled decoding")
     tokens = np.ascontiguousarray(msg.tokens, np.int32)
     B, G = tokens.shape
     head = _WINDOW_HDR.pack(_WINDOW_MAGIC, msg.round_id, msg.gamma,
@@ -133,12 +153,44 @@ def encode_window(msg: WindowMsg) -> bytes:
     return blob
 
 
+def _check_magic(blob: bytes, magic: bytes, what: str) -> None:
+    """Magic FIRST: a frame of the wrong type (or line noise) must fail
+    on its first 4 bytes, before any header field is trusted."""
+    if len(blob) < 4:
+        raise ValueError(
+            f"truncated {what}: {len(blob)} bytes, need at least 4 for the "
+            f"magic at offset 0")
+    if blob[:4] != magic:
+        raise ValueError(
+            f"bad {what} magic {bytes(blob[:4])!r} at offset 0 "
+            f"(want {magic!r})")
+
+
 def decode_window(blob: bytes) -> WindowMsg:
-    (magic, round_id, gamma, n_active, B, G, spec, n_nodes,
+    """Inverse of :func:`encode_window`, hardened for bytes off a real
+    socket: magic first, then header completeness, header plausibility,
+    and an EXACT total-length check against the header-declared counts —
+    a truncated or corrupted blob raises ``ValueError`` naming the
+    offset instead of a cryptic ``struct.error`` / short ``frombuffer``."""
+    _check_magic(blob, _WINDOW_MAGIC, "window")
+    if len(blob) < _WINDOW_HDR.size:
+        raise ValueError(
+            f"truncated window header: {len(blob)} bytes, need "
+            f"{_WINDOW_HDR.size} (truncation at offset {len(blob)})")
+    (_magic, round_id, gamma, n_active, B, G, spec, n_nodes,
      branches) = _WINDOW_HDR.unpack_from(blob)
-    if magic != _WINDOW_MAGIC:
-        raise ValueError(f"bad window magic {magic!r}")
+    if B < 1 or G < 1 or gamma < 0 or n_active < 0 or n_nodes < 0 \
+            or branches < 1 or (n_nodes and n_nodes != G):
+        raise ValueError(
+            f"implausible window header (B={B}, G={G}, gamma={gamma}, "
+            f"n_active={n_active}, n_nodes={n_nodes}, branches={branches})")
     off = _WINDOW_HDR.size
+    expected = off + 4 * B * G + (4 * n_nodes if n_nodes else 0)
+    if len(blob) != expected:
+        raise ValueError(
+            f"window length mismatch: header declares B={B}, G={G}, "
+            f"n_nodes={n_nodes} → {expected} bytes, got {len(blob)} "
+            f"(truncation/corruption at offset {min(len(blob), expected)})")
     tokens = np.frombuffer(blob, np.int32, count=B * G,
                            offset=off).reshape(B, G).copy()
     off += 4 * B * G
@@ -169,9 +221,25 @@ def encode_verdict(msg: VerdictMsg) -> bytes:
 
 
 def decode_verdict(blob: bytes) -> VerdictMsg:
-    magic, round_id, gamma, n_active, B, D = _VERDICT_HDR.unpack_from(blob)
-    if magic != _VERDICT_MAGIC:
-        raise ValueError(f"bad verdict magic {magic!r}")
+    """Inverse of :func:`encode_verdict`, hardened the same way as
+    :func:`decode_window`: magic → header → plausibility → exact length,
+    each failure a ``ValueError`` naming the offending offset."""
+    _check_magic(blob, _VERDICT_MAGIC, "verdict")
+    if len(blob) < _VERDICT_HDR.size:
+        raise ValueError(
+            f"truncated verdict header: {len(blob)} bytes, need "
+            f"{_VERDICT_HDR.size} (truncation at offset {len(blob)})")
+    (_magic, round_id, gamma, n_active, B, D) = _VERDICT_HDR.unpack_from(blob)
+    if B < 1 or D < 0 or gamma < 0 or n_active < 0:
+        raise ValueError(
+            f"implausible verdict header (B={B}, D={D}, gamma={gamma}, "
+            f"n_active={n_active})")
+    expected = _VERDICT_HDR.size + 16 * B + B + 4 * B * D
+    if len(blob) != expected:
+        raise ValueError(
+            f"verdict length mismatch: header declares B={B}, D={D} → "
+            f"{expected} bytes, got {len(blob)} "
+            f"(truncation/corruption at offset {min(len(blob), expected)})")
     off = _VERDICT_HDR.size
     arrs = []
     for _ in range(4):

@@ -159,7 +159,12 @@ def main(argv=None) -> int:
         server.submit(ServeRequest(
             i, rng.integers(0, deployment.vocab, plen).astype(np.int32),
             wl.max_new, arrival_s=arrival))
-    results = server.run()
+    try:
+        results = server.run()
+    finally:
+        # process-backed pairs hold worker subprocesses; their cached wave
+        # stats survive shutdown, so summaries below still read correctly
+        deployment.shutdown()
 
     accs = [r.acceptance_rate for r in results]
     tpots = [r.tpot_ms for r in results]
@@ -175,7 +180,8 @@ def main(argv=None) -> int:
         "mean_e2e_ms": float(np.mean([r.e2e_ms for r in results])),
         "compiled_step_programs": sum(
             p.engine.compiled_programs()
-            for p in {id(p.engine): p for p in deployment.pairs}.values()),
+            for p in {id(p.engine): p for p in deployment.pairs
+                      if p.engine is not None}.values()),
     }
     if not args.topology:
         summary["policy"] = args.policy
@@ -197,8 +203,11 @@ def main(argv=None) -> int:
         per_pair = ""
         if len(deployment.pairs) > 1 and "pairs" in summary:
             per_pair = "  " + "  ".join(
-                f"[{pid}: γ={d['mean_gamma']:.2f} "
-                f"fused={d['fused_fraction']:.2f} n={d['requests']}]"
+                (f"[{pid}: γ={d['mean_gamma']:.2f} "
+                 f"fused={d['fused_fraction']:.2f} n={d['requests']}]")
+                if "mean_gamma" in d else
+                (f"[{pid}: process acc={d.get('acceptance_rate', 0):.2f} "
+                 f"n={d['requests']}]")
                 for pid, d in summary["pairs"].items())
         print(f"served {summary['requests']} requests  "
               f"server={summary['server']}  "

@@ -83,12 +83,20 @@ class ServingPair:
     per :class:`repro.topology.PairSpec`; constructible directly for
     tests/benchmarks. ``pair_id`` doubles as the window policy's pair key,
     so adaptive policies (Dynamic/AWC) shared across pairs still keep one
-    stabilizer per pair."""
+    stabilizer per pair.
+
+    A **process-backed** pair (``PairSpec.process: true``) carries no
+    local engine or transport: ``host`` is a
+    :class:`repro.distributed.host.PairHostHandle` driving draft/target
+    worker processes over a :class:`~repro.distributed.SocketTransport`,
+    and the server delegates the pair's share of the request stream to
+    it."""
     pair_id: str
-    engine: SpecDecodeEngine
+    engine: Optional[SpecDecodeEngine]
     policy: WindowPolicy
     transport: Optional[object] = None   # repro.distributed.Transport
     mode_policy: str = "auto"            # auto | distributed | fused | pipeline
+    host: Optional[object] = None        # repro.distributed.host.PairHostHandle
 
 
 @dataclass
@@ -199,6 +207,12 @@ class SpecDecodeServer:
             assert len(pairs) >= 1, "a deployment needs at least one pair"
             ids = [p.pair_id for p in pairs]
             assert len(set(ids)) == len(ids), f"duplicate pair ids: {ids}"
+        hosted = [p.host is not None for p in pairs]
+        assert all(hosted) or not any(hosted), \
+            "process-backed and in-process pairs cannot mix in one server"
+        assert all(p.engine is not None or p.host is not None for p in pairs), \
+            "every pair needs an engine (in-process) or a host (process)"
+        self._process_backed = all(hosted) and any(hosted)
         self.pairs = list(pairs)
         self.router = router or LeastLoadedPairRouter()
         # legacy attribute surface (bench/test introspection)
@@ -265,6 +279,8 @@ class SpecDecodeServer:
         """
         if not self.queue:
             return self.results
+        if self._process_backed:
+            return self._run_process_backed()
         pending = sorted(self.queue, key=lambda r: r.arrival_s)
         self.queue = []
         sessions = [self._make_session(p, pending) for p in self.pairs]
@@ -332,6 +348,43 @@ class SpecDecodeServer:
                         pair_id=self.pairs[idx].pair_id))
         return self.results
 
+    def _run_process_backed(self) -> list[ServeResult]:
+        """Drive process-backed pairs CONCURRENTLY: each pair's host
+        handle serves its round-robin share of the request stream on its
+        own thread, so the pairs' draft/target worker processes decode in
+        true parallel (the whole point of ``PairSpec.process``). Wave
+        batching per pair mirrors :class:`WaveSpecDecodeServer` — the
+        continuous chunk scheduler needs an in-process session."""
+        import threading
+
+        pending = sorted(self.queue, key=lambda r: r.arrival_s)
+        self.queue = []
+        buckets: list[list[ServeRequest]] = [[] for _ in self.pairs]
+        for i, r in enumerate(pending):
+            buckets[i % len(self.pairs)].append(r)
+        self._served = [len(b) for b in buckets]
+        per_pair: list[list] = [[] for _ in self.pairs]
+        errors: list[BaseException] = []
+
+        def drive(idx: int) -> None:
+            try:
+                per_pair[idx] = self.pairs[idx].host.serve(buckets[idx])
+            except BaseException as e:   # surface on the caller's thread
+                errors.append(e)
+
+        threads = [threading.Thread(target=drive, args=(i,), daemon=True)
+                   for i in range(len(self.pairs)) if buckets[i]]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+        merged = [res for bucket in per_pair for res in bucket]
+        merged.sort(key=lambda res: res.request_id)
+        self.results.extend(merged)
+        return self.results
+
     # -- per-pair observability ----------------------------------------------
 
     def pair_summaries(self) -> dict[str, dict]:
@@ -340,6 +393,12 @@ class SpecDecodeServer:
         acceptance, pipeline hit counters, and — when the pair has a
         transport — its link stats (bytes, messages, measured RTT)."""
         out: dict[str, dict] = {}
+        if self._process_backed:
+            for pair, served in zip(self.pairs, self._served):
+                row = pair.host.summary()
+                row["requests"] = served
+                out[pair.pair_id] = row
+            return out
         for pair, sess, served in zip(self.pairs, self._sessions,
                                       self._served):
             d = {

@@ -62,9 +62,10 @@ class NodeSpec:
     ``model`` names a registered real-model config
     (:func:`repro.configs.get_config`, reduced for host runs) unless the
     factory is handed an override via ``model_configs``. ``device`` is a
-    placement hint for the real path (informational until the
-    multi-process transport lands); ``hw``/``sim_model``/``tp`` feed the
-    DSD-Sim hardware model and default per role when empty/0."""
+    placement hint for the real path; ``address``/``port`` place
+    process-backed worker hosts (:mod:`repro.distributed.host`);
+    ``hw``/``sim_model``/``tp`` feed the DSD-Sim hardware model and
+    default per role when empty/0."""
     id: str
     role: str                    # "draft" | "target"
     model: str = ""
@@ -72,6 +73,10 @@ class NodeSpec:
     hw: str = ""                 # sim hardware class (A100/A40/...)
     sim_model: str = ""          # sim hwmodel name (llama2-7b/...)
     tp: int = 0                  # sim tensor-parallel degree (0 = default)
+    address: str = ""            # host address for process-backed pairs
+                                 # ("" = 127.0.0.1)
+    port: int = 0                # listen port for process-backed pairs
+                                 # (0 = ephemeral, handshaken over stdout)
 
     def sim_tuple(self) -> tuple:
         hw, model, tp = _SIM_ROLE_DEFAULTS[self.role]
@@ -102,6 +107,9 @@ class PairSpec:
     link: Optional[LinkSpec] = None
     window: WindowSpec = field(default_factory=WindowSpec)
     mode_policy: str = "auto"    # auto | distributed | fused | pipeline
+    process: bool = False        # run draft/target as separate OS processes
+                                 # over a SocketTransport (greedy + static
+                                 # window + distributed mode only)
 
 
 @dataclass
@@ -174,6 +182,10 @@ class ClusterSpec:
                     f"got {n.role!r}")
             if n.tp < 0:
                 raise TopologyError(f"node {n.id!r}: tp must be >= 0")
+            if not (0 <= n.port <= 65535):
+                raise TopologyError(
+                    f"node {n.id!r}: port must be in [0, 65535], "
+                    f"got {n.port}")
         pair_ids: set[str] = set()
         for p in self.pairs:
             if not p.id or not isinstance(p.id, str):
@@ -217,6 +229,14 @@ class ClusterSpec:
             if w.gamma < 1 or w.gmax < 1:
                 raise TopologyError(
                     f"pair {p.id!r}: window gamma/gmax must be >= 1")
+            if p.process:
+                # the same restrictions the worker hosts enforce
+                from .distributed.host import validate_process_pair
+                validate_process_pair(self, p)
+                if self.serving.server != "continuous":
+                    raise TopologyError(
+                        f"pair {p.id!r}: process-backed pairs need "
+                        "serving.server='continuous'")
         s = self.serving
         if s.max_batch < 1:
             raise TopologyError("serving.max_batch must be >= 1")
@@ -375,6 +395,14 @@ class Deployment:
         return SpecDecodeServer(cfg=self.server_config(), pairs=self.pairs,
                                 router=self.router)
 
+    def shutdown(self) -> None:
+        """Terminate the worker-host processes of every process-backed
+        pair (no-op for fully in-process deployments)."""
+        for p in self.pairs:
+            host = getattr(p, "host", None)
+            if host is not None:
+                host.shutdown()
+
 
 def build_deployment(spec: ClusterSpec, *,
                      model_configs: Optional[dict] = None,
@@ -427,6 +455,19 @@ def build_deployment(spec: ClusterSpec, *,
                      else dataclasses.replace(c, vocab=vocab))
                for nid, c in raw.items()}
 
+    process_pairs = [p for p in spec.pairs if p.process]
+    if process_pairs and key is not None:
+        raise TopologyError(
+            "process-backed pairs rebuild parameters from spec.seed inside "
+            "the worker hosts; an explicit PRNG key cannot cross the process "
+            "boundary — drop key= or set process=False")
+    # nodes referenced by at least one in-process pair need local params;
+    # process-only nodes are rebuilt inside their hosts from spec.seed
+    # (the role-index sweep below still walks EVERY node so indices match
+    # what the hosts derive).
+    local_nodes = {nid for p in spec.pairs if not p.process
+                   for nid in (p.draft, p.target)}
+
     base = jax.random.PRNGKey(spec.seed) if key is None else key
     kd, kt = jax.random.split(base)
     role_index = {"draft": 0, "target": 0}
@@ -437,6 +478,8 @@ def build_deployment(spec: ClusterSpec, *,
         if n.id in node_params:
             params[n.id] = node_params[n.id]
             continue
+        if n.id not in local_nodes:
+            continue
         from .models.model import build_model
         k = kd if n.role == "draft" else kt
         if i > 0:
@@ -446,6 +489,20 @@ def build_deployment(spec: ClusterSpec, *,
     engines: dict[tuple[str, str], SpecDecodeEngine] = {}
     pairs = []
     for i, p in enumerate(spec.pairs):
+        if p.process:
+            from .distributed.host import spawn_pair
+            handle = spawn_pair(
+                spec, p, model_configs=model_configs,
+                node_params={nid: node_params[nid]
+                             for nid in (p.draft, p.target)
+                             if nid in node_params})
+            w = p.window
+            policy = make_window_policy(w.kind, gamma=w.gamma, hi=w.hi,
+                                        lo=w.lo, gmax=w.gmax)
+            pairs.append(ServingPair(pair_id=p.id, engine=None, policy=policy,
+                                     transport=None,
+                                     mode_policy=p.mode_policy, host=handle))
+            continue
         ekey = (p.draft, p.target)
         eng = engines.get(ekey)
         if eng is None:

@@ -24,7 +24,8 @@ from repro.core.engine import SpecDecodeEngine
 from repro.core.session import DecodeSession
 from repro.core.window import (AWCWindowPolicy, DynamicWindowPolicy,
                                StaticWindowPolicy)
-from repro.distributed import EmulatedLinkTransport, InProcessTransport
+from repro.distributed import (EmulatedLinkTransport, InProcessTransport,
+                               SocketTransport)
 from repro.sim.network import LinkSpec
 
 # ----------------------------------------------------------- model configs
@@ -88,7 +89,9 @@ def make_noised_engine(family: str = "dense", noise: float = 0.01,
 
 def make_transport(kind: str, rtt_ms: float = 20.0, seed: int = 0):
     """'inproc' (zero delay), 'link' (emulated, virtual clock — fast and
-    deterministic) or 'link-sleep' (emulated, real wall-clock sleeps).
+    deterministic), 'link-sleep' (emulated, real wall-clock sleeps) or
+    'socket' (loopback :class:`~repro.distributed.SocketTransport`: every
+    message length-prefix framed through the kernel's TCP stack).
 
     Every conformance transport is wrapped in
     :class:`repro.analysis.CheckedTransport`: the whole matrix runs with
@@ -97,6 +100,10 @@ def make_transport(kind: str, rtt_ms: float = 20.0, seed: int = 0):
     not as a downstream token mismatch."""
     if kind == "inproc":
         return CheckedTransport(InProcessTransport())
+    if kind == "socket":
+        # keep the conformance sweep fast: the socket column checks the
+        # byte seam (frame → TCP → frame), not the delay model
+        return CheckedTransport(SocketTransport.loopback(seed=seed))
     spec = LinkSpec(rtt_ms=rtt_ms, jitter_ms=max(0.5, rtt_ms * 0.08))
     if kind == "link":
         return CheckedTransport(EmulatedLinkTransport(spec, seed=seed,
@@ -213,4 +220,7 @@ def run_real(engine: SpecDecodeEngine, scn: Scenario, transport_kind: str):
         # speculative window before the chunk returns, so nothing may be
         # left in flight here
         tr.assert_drained()
+        inner = tr._inner
+        if isinstance(inner, SocketTransport):
+            inner.close()
     return tokens, stats, sess

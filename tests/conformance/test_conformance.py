@@ -47,11 +47,16 @@ def test_real_vs_real_bit_identity(scn: Scenario):
     ref, ref_stats, _ = run_real(eng, scn, "none")
     got_ip, stats_ip, _ = run_real(eng, scn, "inproc")
     got_lk, stats_lk, _ = run_real(eng, scn, "link")
+    got_sk, stats_sk, _ = run_real(eng, scn, "socket")
     np.testing.assert_array_equal(ref, got_ip)
     np.testing.assert_array_equal(ref, got_lk)
+    # fourth column: the framed TCP loopback — greedy commits survive the
+    # byte seam bit for bit
+    np.testing.assert_array_equal(ref, got_sk)
     # tokens-per-request bookkeeping agrees too (not just the buffers)
     np.testing.assert_array_equal(ref_stats.produced, stats_ip.produced)
     np.testing.assert_array_equal(ref_stats.produced, stats_lk.produced)
+    np.testing.assert_array_equal(ref_stats.produced, stats_sk.produced)
 
 
 def test_degenerate_tree_matches_linear():
@@ -94,6 +99,24 @@ def test_pipeline_hits_preserve_tokens():
                       rtt_ms=20.0, max_new=16)
     hd, _, _ = run_real(eng, scn_hd, "link")
     pl, _, sess = run_real(eng, scn_pl, "link")
+    np.testing.assert_array_equal(hd, pl)
+    assert sess.pipeline_hits > 0, "noised pair should hit sometimes"
+    assert sess.pipeline_misses > 0, "and roll back sometimes"
+
+
+def test_socket_pipeline_discard_preserves_tokens():
+    """The pipelined path over the TCP loopback: a noised-copy draft
+    (α ≈ 0.8) takes both the kept-optimistic-window and the
+    rollback-discard branches, so superseded speculative windows are
+    physically read off the socket and dropped — and the committed stream
+    still equals the half-duplex in-process run."""
+    eng = make_noised_engine("dense", gamma_max=6)
+    scn_hd = Scenario(policy="static", mode_policy="distributed",
+                      rtt_ms=0.0, max_new=16)
+    scn_pl = Scenario(policy="static", mode_policy="pipeline",
+                      rtt_ms=0.0, max_new=16)
+    hd, _, _ = run_real(eng, scn_hd, "inproc")
+    pl, _, sess = run_real(eng, scn_pl, "socket")
     np.testing.assert_array_equal(hd, pl)
     assert sess.pipeline_hits > 0, "noised pair should hit sometimes"
     assert sess.pipeline_misses > 0, "and roll back sometimes"

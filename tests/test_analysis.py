@@ -209,6 +209,65 @@ def test_dsd003_passthrough_comment_exempts(tmp_path):
     assert lint_snippet(tmp_path, PASSTHROUGH_WIRE) == []
 
 
+BAD_FRAMING = """
+    FRAME_WINDOW = 1
+    FRAME_VERDICT = 2
+    FRAME_CONTROL = 3
+
+    def encode_window(msg):
+        return b"w"
+
+    def decode_window(blob):
+        return None
+
+    FRAME_ENCODERS = {FRAME_WINDOW: encode_window, FRAME_VERDICT: encode_window}
+    FRAME_DECODERS = {FRAME_WINDOW: decode_window, FRAME_VERDICT: decode_window}
+"""
+
+FIXED_FRAMING = """
+    FRAME_WINDOW = 1
+    FRAME_VERDICT = 2
+    FRAME_CONTROL = 3
+
+    def enc(msg):
+        return b"w"
+
+    def dec(blob):
+        return None
+
+    FRAME_ENCODERS = {FRAME_WINDOW: enc, FRAME_VERDICT: enc,
+                      FRAME_CONTROL: enc}
+    FRAME_DECODERS = {FRAME_WINDOW: dec, FRAME_VERDICT: dec,
+                      FRAME_CONTROL: dec}
+"""
+
+
+def test_dsd003_frame_kind_missing_from_codec_tables(tmp_path):
+    """Length-prefix framing parity: every FRAME_* kind constant must be
+    routed through BOTH codec tables."""
+    findings = lint_snippet(tmp_path, BAD_FRAMING)
+    assert codes(findings) == ["DSD003"]
+    msgs = [f.message for f in findings]
+    assert any("FRAME_ENCODERS" in m and "FRAME_CONTROL" in m for m in msgs)
+    assert any("FRAME_DECODERS" in m and "FRAME_CONTROL" in m for m in msgs)
+
+
+def test_dsd003_frame_tables_absent_entirely(tmp_path):
+    findings = lint_snippet(tmp_path, """
+        FRAME_PING = 9
+
+        def anything():
+            pass
+    """)
+    assert codes(findings) == ["DSD003"]
+    assert any("no FRAME_ENCODERS" in f.message for f in findings)
+    assert any("no FRAME_DECODERS" in f.message for f in findings)
+
+
+def test_dsd003_complete_frame_tables_pass(tmp_path):
+    assert lint_snippet(tmp_path, FIXED_FRAMING) == []
+
+
 def test_dsd003_missing_decode_flagged(tmp_path):
     findings = lint_snippet(tmp_path, """
         import dataclasses

@@ -369,3 +369,106 @@ def test_non_sleeping_transport_keeps_tpot_honest():
     assert sess.virtual_ms >= sess.link_ms   # they hit the virtual clock
     feats = sess._features(0.0)
     assert feats.tpot_recent_ms > 0.0    # not clamped to zero by link_ms
+
+
+# ------------------------------------------------- socket transport parity
+
+def test_socket_loopback_bit_identical():
+    """Greedy tokens through the TCP-loopback SocketTransport — every
+    window/verdict length-prefix framed through the kernel — match the
+    colocated path token for token."""
+    from repro.distributed import SocketTransport
+    eng = _engine("dense")
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(0, 128, (2, 9)).astype(np.int32)
+    ref, ref_stats = eng.generate(prompts, 12, StaticWindowPolicy(GAMMA))
+    tr = SocketTransport.loopback()
+    try:
+        got, got_stats = eng.generate(prompts, 12, StaticWindowPolicy(GAMMA),
+                                      transport=tr)
+        np.testing.assert_array_equal(ref, got)
+        assert ref_stats.accepted == got_stats.accepted
+        assert tr.wire_bytes > 0 and tr.in_flight == 0
+    finally:
+        tr.close()
+
+
+@pytest.mark.slow
+def test_process_hosts_match_in_process(tmp_path):
+    """The full multi-process path: draft and target worker hosts in
+    their own interpreters, windows/verdicts over two TCP streams — the
+    committed greedy tokens must equal the same spec served in process."""
+    import dataclasses
+
+    from repro.serving import ServeRequest
+    from repro.topology import (ClusterSpec, NodeSpec, PairSpec, ServingSpec,
+                                WindowSpec, WorkloadSpec, build_deployment)
+    cfgs = {"d": DRAFT, "t": TARGETS["dense"]}
+    spec = ClusterSpec(
+        nodes=[NodeSpec(id="edge0", role="draft", model="d"),
+               NodeSpec(id="cloud0", role="target", model="t")],
+        pairs=[PairSpec(id="pair0", draft="edge0", target="cloud0",
+                        window=WindowSpec(kind="static", gamma=GAMMA),
+                        mode_policy="distributed", process=True)],
+        serving=ServingSpec(max_batch=2, sync_every=2, gamma_max=GAMMA,
+                            temperature=0.0, server="continuous",
+                            max_new_cap=8),
+        workload=WorkloadSpec(num_requests=2, max_new=8),
+        seed=11)
+    rng = np.random.default_rng(0)
+    reqs = [(rid, rng.integers(0, 128, 7).astype(np.int32))
+            for rid in range(2)]
+
+    def serve(s):
+        dep = build_deployment(s, model_configs=cfgs)
+        try:
+            srv = dep.build_server()
+            for rid, prompt in reqs:
+                srv.submit(ServeRequest(rid, prompt, 8))
+            res = {r.request_id: r.tokens for r in srv.run()}
+            return res, srv.pair_summaries()
+        finally:
+            dep.shutdown()
+
+    got, ps = serve(spec)
+    ref, _ = serve(dataclasses.replace(
+        spec, pairs=[dataclasses.replace(spec.pairs[0], process=False)]))
+    assert set(got) == set(ref) == {0, 1}
+    for rid in ref:
+        np.testing.assert_array_equal(got[rid], ref[rid])
+    row = ps["pair0"]
+    assert row["process"] is True and row["wire_bytes"] > 0
+
+
+def test_process_pair_spec_validation():
+    """process: true is restricted to the cross-process-deterministic
+    regime — greedy, distributed mode, static window, continuous server —
+    and rejected loudly otherwise."""
+    import dataclasses
+
+    from repro.topology import (ClusterSpec, NodeSpec, PairSpec, ServingSpec,
+                                TopologyError, WindowSpec, WorkloadSpec)
+    base = ClusterSpec(
+        nodes=[NodeSpec(id="e", role="draft", model="d"),
+               NodeSpec(id="c", role="target", model="t")],
+        pairs=[PairSpec(id="p", draft="e", target="c",
+                        window=WindowSpec(kind="static", gamma=3),
+                        mode_policy="distributed", process=True)],
+        serving=ServingSpec(max_batch=1, server="continuous",
+                            temperature=0.0),
+        workload=WorkloadSpec(num_requests=1, max_new=4))
+    base.validate()
+    for mutate, msg in [
+            (lambda s: setattr(s.serving, "temperature", 0.7), "temperature"),
+            (lambda s: s.pairs.__setitem__(0, dataclasses.replace(
+                s.pairs[0], mode_policy="auto")), "mode_policy"),
+            (lambda s: s.pairs.__setitem__(0, dataclasses.replace(
+                s.pairs[0], window=WindowSpec(kind="awc", gamma=3))),
+             "window"),
+            (lambda s: setattr(s.serving, "server", "legacy"), "continuous"),
+            (lambda s: s.nodes.__setitem__(0, dataclasses.replace(
+                s.nodes[0], port=99999)), "port")]:
+        spec = ClusterSpec.from_dict(base.to_dict())
+        mutate(spec)
+        with pytest.raises(TopologyError, match=msg):
+            spec.validate()

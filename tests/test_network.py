@@ -138,3 +138,183 @@ def test_tree_window_msg_payload_matches_model():
         chain = WindowMsg(tokens=toks[:, :g], gamma=g, n_active=n_active)
         assert chain.payload_bytes == \
             max(1, n_active) * window_payload_bytes(g)
+
+
+# --------------------------------------------------------------------------
+# Wire hardening: the byte seam must fail loudly, never cryptically
+# --------------------------------------------------------------------------
+
+from repro.distributed import (InProcessTransport, SocketTransport,
+                               TransportProtocolError, VerdictMsg, WindowMsg,
+                               decode_verdict, decode_window, encode_verdict,
+                               encode_window)
+
+
+def _window(B=2, G=3, tree=False, **kw):
+    T = 1 + G if tree else G
+    msg = WindowMsg(tokens=np.arange(B * T, dtype=np.int32).reshape(B, T),
+                    gamma=G, n_active=B, round_id=5, **kw)
+    if tree:
+        msg.n_nodes = T
+        msg.parent = np.maximum(np.arange(T, dtype=np.int32) - 1, 0)
+    return msg
+
+
+def _verdict(B=2, D=0):
+    z = np.arange(B, dtype=np.int32)
+    path = np.arange(B * D, dtype=np.int32).reshape(B, D) if D else None
+    return VerdictMsg(n_accepted=z, num_new=z + 1, next_token=z + 2,
+                      last_token=z + 3, done=np.array([False, True][:B] or
+                                                      [False]),
+                      gamma=3, n_active=B, round_id=5, path=path)
+
+
+def test_encode_window_refuses_q_probs():
+    """q_probs are the temperature>0 draft distributions — device
+    passthrough only. Serializing a window that carries them would
+    silently break the stochastic accept rule downstream, so the encoder
+    must refuse, not drop."""
+    msg = _window()
+    msg.q_probs = np.zeros((2, 3, 128), np.float32)
+    with pytest.raises(ValueError, match="q_probs"):
+        encode_window(msg)
+
+
+@pytest.mark.parametrize("tree", [False, True])
+def test_decode_window_rejects_every_truncated_prefix(tree):
+    blob = encode_window(_window(tree=tree))
+    got = decode_window(blob)
+    np.testing.assert_array_equal(got.tokens, _window(tree=tree).tokens)
+    for cut in range(len(blob)):
+        with pytest.raises(ValueError):
+            decode_window(blob[:cut])
+
+
+@pytest.mark.parametrize("D", [0, 2])
+def test_decode_verdict_rejects_every_truncated_prefix(D):
+    blob = encode_verdict(_verdict(D=D))
+    got = decode_verdict(blob)
+    np.testing.assert_array_equal(got.num_new, _verdict(D=D).num_new)
+    for cut in range(len(blob)):
+        with pytest.raises(ValueError):
+            decode_verdict(blob[:cut])
+
+
+def test_decode_rejects_wrong_magic_and_names_offset():
+    wmsg, vmsg = _window(), _verdict()
+    wire_w, wire_v = encode_window(wmsg), encode_verdict(vmsg)
+    # a verdict handed to the window decoder (crossed streams) dies on
+    # the magic, before any header field is trusted
+    with pytest.raises(ValueError, match="magic.*offset 0"):
+        decode_window(wire_v)
+    with pytest.raises(ValueError, match="magic.*offset 0"):
+        decode_verdict(wire_w)
+    # trailing garbage is corruption, not silence — and the error names
+    # the offset where the declared payload ended
+    with pytest.raises(ValueError, match=f"offset {len(wire_w)}"):
+        decode_window(wire_w + b"\x00\x00")
+    with pytest.raises(ValueError, match="mismatch"):
+        decode_verdict(wire_v + b"junk")
+
+
+def test_decode_rejects_implausible_header_counts():
+    blob = bytearray(encode_window(_window()))
+    # corrupt the declared batch count (offset 16: 4s q i i -> B field)
+    import struct as _struct
+    _struct.pack_into("<i", blob, 20, -3)
+    with pytest.raises(ValueError, match="implausible"):
+        decode_window(bytes(blob))
+
+
+def test_transport_recv_on_empty_stream_is_protocol_error():
+    """A recv/discard with nothing in flight used to escape as a bare
+    IndexError from the deque; it must surface as a descriptive
+    TransportProtocolError naming the stream."""
+    tr = InProcessTransport()
+    with pytest.raises(TransportProtocolError, match="'window'"):
+        tr.recv_window()
+    with pytest.raises(TransportProtocolError, match="'verdict'"):
+        tr.recv_verdict()
+    with pytest.raises(TransportProtocolError, match="discard_window"):
+        tr.discard_window()
+
+
+def test_checked_transport_reports_transport_errors_as_violations():
+    """CheckedTransport translates transport-level protocol errors into
+    ProtocolViolation at the offending call: a q_probs-bearing window
+    hitting the socket codec is refused by encode_window, and the checker
+    reports the refusal instead of leaking a codec ValueError."""
+    from repro.analysis import CheckedTransport, ProtocolViolation
+    tr = CheckedTransport(SocketTransport.loopback())
+    try:
+        msg = _window()
+        msg.q_probs = np.zeros((2, 3, 128), np.float32)
+        with pytest.raises(ProtocolViolation, match="transport protocol"):
+            tr.post_window(msg)
+    finally:
+        tr._inner.close()
+
+
+# ------------------------------------------------------------ frame layer
+
+def test_socket_frame_roundtrip_and_rejections():
+    import socket as _socket
+
+    from repro.distributed.socket_transport import (_FRAME_HDR,
+                                                    _MAX_FRAME_BYTES,
+                                                    FRAME_WINDOW, recv_frame,
+                                                    send_frame)
+    a, b = _socket.socketpair()
+    try:
+        a.settimeout(5.0)
+        b.settimeout(5.0)
+        payload = encode_window(_window())
+        send_frame(a, FRAME_WINDOW, payload, delay_ms=1.5)
+        kind, got, _ready, delay = recv_frame(b)
+        assert kind == FRAME_WINDOW and got == payload and delay == 1.5
+        np.testing.assert_array_equal(decode_window(got).tokens,
+                                      _window().tokens)
+        # unknown frame kind is refused at the sender
+        with pytest.raises(TransportProtocolError, match="kind"):
+            send_frame(a, 77, b"x")
+        # oversize length is refused before any allocation at the receiver
+        a.sendall(_FRAME_HDR.pack(b"DSDF", FRAME_WINDOW, 0.0, 0.0,
+                                  _MAX_FRAME_BYTES + 1))
+        with pytest.raises(TransportProtocolError, match="frame bound"):
+            recv_frame(b)
+        # line noise dies on the frame magic
+        a.sendall(_FRAME_HDR.pack(b"XXXX", FRAME_WINDOW, 0.0, 0.0, 0))
+        with pytest.raises(TransportProtocolError, match="magic"):
+            recv_frame(b)
+        # peer hanging up mid-frame is a protocol error, not an EOFError
+        a.sendall(_FRAME_HDR.pack(b"DSDF", FRAME_WINDOW, 0.0, 0.0, 64))
+        a.close()
+        with pytest.raises(TransportProtocolError, match="closed"):
+            recv_frame(b)
+    finally:
+        for s in (a, b):
+            try:
+                s.close()
+            except OSError:
+                pass
+
+
+def test_socket_loopback_transport_roundtrip_counts_wire_bytes():
+    tr = SocketTransport.loopback()
+    try:
+        w = _window()
+        tr.post_window(w)
+        got, _ = tr.recv_window()
+        np.testing.assert_array_equal(got.tokens, w.tokens)
+        v = _verdict()
+        v.round_id = w.round_id
+        tr.post_verdict(v)
+        got_v, _ = tr.recv_verdict()
+        np.testing.assert_array_equal(got_v.last_token, v.last_token)
+        assert tr.in_flight == 0
+        # wire_bytes counts ACTUAL framed bytes; bytes_sent stays the
+        # modeled payload accounting the sim shares
+        assert tr.wire_bytes >= len(encode_window(w)) + len(encode_verdict(v))
+        assert tr.bytes_sent == w.payload_bytes + v.payload_bytes
+    finally:
+        tr.close()

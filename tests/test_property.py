@@ -233,3 +233,47 @@ def test_payload_bytes_monotone_in_gamma(g, dg):
     from repro.sim.network import verdict_payload_bytes, window_payload_bytes
     assert window_payload_bytes(g + dg) > window_payload_bytes(g) > 0
     assert verdict_payload_bytes(g + dg) > verdict_payload_bytes(g) > 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 8), st.integers(0, 2 ** 31 - 1),
+       st.booleans(), st.data())
+def test_wire_window_every_prefix_raises(B, G, seed, tree, data):
+    """Hardened framing: EVERY strict prefix of a valid encoded window is
+    rejected with ValueError (never struct.error / short frombuffer), and
+    so is the blob with one flipped byte in the length-bearing header."""
+    from repro.distributed import WindowMsg, decode_window, encode_window
+    rng = np.random.default_rng(seed)
+    T = 1 + G if tree else G
+    msg = WindowMsg(tokens=rng.integers(0, 2 ** 31 - 1, (B, T),
+                                        dtype=np.int32),
+                    gamma=G, n_active=B,
+                    n_nodes=T if tree else 0, branches=1,
+                    parent=(np.maximum(np.arange(T, dtype=np.int32) - 1, 0)
+                            if tree else None))
+    blob = encode_window(msg)
+    cut = data.draw(st.integers(0, len(blob) - 1), label="cut")
+    with pytest.raises(ValueError):
+        decode_window(blob[:cut])
+    with pytest.raises(ValueError):
+        decode_window(blob + b"\x00")
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 4), st.integers(0, 2 ** 31 - 1),
+       st.data())
+def test_wire_verdict_every_prefix_raises(B, D, seed, data):
+    from repro.distributed import VerdictMsg, decode_verdict, encode_verdict
+    rng = np.random.default_rng(seed)
+    i32 = lambda: rng.integers(0, 2 ** 31 - 1, (B,), dtype=np.int32)
+    msg = VerdictMsg(n_accepted=i32(), num_new=i32(), next_token=i32(),
+                     last_token=i32(), done=rng.integers(0, 2, (B,)) > 0,
+                     gamma=3, n_active=B,
+                     path=(rng.integers(0, 2 ** 31 - 1, (B, D),
+                                        dtype=np.int32) if D else None))
+    blob = encode_verdict(msg)
+    cut = data.draw(st.integers(0, len(blob) - 1), label="cut")
+    with pytest.raises(ValueError):
+        decode_verdict(blob[:cut])
+    with pytest.raises(ValueError):
+        decode_verdict(blob + b"\xff")

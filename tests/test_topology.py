@@ -328,3 +328,51 @@ def test_build_simulation_pins_pairs_to_links_and_targets():
         # pinned routing: both pairs share the single target node
         assert m.target_id == 0
         assert m.tokens_generated > 0
+
+
+# ------------------------------------------- process-backed pair spec fields
+
+def test_process_pair_fields_round_trip_and_validate():
+    """NodeSpec.address/port and PairSpec.process survive the JSON round
+    trip with defaults intact, and a fully-specified process pair
+    validates under the restricted regime (greedy + static + distributed
+    + continuous)."""
+    spec = ClusterSpec(
+        nodes=[NodeSpec(id="edge0", role="draft", model="topo-d",
+                        address="10.0.0.2", port=7101),
+               NodeSpec(id="cloud0", role="target", model="topo-t",
+                        address="10.0.0.9", port=7100)],
+        pairs=[PairSpec(id="p0", draft="edge0", target="cloud0",
+                        window=WindowSpec(kind="static", gamma=4),
+                        mode_policy="distributed", process=True)],
+        serving=ServingSpec(max_batch=2, temperature=0.0,
+                            server="continuous"),
+        workload=WorkloadSpec(num_requests=2, max_new=8))
+    spec.validate()
+    again = ClusterSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.nodes[0].address == "10.0.0.2"
+    assert again.nodes[1].port == 7100
+    assert again.pairs[0].process is True
+    # defaults stay default (and keep old topology JSONs loadable)
+    legacy = two_pair_spec()
+    rt = ClusterSpec.from_dict(legacy.to_dict())
+    assert rt.nodes[0].address == "" and rt.nodes[0].port == 0
+    assert rt.pairs[0].process is False
+
+
+def test_build_deployment_rejects_explicit_key_with_process_pairs():
+    """Worker hosts rebuild params from spec.seed; an explicit PRNG key
+    cannot cross the process boundary and must be rejected up front."""
+    spec = ClusterSpec(
+        nodes=[NodeSpec(id="edge0", role="draft", model="topo-d"),
+               NodeSpec(id="cloud0", role="target", model="topo-t")],
+        pairs=[PairSpec(id="p0", draft="edge0", target="cloud0",
+                        window=WindowSpec(kind="static", gamma=3),
+                        mode_policy="distributed", process=True)],
+        serving=ServingSpec(max_batch=1, temperature=0.0,
+                            server="continuous"),
+        workload=WorkloadSpec(num_requests=1, max_new=4))
+    with pytest.raises(TopologyError, match="seed"):
+        build_deployment(spec, model_configs=TINY,
+                         key=jax.random.PRNGKey(0))
