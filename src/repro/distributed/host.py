@@ -676,7 +676,10 @@ class PairHostHandle:
                     e2e_ms=(wave_t1 - r.arrival_s) * 1e3,
                     acceptance_rate=(sum(bits) / len(bits)) if bits else 0.0,
                     queue_ms=(wave_t0 - r.arrival_s) * 1e3,
-                    pair_id=self.pair_id))
+                    pair_id=self.pair_id,
+                    request_class=r.request_class,
+                    slo_ttft_ms=r.slo_ttft_ms,
+                    slo_tpot_ms=r.slo_tpot_ms))
         return results
 
     def stats(self) -> dict:

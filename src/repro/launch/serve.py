@@ -150,15 +150,25 @@ def main(argv=None) -> int:
     else:
         server = deployment.build_server()
 
-    rng = np.random.default_rng(spec.seed)
-    arrival = 0.0
-    for i in range(wl.num_requests):
-        plen = int(rng.integers(wl.prompt_lo, wl.prompt_hi))
-        if wl.rate_per_s > 0:
-            arrival += float(rng.exponential(1.0 / wl.rate_per_s))
-        server.submit(ServeRequest(
-            i, rng.integers(0, deployment.vocab, plen).astype(np.int32),
-            wl.max_new, arrival_s=arrival))
+    fleet_reqs = None
+    if wl.trace is not None:
+        # fleet trace: class-aware arrivals with per-class SLOs attached
+        # to every request — the SAME stream build_simulation replays
+        from ..fleet.workload import fleet_serve_requests, generate_requests
+        fleet_reqs = generate_requests(wl.trace)
+        for req in fleet_serve_requests(fleet_reqs, deployment.vocab,
+                                        seed=spec.seed):
+            server.submit(req)
+    else:
+        rng = np.random.default_rng(spec.seed)
+        arrival = 0.0
+        for i in range(wl.num_requests):
+            plen = int(rng.integers(wl.prompt_lo, wl.prompt_hi))
+            if wl.rate_per_s > 0:
+                arrival += float(rng.exponential(1.0 / wl.rate_per_s))
+            server.submit(ServeRequest(
+                i, rng.integers(0, deployment.vocab, plen).astype(np.int32),
+                wl.max_new, arrival_s=arrival))
     try:
         results = server.run()
     finally:
@@ -185,6 +195,9 @@ def main(argv=None) -> int:
     }
     if not args.topology:
         summary["policy"] = args.policy
+    if fleet_reqs is not None:
+        from ..fleet.workload import serve_results_rows, slo_report
+        summary["slo"] = slo_report(serve_results_rows(results))
     if hasattr(server, "pair_summaries"):
         summary["pairs"] = server.pair_summaries()
     # one-pair backcompat: the flat link keys the pre-topology launcher
@@ -209,6 +222,9 @@ def main(argv=None) -> int:
                 (f"[{pid}: process acc={d.get('acceptance_rate', 0):.2f} "
                  f"n={d['requests']}]")
                 for pid, d in summary["pairs"].items())
+        slo_txt = ""
+        if "slo" in summary and summary["slo"]["graded"]:
+            slo_txt = f"  slo={summary['slo']['attainment']:.2f}"
         print(f"served {summary['requests']} requests  "
               f"server={summary['server']}  "
               f"pairs={summary['pairs_deployed']}  "
@@ -216,7 +232,8 @@ def main(argv=None) -> int:
               f"ttft={summary['mean_ttft_ms']:.1f}ms  "
               f"tpot={summary['mean_tpot_ms']:.1f}ms  "
               f"e2e={summary['mean_e2e_ms']:.0f}ms  "
-              f"programs={summary['compiled_step_programs']}" + per_pair)
+              f"programs={summary['compiled_step_programs']}"
+              + slo_txt + per_pair)
     return 0
 
 

@@ -4,5 +4,5 @@ wave-batched baseline)."""
 
 from .server import (PAIR_ROUTERS, LeastLoadedPairRouter, PairRouter,
                      RoundRobinPairRouter, ServeRequest, ServeResult,
-                     ServerConfig, ServingPair, SpecDecodeServer,
-                     WaveSpecDecodeServer)
+                     ServerConfig, ServingPair, SmartPairRouter,
+                     SpecDecodeServer, WaveSpecDecodeServer)

@@ -61,6 +61,9 @@ class ServeRequest:
     prompt: np.ndarray           # (S,) int32
     max_new_tokens: int
     arrival_s: float = 0.0       # relative to the serve-loop start
+    request_class: str = ""      # fleet traffic class ("" = unclassified)
+    slo_ttft_ms: float = 0.0     # per-request TTFT target (0 = no SLO)
+    slo_tpot_ms: float = 0.0     # per-request TPOT target (0 = no SLO)
 
 
 @dataclass
@@ -73,6 +76,10 @@ class ServeResult:
     acceptance_rate: float
     queue_ms: float = 0.0        # arrival → admission start
     pair_id: str = ""            # draft–target pair that served the request
+    request_class: str = ""      # carried from the request (SLO grading)
+    slo_ttft_ms: float = 0.0
+    slo_tpot_ms: float = 0.0
+    shed: bool = False           # SLO admission dropped it (no tokens)
 
 
 @dataclass
@@ -97,6 +104,10 @@ class ServingPair:
     transport: Optional[object] = None   # repro.distributed.Transport
     mode_policy: str = "auto"            # auto | distributed | fused | pipeline
     host: Optional[object] = None        # repro.distributed.host.PairHostHandle
+    session: Optional[DecodeSession] = None  # live session, set by run() so
+                                             # α/queue-aware routers can read
+                                             # acceptance counters + occupancy
+    draining: bool = False               # drained pairs admit nothing new
 
 
 @dataclass
@@ -119,6 +130,13 @@ class ServerConfig:
                                              # {"draft": n, "target": n};
                                              # None = dense-parity sizing
     kv_quantize: bool = False    # int8 per-entry KV quantization (paged)
+    slo_admission: str = "off"   # off | reroute | shed: when a pair's rolling
+                                 # p95 TTFT drifts past a request's class SLO,
+                                 # reroute it to a healthy pair (or shed it
+                                 # outright when none exists and mode=shed)
+    slo_min_samples: int = 8     # retirements per pair before SLO admission
+                                 # trusts that pair's rolling p95
+    slo_window: int = 256        # rolling-quantile window size per pair
 
 
 # -- pair routing ------------------------------------------------------------
@@ -166,6 +184,11 @@ PAIR_ROUTERS = {
     "least-loaded": LeastLoadedPairRouter,
     "round-robin": RoundRobinPairRouter,
 }
+
+# the α/link/queue-aware fleet router registers here too (late import:
+# repro.fleet.routing is dependency-free, so this cannot cycle)
+from ..fleet.routing import SmartPairRouter  # noqa: E402
+PAIR_ROUTERS["smart"] = SmartPairRouter
 
 
 class _ArrivalClock:
@@ -222,9 +245,32 @@ class SpecDecodeServer:
         self.results: list[ServeResult] = []
         self._sessions: list[DecodeSession] = []
         self._served = [0] * len(self.pairs)
+        from ..fleet.stats import RollingQuantile
+        self._ttft_q = [RollingQuantile(self.cfg.slo_window)
+                        for _ in self.pairs]
+        self._tpot_q = [RollingQuantile(self.cfg.slo_window)
+                        for _ in self.pairs]
+        self._shed = [0] * len(self.pairs)
 
     def submit(self, req: ServeRequest) -> None:
         self.queue.append(req)
+
+    # -- drain / re-admit ----------------------------------------------------
+
+    def drain(self, pair_id: str) -> None:
+        """Stop routing NEW requests to a pair; in-flight sequences finish
+        normally (routing is sticky, so nothing migrates off)."""
+        self._pair_by_id(pair_id).draining = True
+
+    def undrain(self, pair_id: str) -> None:
+        """Re-admit a drained pair into the routable set."""
+        self._pair_by_id(pair_id).draining = False
+
+    def _pair_by_id(self, pair_id: str) -> ServingPair:
+        for p in self.pairs:
+            if p.pair_id == pair_id:
+                return p
+        raise KeyError(f"no pair {pair_id!r} in this deployment")
 
     # -- admission (FIFO vs LAB, mirroring sim/policies.py) ------------------
 
@@ -285,6 +331,8 @@ class SpecDecodeServer:
         self.queue = []
         sessions = [self._make_session(p, pending) for p in self.pairs]
         self._sessions = sessions
+        for pair, sess in zip(self.pairs, sessions):
+            pair.session = sess     # routers read live acceptance/occupancy
         self._served = [0] * len(self.pairs)
         clock = _ArrivalClock()
         # request_id -> (request, admit_start_s, first_token_s, pair_idx)
@@ -293,13 +341,26 @@ class SpecDecodeServer:
         while pending or any(s.occupied for s in sessions):
             now = clock.now()
             arrived = [r for r in pending if r.arrival_s <= now]
+            if (arrived and all(p.draining for p in self.pairs)
+                    and not any(s.occupied for s in sessions)):
+                raise RuntimeError(
+                    "every pair is draining with requests still pending — "
+                    "undrain a pair to keep serving")
             while arrived:
-                frees = [len(s.free) for s in sessions]
+                # a draining pair advertises zero free slots: routers skip
+                # it, in-flight sequences keep decoding until retirement
+                frees = [0 if p.draining else len(s.free)
+                         for p, s in zip(self.pairs, sessions)]
                 if not any(frees):
                     break
                 idx = self.router.route(arrived[0], self.pairs, frees)
                 if frees[idx] <= 0:
                     break
+                routed = self._apply_slo_admission(arrived, pending, idx,
+                                                   frees, clock)
+                if routed is None:
+                    continue    # head shed; retry with the next head
+                idx = routed
                 admitted_any = False
                 for r in self._select_admissions(arrived, frees[idx]):
                     # block-aware admission: a paged session may have a free
@@ -336,17 +397,77 @@ class SpecDecodeServer:
                     end_s = clock.now()
                     n = len(tokens)
                     bits = rec.bits
+                    ttft = (first_tok_s - r.arrival_s) * 1e3
+                    tpot = (end_s - first_tok_s) * 1e3 / max(1, n - 1)
+                    self._ttft_q[idx].push(ttft)
+                    self._tpot_q[idx].push(tpot)
                     self.results.append(ServeResult(
                         request_id=r.request_id,
                         tokens=tokens,
-                        ttft_ms=(first_tok_s - r.arrival_s) * 1e3,
-                        tpot_ms=(end_s - first_tok_s) * 1e3 / max(1, n - 1),
+                        ttft_ms=ttft,
+                        tpot_ms=tpot,
                         e2e_ms=(end_s - r.arrival_s) * 1e3,
                         acceptance_rate=(sum(bits) / len(bits)) if bits
                         else 0.0,
                         queue_ms=(admit_s - r.arrival_s) * 1e3,
-                        pair_id=self.pairs[idx].pair_id))
+                        pair_id=self.pairs[idx].pair_id,
+                        request_class=r.request_class,
+                        slo_ttft_ms=r.slo_ttft_ms,
+                        slo_tpot_ms=r.slo_tpot_ms))
         return self.results
+
+    # -- SLO-aware admission -------------------------------------------------
+
+    def _slo_risky(self, idx: int, req: ServeRequest) -> bool:
+        """Pair idx's rolling p95 TTFT has drifted past the request's SLO
+        (only once enough retirements have been observed to trust it)."""
+        if req.slo_ttft_ms <= 0:
+            return False
+        q = self._ttft_q[idx]
+        return (len(q) >= self.cfg.slo_min_samples
+                and q.p95() > req.slo_ttft_ms)
+
+    def _apply_slo_admission(self, arrived: list[ServeRequest],
+                             pending: list[ServeRequest], idx: int,
+                             frees: Sequence[int],
+                             clock: _ArrivalClock) -> Optional[int]:
+        """SLO gate between routing and admission for the head-of-line
+        request. Returns the (possibly rerouted) pair index, or None when
+        the head was shed (mode=shed, no healthy pair). With
+        ``slo_admission='off'`` this is the identity on ``idx``."""
+        if self.cfg.slo_admission == "off":
+            return idx
+        head = arrived[0]
+        if not self._slo_risky(idx, head):
+            return idx
+        # healthiest alternative with a free slot: unmeasured pairs count
+        # as healthy (no evidence of drift), measured ones need p95 <= SLO
+        best, best_p95 = None, None
+        for i in range(len(self.pairs)):
+            if i == idx or frees[i] <= 0 or self._slo_risky(i, head):
+                continue
+            p95 = self._ttft_q[i].p95()
+            key = p95 if len(self._ttft_q[i]) else 0.0
+            if best_p95 is None or key < best_p95:
+                best, best_p95 = i, key
+        if best is not None:
+            return best
+        if self.cfg.slo_admission != "shed":
+            return idx      # reroute mode: nowhere better, admit anyway
+        end_s = clock.now()
+        self._shed[idx] += 1
+        pending.remove(head)
+        arrived.remove(head)
+        self.results.append(ServeResult(
+            request_id=head.request_id, tokens=np.zeros(0, np.int32),
+            ttft_ms=float("inf"), tpot_ms=0.0,
+            e2e_ms=(end_s - head.arrival_s) * 1e3, acceptance_rate=0.0,
+            queue_ms=(end_s - head.arrival_s) * 1e3,
+            pair_id=self.pairs[idx].pair_id,
+            request_class=head.request_class,
+            slo_ttft_ms=head.slo_ttft_ms, slo_tpot_ms=head.slo_tpot_ms,
+            shed=True))
+        return None
 
     def _run_process_backed(self) -> list[ServeResult]:
         """Drive process-backed pairs CONCURRENTLY: each pair's host
@@ -390,8 +511,11 @@ class SpecDecodeServer:
     def pair_summaries(self) -> dict[str, dict]:
         """Per-pair operating point after :meth:`run`, keyed by pair id:
         request/iteration counts, mean effective γ, fused fraction,
-        acceptance, pipeline hit counters, and — when the pair has a
-        transport — its link stats (bytes, messages, measured RTT)."""
+        acceptance, pipeline hit counters, rolling p50/p95 TTFT/TPOT over
+        the last ``slo_window`` retirements (the same windows SLO-aware
+        admission consults; NaN until a retirement lands), and — when the
+        pair has a transport — its link stats (bytes, messages, measured
+        RTT)."""
         out: dict[str, dict] = {}
         if self._process_backed:
             for pair, served in zip(self.pairs, self._served):
@@ -399,8 +523,9 @@ class SpecDecodeServer:
                 row["requests"] = served
                 out[pair.pair_id] = row
             return out
-        for pair, sess, served in zip(self.pairs, self._sessions,
-                                      self._served):
+        for i, (pair, sess, served) in enumerate(zip(self.pairs,
+                                                     self._sessions,
+                                                     self._served)):
             d = {
                 "requests": served,
                 "iterations": sess.iterations,
@@ -413,6 +538,11 @@ class SpecDecodeServer:
                 "pipeline_misses": sess.pipeline_misses,
                 "link_ms": round(sess.link_ms, 2),
                 "mode_policy": pair.mode_policy,
+                "ttft_p50_ms": round(self._ttft_q[i].p50(), 3),
+                "ttft_p95_ms": round(self._ttft_q[i].p95(), 3),
+                "tpot_p50_ms": round(self._tpot_q[i].p50(), 3),
+                "tpot_p95_ms": round(self._tpot_q[i].p95(), 3),
+                "shed": self._shed[i],
             }
             fb = sess.free_kv_blocks()
             if fb is not None:

@@ -39,6 +39,9 @@ class RequestMetrics:
     gamma_sequence: list[int] = field(default_factory=list)
     mode_sequence: list[str] = field(default_factory=list)
     queue_wait_ms: float = 0.0            # total time spent in target queues
+    request_class: str = ""               # fleet traffic class ("" = dataset)
+    slo_ttft_ms: float = 0.0              # per-request TTFT target (0 = none)
+    slo_tpot_ms: float = 0.0              # per-request TPOT target (0 = none)
 
     @property
     def ttft_ms(self) -> float:
@@ -176,6 +179,16 @@ class Analyzer:
         util = total_busy / (self.num_targets * span_ms) if span_ms > 0 else 0.0
         prop = sum(m.draft_tokens_proposed for m in done)
         acc = sum(m.draft_tokens_accepted for m in done)
+        # SLO attainment over requests that carry an SLO (graded with the
+        # same repro.fleet.workload.slo_report rule the real server's
+        # results are graded with, so attainment is comparable sim↔real);
+        # lazy import — fleet.workload has no sim dependency at module level
+        from ..fleet.workload import slo_report
+        slo = slo_report([
+            {"request_class": m.request_class or m.dataset,
+             "slo_ttft_ms": m.slo_ttft_ms, "slo_tpot_ms": m.slo_tpot_ms,
+             "ttft_ms": m.ttft_ms, "tpot_ms": m.tpot_ms}
+            for m in done])
         return {
             "completed": len(done),
             "throughput_rps": len(done) / (span_ms / 1e3),
@@ -190,6 +203,7 @@ class Analyzer:
             "e2e_ms": {"mean": sum(e2e) / len(e2e) if e2e else math.nan,
                        "p50": _percentile(e2e, 0.5)},
             "acceptance_rate": acc / max(1, prop),
+            "slo": slo,
             "target_utilization": util,
             "mean_batch_size":
                 sum(self.batch_sizes) / len(self.batch_sizes)

@@ -86,6 +86,34 @@ ROUTING: dict[str, Callable[..., Any]] = {
 
 
 # --------------------------------------------------------------------------
+# Pair routing (arrival-time lane assignment)
+# --------------------------------------------------------------------------
+
+@dataclass
+class SimPairView:
+    """Read-only per-PAIR snapshot for arrival-time lane assignment.
+
+    One entry per drafter lane (under :class:`PinnedRouting` drafter i IS
+    pair i, so this is the sim twin of the real server's
+    ``(pairs, free_slots)`` routing view): current queue depth (queued +
+    in-service), the lane's recent link RTT, and its rolling acceptance."""
+    queue_depths: list[int]
+    rtt_ms: list[float]
+    alpha: list[float]
+    max_batch: int = 16
+
+
+class PairRoutingPolicy(Protocol):
+    """Assigns an unpinned record (``drafter_id < 0``) to a drafter lane
+    when it ARRIVES — the analogue of the real server's ``PairRouter``
+    (sticky: the lane never changes afterwards). Distinct from
+    :class:`RoutingPolicy`, which picks a target server per verify job."""
+
+    def route_pair(self, record: Any, view: SimPairView) -> int: ...
+    def name(self) -> str: ...
+
+
+# --------------------------------------------------------------------------
 # Batching
 # --------------------------------------------------------------------------
 

@@ -30,7 +30,8 @@ from .network import (DEFAULT_FUSED_CHUNK, Link, LinkSpec,
                       verdict_payload_bytes, window_payload_bytes)
 from .hwmodel import HardwareModel, MODELS
 from .policies import (BatchingConfig, BatchingPolicy, FIFOBatching,
-                       RoutingPolicy, RandomRouting)
+                       PairRoutingPolicy, RoutingPolicy, RandomRouting,
+                       SimPairView)
 from .analyzer import Analyzer, RequestMetrics
 from .trace import AcceptanceCursor, TraceRecord
 from ..core.window import StaticWindowPolicy, WindowPolicy
@@ -104,6 +105,9 @@ class PolicyStack:
     batching: BatchingPolicy = field(default_factory=FIFOBatching)
     batching_cfg: BatchingConfig = field(default_factory=BatchingConfig)
     window: WindowPolicy = field(default_factory=StaticWindowPolicy)
+    # arrival-time lane assignment for unpinned records (drafter_id < 0);
+    # None = shallowest-queue (the real server's least-loaded default)
+    pair_routing: Optional[PairRoutingPolicy] = None
 
 
 @dataclass
@@ -172,6 +176,7 @@ class DSDSimulation:
         self.target_busy = [False] * cluster.num_targets
         self.drafter_queues: dict[int, Store] = {}
         self._drafter_started: set[int] = set()
+        self.drafter_active: dict[int, int] = {}   # in-service per lane
 
     # -- public API ----------------------------------------------------------
 
@@ -189,7 +194,13 @@ class DSDSimulation:
             delay = rec.arrival_time_ms - self.env.now
             if delay > 0:
                 yield self.env.timeout(delay)
-            did = rec.drafter_id % max(1, self.cluster.num_drafters)
+            if rec.drafter_id < 0:
+                # unpinned record: the pair router assigns the lane AT
+                # ARRIVAL (the sim twin of the real server's PairRouter —
+                # and, like it, sticky: the lane never changes afterwards)
+                did = self._route_pair(rec)
+            else:
+                did = rec.drafter_id % max(1, self.cluster.num_drafters)
             q = self.drafter_queues.get(did)
             if q is None:
                 q = self.drafter_queues[did] = Store(self.env)
@@ -198,13 +209,51 @@ class DSDSimulation:
                 self._drafter_started.add(did)
                 self.env.process(self._drafter_proc(did))
 
+    # -- arrival-time pair routing -------------------------------------------
+
+    def _pinned_target(self, did: int) -> int:
+        pinned = getattr(self.policies.routing, "target_of_drafter", None)
+        if pinned:
+            return pinned[did % len(pinned)]
+        return did % max(1, self.cluster.num_targets)
+
+    def _pair_view(self) -> SimPairView:
+        nd = max(1, self.cluster.num_drafters)
+        depths, rtts, alphas = [], [], []
+        for d in range(nd):
+            q = self.drafter_queues.get(d)
+            depths.append((len(q) if q is not None else 0)
+                          + self.drafter_active.get(d, 0))
+            if self.drafter_links is not None:
+                link = self.drafter_links[d % len(self.drafter_links)]
+            else:
+                link = self.links[self._pinned_target(d)]
+            rtts.append(link.recent_rtt_ms)
+            win = self.analyzer.alpha_recent.get(
+                f"{d}->{self._pinned_target(d)}")
+            alphas.append(win.mean() if win else 0.7)
+        return SimPairView(queue_depths=depths, rtt_ms=rtts, alpha=alphas,
+                           max_batch=self.policies.batching_cfg.max_batch)
+
+    def _route_pair(self, rec: TraceRecord) -> int:
+        view = self._pair_view()
+        router = self.policies.pair_routing
+        if router is None:      # least-loaded default, ties to lowest lane
+            return min(range(len(view.queue_depths)),
+                       key=lambda i: (view.queue_depths[i], i))
+        did = router.route_pair(rec, view)
+        return did % max(1, self.cluster.num_drafters)
+
     # -- edge drafter ------------------------------------------------------------
 
     def _drafter_proc(self, drafter_id: int):
         q = self.drafter_queues[drafter_id]
         while True:
             rec = yield q.get()
+            self.drafter_active[drafter_id] = \
+                self.drafter_active.get(drafter_id, 0) + 1
             yield self.env.process(self._serve_request(rec, drafter_id))
+            self.drafter_active[drafter_id] -= 1
 
     def _queue_depths(self) -> list[int]:
         return [len(q) + (1 if self.target_busy[i] else 0)
@@ -225,8 +274,10 @@ class DSDSimulation:
         m = RequestMetrics(
             request_id=rec.request_id, dataset=rec.dataset,
             drafter_id=drafter_id, target_id=target_id,
-            arrival_ms=env.now, prompt_length=rec.prompt_length,
-            output_length=rec.output_length)
+            arrival_ms=rec.arrival_time_ms, prompt_length=rec.prompt_length,
+            output_length=rec.output_length,
+            request_class=rec.request_class or rec.dataset,
+            slo_ttft_ms=rec.slo_ttft_ms, slo_tpot_ms=rec.slo_tpot_ms)
         self.analyzer.open_request(m)
 
         cursor = AcceptanceCursor(_quality_adjusted(

@@ -33,8 +33,12 @@ class TraceRecord:
     output_length: int
     acceptance_seq: list[int]
     arrival_time_ms: float
-    drafter_id: int
+    drafter_id: int              # < 0: unpinned — the scheduler's pair
+                                 # router assigns the lane at arrival time
     dataset: str = "synthetic"
+    request_class: str = ""      # fleet traffic class ("" = dataset name)
+    slo_ttft_ms: float = 0.0     # per-request TTFT target (0 = no SLO)
+    slo_tpot_ms: float = 0.0     # per-request TPOT target (0 = no SLO)
 
     def to_json(self) -> str:
         return json.dumps(asdict(self))

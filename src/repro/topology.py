@@ -41,6 +41,7 @@ from dataclasses import dataclass, field
 from typing import Any, Optional
 
 from .sim.network import LinkSpec
+from .fleet.workload import TraceSpec, WorkloadError
 
 MODE_POLICIES = ("auto", "distributed", "fused", "pipeline")
 WINDOW_KINDS = ("static", "dynamic", "awc")
@@ -133,7 +134,14 @@ class ServingSpec:
 class WorkloadSpec:
     """Request stream description (drives ``launch.serve`` defaults and
     :func:`build_simulation`'s generated records when no captured traces
-    are supplied)."""
+    are supplied).
+
+    ``trace`` upgrades the stream to a fleet
+    :class:`~repro.fleet.workload.TraceSpec` — request classes with
+    per-class length distributions and TTFT/TPOT SLOs, diurnal/burst/replay
+    load shapes — and supersedes the flat ``num_requests``/``rate_per_s``/
+    ``prompt_lo``/``prompt_hi`` surface when present (``max_new`` still
+    caps nothing: per-class output distributions decide lengths)."""
     dataset: str = "gsm8k"
     num_requests: int = 8
     max_new: int = 32
@@ -142,6 +150,7 @@ class WorkloadSpec:
     prompt_hi: int = 48          # drawn from [prompt_lo, prompt_hi) —
                                  # EXCLUSIVE upper bound (numpy integers
                                  # semantics, the legacy launcher's rule)
+    trace: Optional["TraceSpec"] = None   # fleet trace (classes+SLOs+shape)
 
 
 @dataclass
@@ -272,6 +281,11 @@ class ClusterSpec:
         if not (1 <= w.prompt_lo < w.prompt_hi):
             raise TopologyError("workload: need 1 <= prompt_lo < prompt_hi "
                                 "(prompt_hi is exclusive)")
+        if w.trace is not None:
+            try:
+                w.trace.validate()
+            except WorkloadError as e:
+                raise TopologyError(f"workload.trace: {e}") from e
         return self
 
     # -- JSON round trip -----------------------------------------------------
@@ -307,7 +321,14 @@ class ClusterSpec:
                 pair.window = build(WindowSpec, window)
             pairs.append(pair)
         serving = build(ServingSpec, d.get("serving", {}))
-        workload = build(WorkloadSpec, d.get("workload", {}))
+        w = dict(d.get("workload", {}))
+        trace = w.pop("trace", None)
+        workload = build(WorkloadSpec, w)
+        if trace is not None:
+            try:
+                workload.trace = TraceSpec.from_dict(trace)
+            except WorkloadError as e:
+                raise TopologyError(f"workload.trace: {e}") from e
         return cls(nodes=nodes, pairs=pairs, serving=serving,
                    workload=workload, seed=int(d.get("seed", 0)))
 
@@ -556,7 +577,7 @@ class PairDispatchWindowPolicy:
 
 def build_simulation(spec: ClusterSpec, records: Optional[list] = None, *,
                      hwmodel=None, pipeline: Optional[bool] = None,
-                     predictor=None):
+                     predictor=None, pair_router=None):
     """A :class:`~repro.sim.DSDSimulation` matching the spec's topology.
 
     Mapping: sim drafter i ⇔ ``spec.pairs[i]`` (its link becomes drafter
@@ -566,8 +587,15 @@ def build_simulation(spec: ClusterSpec, records: Optional[list] = None, *,
     pair i's declared link — the same lanes the real deployment runs.
 
     ``records`` replays captured acceptance traces (``TraceRecord`` with
-    ``drafter_id`` = pair index); when ``None``, the spec's
-    :class:`WorkloadSpec` generates a synthetic stream. ``pipeline``
+    ``drafter_id`` = pair index, or < 0 for "assign at arrival"); when
+    ``None``, the spec's :class:`WorkloadSpec` generates a synthetic
+    stream — from its fleet ``trace`` (class-aware arrivals with SLOs,
+    every record unpinned so the pair router assigns lanes) when one is
+    declared, else the flat legacy surface. ``pair_router`` is the
+    arrival-time lane policy for unpinned records: an instance, a
+    ``repro.fleet.routing.SIM_PAIR_ROUTERS`` key, or None for the
+    spec's ``serving.router`` when that name has a sim analogue
+    (least-loaded/smart; shallowest-queue otherwise). ``pipeline``
     defaults to True iff every pair declares ``mode_policy="pipeline"``
     (the sim's overlap model is simulation-global). Pairs forced
     ``fused`` simulate under an always-fused oracle policy; pairs forced
@@ -617,13 +645,26 @@ def build_simulation(spec: ClusterSpec, records: Optional[list] = None, *,
         target_pool=target_pool,
         draft_pool=draft_pool,
         drafter_link_pool=drafter_links)
+    if pair_router is None and s.router in ("least-loaded", "smart"):
+        pair_router = s.router
+    if isinstance(pair_router, str):
+        from .fleet.routing import SIM_PAIR_ROUTERS
+        pair_router = SIM_PAIR_ROUTERS[pair_router]()
     policies = PolicyStack(
         routing=PinnedRouting(pinned),
         batching=(LengthAwareBatching() if s.length_aware
                   else FIFOBatching()),
         batching_cfg=BatchingConfig(max_batch=s.max_batch, continuous=True),
-        window=window)
-    if records is None:
+        window=window,
+        pair_routing=pair_router)
+    if records is None and spec.workload.trace is not None:
+        # fleet trace: class-aware arrivals with SLOs; unpinned records
+        # (drafter_id = -1) let the pair router assign lanes at arrival —
+        # the sim twin of the real server's PairRouter admission
+        from .fleet.workload import fleet_trace_records, generate_requests
+        records = fleet_trace_records(generate_requests(spec.workload.trace),
+                                      seed=spec.seed)
+    elif records is None:
         # rate 0 means "all at t=0" on the real path; the generator needs
         # a positive rate, so approximate with effectively-simultaneous
         # arrivals

@@ -1,0 +1,487 @@
+"""Fleet workload subsystem: TraceSpec validation + seeded determinism,
+rolling quantile windows, α/link-aware pair costing, router churn
+(sticky/drain/ties), SLO-aware admission, sim pair routing, and the
+elastic pair pool's control law."""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.fleet import (ElasticPairPool, RequestClass, RollingQuantile,
+                         SmartPairRouter, TraceSpec, WorkloadError,
+                         fleet_serve_requests, fleet_trace_records,
+                         generate_requests, pair_cost, slo_report)
+from repro.configs.base import ModelConfig
+from repro.serving import (LeastLoadedPairRouter, ServeRequest, ServeResult,
+                           ServingPair, SpecDecodeServer)
+from repro.sim.network import LinkSpec
+from repro.topology import (ClusterSpec, NodeSpec, PairSpec, ServingSpec,
+                            TopologyError, WindowSpec, WorkloadSpec,
+                            build_deployment, build_simulation)
+
+TINY_T = ModelConfig(name="fleet-t", arch_type="dense", n_layers=2,
+                     d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                     vocab=128, dtype="float32", remat=False)
+TINY_D = dataclasses.replace(TINY_T, name="fleet-d", n_layers=1)
+TINY = {"fleet-t": TINY_T, "fleet-d": TINY_D}
+
+
+def two_pair_spec(rtt_fast=0.0, rtt_slow=40.0, max_batch=2,
+                  router="least-loaded") -> ClusterSpec:
+    return ClusterSpec(
+        nodes=[NodeSpec("e0", "draft", "fleet-d"),
+               NodeSpec("e1", "draft", "fleet-d"),
+               NodeSpec("c0", "target", "fleet-t")],
+        pairs=[PairSpec("fast", "e0", "c0",
+                        link=LinkSpec(rtt_ms=rtt_fast, jitter_ms=0.0),
+                        window=WindowSpec("static", 3)),
+               PairSpec("slow", "e1", "c0",
+                        link=LinkSpec(rtt_ms=rtt_slow, jitter_ms=0.0),
+                        window=WindowSpec("static", 3))],
+        serving=ServingSpec(max_batch=max_batch, gamma_max=6, sync_every=4,
+                            router=router),
+        workload=WorkloadSpec(num_requests=4, max_new=8))
+
+
+def tiny_trace(**kw) -> TraceSpec:
+    kw.setdefault("num_requests", 10)
+    kw.setdefault("rate_per_s", 200.0)
+    return TraceSpec(**kw)
+
+
+# ------------------------------------------------------ TraceSpec validation
+
+@pytest.mark.parametrize("mutate, match", [
+    (lambda t: setattr(t, "rate_per_s", -1.0), "rate_per_s"),
+    (lambda t: setattr(t, "rate_per_s", 0.0), "rate_per_s"),
+    (lambda t: setattr(t, "num_requests", -1), "num_requests"),
+    (lambda t: setattr(t, "shape", "weekly"), "shape"),
+    (lambda t: setattr(t, "classes", []), "at least one"),
+    (lambda t: setattr(t, "diurnal_amplitude", 1.5), "amplitude"),
+    (lambda t: setattr(t.classes[0], "prompt_mean", -3.0), "negative"),
+    (lambda t: setattr(t.classes[0], "output_mean", 0.0), "> 0"),
+    (lambda t: setattr(t.classes[0], "prompt_min", 0), "prompt_min"),
+    (lambda t: setattr(t.classes[0], "prompt_max", 1), "prompt_min"),
+    (lambda t: setattr(t.classes[0], "slo_ttft_ms", -1.0), "SLO"),
+    (lambda t: setattr(t.classes[0], "alpha", 1.5), "alpha"),
+    (lambda t: setattr(t.classes[0], "weight", -0.1), "weight"),
+    (lambda t: setattr(t.classes[1], "name", t.classes[0].name), "duplicate"),
+])
+def test_trace_validation_rejects(mutate, match):
+    t = tiny_trace()
+    if "diurnal" in match or "amplitude" in match:
+        t.shape = "diurnal"
+    mutate(t)
+    with pytest.raises(WorkloadError, match=match):
+        t.validate()
+
+
+def test_trace_validation_replay():
+    t = tiny_trace(shape="replay")
+    with pytest.raises(WorkloadError, match="replay_arrivals_s"):
+        t.validate()
+    t.replay_arrivals_s = [0.0, 0.5, 0.2]
+    with pytest.raises(WorkloadError, match="nondecreasing"):
+        t.validate()
+    t.replay_arrivals_s = [0.0, 0.2, 0.5]
+    t.replay_classes = ["chat", "nope", "chat"]
+    with pytest.raises(WorkloadError, match="not declared"):
+        t.validate()
+    t.replay_classes = ["chat", "chat"]
+    with pytest.raises(WorkloadError, match="length"):
+        t.validate()
+    t.replay_classes = []
+    t.validate()
+    reqs = generate_requests(t)
+    assert [r.arrival_s for r in reqs[:3]] == [0.0, 0.2, 0.5]
+
+
+def test_trace_unknown_fields_rejected():
+    with pytest.raises(WorkloadError, match="unknown field"):
+        TraceSpec.from_dict({"burst_hz": 3})
+    with pytest.raises(WorkloadError, match="unknown field"):
+        TraceSpec.from_dict({"classes": [{"name": "x", "color": "red"}]})
+
+
+def test_cluster_spec_trace_round_trip_and_validation():
+    spec = two_pair_spec()
+    spec.workload.trace = tiny_trace(shape="burst", burst_every_s=1.0,
+                                     burst_len_s=0.2, burst_multiplier=3.0)
+    again = ClusterSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.workload.trace.shape == "burst"
+    spec.workload.trace.rate_per_s = -2.0
+    with pytest.raises(TopologyError, match="workload.trace"):
+        spec.validate()
+
+
+# ------------------------------------------------------- seeded determinism
+
+def test_identical_specs_replay_identical_streams():
+    t = tiny_trace(shape="diurnal", diurnal_period_s=5.0, seed=7)
+    a = generate_requests(t)
+    b = generate_requests(TraceSpec.from_json(t.to_json()))
+    assert [dataclasses.astuple(r) for r in a] == \
+           [dataclasses.astuple(r) for r in b]
+    c = generate_requests(dataclasses.replace(t, seed=8))
+    assert [dataclasses.astuple(r) for r in a] != \
+           [dataclasses.astuple(r) for r in c]
+    # arrivals are nondecreasing and class-sampled from declared names
+    names = {cl.name for cl in t.classes}
+    assert all(x.arrival_s <= y.arrival_s for x, y in zip(a, a[1:]))
+    assert all(r.request_class in names for r in a)
+
+
+def test_sim_and_real_adapters_share_one_stream():
+    reqs = generate_requests(tiny_trace(seed=3))
+    serve = fleet_serve_requests(reqs, vocab=128, seed=3)
+    recs = fleet_trace_records(reqs, seed=3)
+    assert len(serve) == len(recs) == len(reqs)
+    for r, s, rec in zip(reqs, serve, recs):
+        assert s.request_id == rec.request_id == r.request_id
+        assert len(s.prompt) == rec.prompt_length == r.prompt_len
+        assert s.max_new_tokens == rec.output_length == r.output_len
+        assert s.arrival_s * 1e3 == pytest.approx(rec.arrival_time_ms)
+        assert s.slo_ttft_ms == rec.slo_ttft_ms == r.slo_ttft_ms
+        assert rec.drafter_id < 0       # unpinned: routed at arrival
+    # adapters are themselves deterministic
+    serve2 = fleet_serve_requests(reqs, vocab=128, seed=3)
+    assert all(np.array_equal(x.prompt, y.prompt)
+               for x, y in zip(serve, serve2))
+    recs2 = fleet_trace_records(reqs, seed=3)
+    assert [r.acceptance_seq for r in recs] == \
+           [r.acceptance_seq for r in recs2]
+
+
+# ---------------------------------------------------------- rolling quantile
+
+def test_rolling_quantile_matches_numpy_and_evicts():
+    q = RollingQuantile(size=64)
+    assert math.isnan(q.p50()) and len(q) == 0
+    rng = np.random.default_rng(0)
+    vals = rng.uniform(0, 100, 200)
+    for v in vals:
+        q.push(v)
+    assert len(q) == 64
+    window = vals[-64:]
+    assert q.p50() == pytest.approx(np.percentile(window, 50))
+    assert q.p95() == pytest.approx(np.percentile(window, 95))
+    assert q.mean() == pytest.approx(window.mean())
+    q.push(float("nan"))        # non-finite samples are ignored
+    assert len(q) == 64
+
+
+# ------------------------------------------------------------- pair costing
+
+def test_pair_cost_orders_sanely():
+    # closer link, better acceptance, emptier queue → cheaper
+    assert pair_cost(2.0, 0.8, 0.0) < pair_cost(150.0, 0.8, 0.0)
+    assert pair_cost(10.0, 0.9, 0.0) < pair_cost(10.0, 0.3, 0.0)
+    assert pair_cost(10.0, 0.8, 0.0) < pair_cost(10.0, 0.8, 0.9)
+    # long-context amplifies the link term only
+    lan = pair_cost(2.0, 0.8, 0.0, long_context=True) \
+        / pair_cost(2.0, 0.8, 0.0)
+    wan = pair_cost(150.0, 0.8, 0.0, long_context=True) \
+        / pair_cost(150.0, 0.8, 0.0)
+    assert wan > lan
+
+
+class _FakeTransport:
+    def __init__(self, rtt):
+        self.recent_rtt_ms = rtt
+
+
+class _FakeSession:
+    def __init__(self, capacity=4, accepted=0, proposed=0):
+        self.capacity = capacity
+        self.accepted = accepted
+        self.proposed = proposed
+
+
+def _fake_pair(pid, rtt, capacity=4, accepted=0, proposed=0):
+    return ServingPair(pair_id=pid, engine=None, policy=None,
+                       transport=_FakeTransport(rtt),
+                       session=_FakeSession(capacity, accepted, proposed))
+
+
+def test_smart_router_prefers_lan_and_respects_capacity():
+    router = SmartPairRouter(long_prompt_tokens=64)
+    pairs = [_fake_pair("lan", 2.0), _fake_pair("wan", 150.0)]
+    chat = ServeRequest(0, np.zeros(8, np.int32), 8)
+    long_ctx = ServeRequest(1, np.zeros(128, np.int32), 8)
+    assert router.route(chat, pairs, [4, 4]) == 0
+    assert router.route(long_ctx, pairs, [4, 4]) == 0
+    # LAN full → chat spills to WAN
+    assert router.route(chat, pairs, [0, 4]) == 1
+    # α-aware: a WAN pair with far better acceptance can win a long queue
+    good_wan = [_fake_pair("lan", 30.0, accepted=5, proposed=100),
+                _fake_pair("wan", 30.0, accepted=95, proposed=100)]
+    assert router.route(chat, good_wan, [4, 4]) == 1
+
+
+def test_least_loaded_ties_break_deterministically():
+    router = LeastLoadedPairRouter()
+    pairs = [_fake_pair("a", 0.0), _fake_pair("b", 0.0)]
+    req = ServeRequest(0, np.zeros(4, np.int32), 4)
+    for _ in range(5):
+        assert router.route(req, pairs, [2, 2]) == 0
+    assert router.route(req, pairs, [1, 2]) == 1
+
+
+# ------------------------------------------------- router churn (real server)
+
+def _serve(spec, reqs):
+    dep = build_deployment(spec, model_configs=TINY, sleep_links=False)
+    server = dep.build_server()
+    for r in reqs:
+        server.submit(r)
+    return server, server.run()
+
+
+def _requests(n, vocab=128, plen=8, max_new=4):
+    rng = np.random.default_rng(0)
+    return [ServeRequest(i, rng.integers(0, vocab, plen).astype(np.int32),
+                         max_new) for i in range(n)]
+
+
+def test_sticky_routing_survives_retirement_and_readmission():
+    # 6 requests through 2 pairs × 1 slot: every slot retires and
+    # re-admits; each request finishes wholly on the pair that admitted it
+    spec = two_pair_spec(max_batch=1)
+    server, results = _serve(spec, _requests(6))
+    assert sorted(r.request_id for r in results) == list(range(6))
+    by_pair = server.pair_summaries()
+    assert by_pair["fast"]["requests"] + by_pair["slow"]["requests"] == 6
+    assert by_pair["fast"]["requests"] >= 1     # re-admission exercised
+    for r in results:
+        assert r.pair_id in ("fast", "slow")
+
+
+def test_drained_pair_receives_no_new_requests():
+    spec = two_pair_spec()
+    dep = build_deployment(spec, model_configs=TINY, sleep_links=False)
+    server = dep.build_server()
+    server.drain("slow")
+    for r in _requests(4):
+        server.submit(r)
+    results = server.run()
+    assert len(results) == 4
+    assert all(r.pair_id == "fast" for r in results)
+    assert server.pair_summaries()["slow"]["requests"] == 0
+    # re-admission: undrained pair serves again on the next run
+    server.undrain("slow")
+    server2 = dep.build_server()
+    for r in _requests(6):
+        server2.submit(r)
+    results2 = server2.run()
+    assert {r.pair_id for r in results2} == {"fast", "slow"}
+
+
+def test_all_pairs_draining_raises():
+    spec = two_pair_spec()
+    dep = build_deployment(spec, model_configs=TINY, sleep_links=False)
+    server = dep.build_server()
+    server.drain("fast")
+    server.drain("slow")
+    server.submit(_requests(1)[0])
+    with pytest.raises(RuntimeError, match="draining"):
+        server.run()
+
+
+def test_pair_summaries_report_rolling_percentiles():
+    spec = two_pair_spec()
+    server, results = _serve(spec, _requests(4))
+    for row in server.pair_summaries().values():
+        for k in ("ttft_p50_ms", "ttft_p95_ms", "tpot_p50_ms",
+                  "tpot_p95_ms", "shed"):
+            assert k in row
+        if row["requests"]:
+            assert row["ttft_p50_ms"] <= row["ttft_p95_ms"]
+            assert row["ttft_p95_ms"] > 0
+
+
+# ------------------------------------------------------- SLO-aware admission
+
+def _slo_server(mode):
+    spec = two_pair_spec()
+    dep = build_deployment(spec, model_configs=TINY, sleep_links=False)
+    server = dep.build_server()
+    server.cfg.slo_admission = mode
+    server.cfg.slo_min_samples = 2
+    return server
+
+
+class _Clock:
+    def now(self):
+        return 1.0
+
+
+def test_slo_admission_reroutes_off_drifting_pair():
+    server = _slo_server("reroute")
+    for _ in range(4):
+        server._ttft_q[0].push(500.0)    # pair fast: p95 ≈ 500ms, drifted
+        server._ttft_q[1].push(10.0)     # pair slow: healthy
+    req = ServeRequest(0, np.zeros(8, np.int32), 4, slo_ttft_ms=100.0)
+    arrived, pending = [req], [req]
+    assert server._apply_slo_admission(arrived, pending, 0, [2, 2],
+                                       _Clock()) == 1
+    # no SLO on the request → gate is the identity
+    free = ServeRequest(1, np.zeros(8, np.int32), 4)
+    arrived, pending = [free], [free]
+    assert server._apply_slo_admission(arrived, pending, 0, [2, 2],
+                                       _Clock()) == 0
+
+
+def test_slo_admission_sheds_when_no_pair_is_healthy():
+    server = _slo_server("shed")
+    for _ in range(4):
+        server._ttft_q[0].push(500.0)
+        server._ttft_q[1].push(800.0)
+    req = ServeRequest(7, np.zeros(8, np.int32), 4, request_class="chat",
+                       slo_ttft_ms=100.0)
+    arrived, pending = [req], [req]
+    assert server._apply_slo_admission(arrived, pending, 0, [2, 2],
+                                       _Clock()) is None
+    assert arrived == [] and pending == []
+    assert len(server.results) == 1 and server.results[0].shed
+    assert server.results[0].request_class == "chat"
+    # reroute mode admits anyway instead of shedding
+    server2 = _slo_server("reroute")
+    for _ in range(4):
+        server2._ttft_q[0].push(500.0)
+        server2._ttft_q[1].push(800.0)
+    req2 = ServeRequest(8, np.zeros(8, np.int32), 4, slo_ttft_ms=100.0)
+    arrived, pending = [req2], [req2]
+    assert server2._apply_slo_admission(arrived, pending, 0, [2, 2],
+                                        _Clock()) == 0
+    assert pending == [req2]
+
+
+def test_slo_report_grades_only_slo_carrying_requests():
+    rows = [
+        {"request_class": "chat", "slo_ttft_ms": 100.0, "slo_tpot_ms": 0.0,
+         "ttft_ms": 50.0, "tpot_ms": 5.0},
+        {"request_class": "chat", "slo_ttft_ms": 100.0, "slo_tpot_ms": 0.0,
+         "ttft_ms": 150.0, "tpot_ms": 5.0},
+        {"request_class": "batch", "slo_ttft_ms": 0.0, "slo_tpot_ms": 0.0,
+         "ttft_ms": 9999.0, "tpot_ms": 999.0},
+        {"request_class": "chat", "slo_ttft_ms": 100.0, "slo_tpot_ms": 0.0,
+         "ttft_ms": 10.0, "tpot_ms": 1.0, "shed": True},
+    ]
+    rep = slo_report(rows)
+    assert rep["graded"] == 3           # batch-offline excluded
+    assert rep["attained"] == 1         # one miss, one shed
+    assert rep["attainment"] == pytest.approx(1 / 3)
+    assert rep["per_class"]["chat"]["shed"] == 1
+    assert rep["per_class"]["batch"]["graded"] == 0
+
+
+# ------------------------------------------------------------ sim pair routing
+
+def test_sim_pair_router_orders_lanes_like_the_cost_model():
+    spec = two_pair_spec(rtt_fast=2.0, rtt_slow=150.0)
+    spec.workload.trace = tiny_trace(num_requests=12, rate_per_s=100.0)
+
+    def lane_counts(router):
+        sim = build_simulation(spec, pair_router=router)
+        an = sim.run()
+        counts = [0, 0]
+        for m in an.requests.values():
+            counts[m.drafter_id] += 1
+        return counts, an.summary()
+
+    smart, smart_summ = lane_counts("smart")
+    ll, ll_summ = lane_counts("least-loaded")
+    assert sum(smart) == sum(ll) == 12
+    # the cost model concentrates load on the cheap LAN lane; least-loaded
+    # balances lanes blindly
+    assert smart[0] > ll[0]
+    # both summaries carry comparable SLO attainment blocks
+    for summ in (smart_summ, ll_summ):
+        assert 0.0 <= summ["slo"]["attainment"] <= 1.0
+        assert summ["slo"]["graded"] > 0
+        assert "per_class" in summ["slo"]
+
+
+def test_sim_records_carry_class_and_slo():
+    spec = two_pair_spec()
+    spec.workload.trace = tiny_trace(num_requests=6, rate_per_s=100.0)
+    sim = build_simulation(spec)
+    an = sim.run()
+    classes = {m.request_class for m in an.requests.values()}
+    assert classes <= {"chat", "long-context", "batch-offline"}
+    assert any(m.slo_ttft_ms > 0 for m in an.requests.values())
+
+
+# ------------------------------------------------------------- elastic pool
+
+class _FakeHandle:
+    def __init__(self, pair_id, log):
+        self.pair_id = pair_id
+        self.capacity = 2
+        self.log = log
+        self.alive = True
+
+    def serve(self, reqs):
+        import time
+        assert self.alive, "drained/reaped pair must receive no new waves"
+        self.log.append((self.pair_id, [r.request_id for r in reqs]))
+        time.sleep(0.02)
+        return [ServeResult(request_id=r.request_id,
+                            tokens=np.zeros(1, np.int32), ttft_ms=1.0,
+                            tpot_ms=1.0, e2e_ms=2.0, acceptance_rate=0.5,
+                            pair_id=self.pair_id) for r in reqs]
+
+    def shutdown(self):
+        self.alive = False
+
+
+def _elastic_pool(**kw):
+    spec = two_pair_spec()
+    spec.pairs[0].process = False   # template cloning only needs the spec
+    log = []
+    pool = ElasticPairPool(spec, "fast",
+                           spawn_fn=lambda p: _FakeHandle(p.id, log),
+                           tick_s=0.005, **kw)
+    return pool, log
+
+
+def test_elastic_scales_up_under_backlog_and_serves_everything():
+    pool, log = _elastic_pool(min_pairs=1, max_pairs=3, scale_up_depth=0.5)
+    reqs = _requests(10)
+    results = pool.run(reqs)
+    assert sorted(r.request_id for r in results) == list(range(10))
+    summ = pool.summary()
+    assert 2 <= summ["pairs_spawned"] <= 3          # backlog forced growth
+    assert summ["max_concurrent_pairs"] <= 3        # bound respected
+    assert sum(len(ids) for _, ids in log) == 10
+    pool.shutdown()
+
+
+def test_elastic_control_law_reaps_idle_pairs():
+    pool, _ = _elastic_pool(min_pairs=1, max_pairs=4,
+                            scale_up_depth=0.5, scale_down_depth=0.5)
+    pool.scale_up()
+    pool.scale_up()
+    pool.scale_up()
+    assert pool.summary()["pairs_spawned"] == 3
+    assert pool.evaluate_scaling(backlog=0) == "down"
+    kinds = [k for _, k, _ in pool.events]
+    assert kinds.count("reap") == 1
+    # draining pair is excluded from the active set; floor is respected
+    assert pool.evaluate_scaling(backlog=0) == "down"
+    assert pool.evaluate_scaling(backlog=0) is None     # at min_pairs
+    # heavy backlog on the remaining pair scales back up
+    assert pool.evaluate_scaling(backlog=50) == "up"
+    pool.shutdown()
+
+
+def test_elastic_spawned_pairs_get_fresh_ids():
+    pool, _ = _elastic_pool()
+    a = pool.scale_up()
+    b = pool.scale_up()
+    assert a != b and a.startswith("fast-e") and b.startswith("fast-e")
+    assert set(pool.handles) == {a, b}
+    pool.shutdown()
